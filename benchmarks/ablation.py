@@ -1,0 +1,36 @@
+"""Fig. 7 — ablation study: remove each component, measure QPS at recall 0.9.
+
+Variants: full BoomHQ, w.o. DE (data encoder), w.o. QE (all query features),
+w.o. QE-Stats, w.o. QE-GSE, w.o. QE-LNP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+VARIANTS = {
+    "BoomHQ": {},
+    "w.o. DE": {"use_de": False},
+    "w.o. QE": {"use_stats": False, "use_gse": False, "use_lnp": False},
+    "w.o. QE-Stats": {"use_stats": False},
+    "w.o. QE-GSE": {"use_gse": False},
+    "w.o. QE-LNP": {"use_lnp": False},
+}
+
+
+def run(sizes=common.FAST, dataset: str = "part", seed: int = 0,
+        thr: float = 0.9, n_vec_used: int = 2) -> dict:
+    out = {"figure": "fig7_ablation", "dataset": dataset, "rows": []}
+    for name, overrides in VARIANTS.items():
+        suite = common.build_suite(dataset, n_vec_used=n_vec_used, seed=seed,
+                                   sizes=sizes, boomhq_overrides=overrides)
+        res = common.eval_boomhq(suite, thr, repeats=sizes["repeats"])
+        out["rows"].append({"variant": name, "qps": round(res["qps"], 1),
+                            "recall": round(res["recall"], 3)})
+        print(f"  fig7 {name:14s} qps={res['qps']:8.1f} recall={res['recall']:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+"""Table 1 — the 11-dataset benchmark overview."""
+from __future__ import annotations
+
+from repro.bench.datasets import SPECS, table_row
+
+
+def run(**_) -> dict:
+    rows = [table_row(n) for n in SPECS]
+    print(f"  {'Benchmark':<12}{'Type':<8}{'#Rows':>12}  #Dimension")
+    for r in rows:
+        print(f"  {r['Benchmark']:<12}{r['Type']:<8}{r['Rows']:>12,}  "
+              f"{r['Dimension']}")
+    return {"figure": "table1_datasets", "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmark: fused masked_topk / int8_scan vs the jnp oracle.
+
+On this CPU container the Pallas kernels execute in interpret mode, so the
+meaningful numbers are (a) correctness parity with the oracle and (b) the
+HBM-byte model: the int8 scan reads 4× fewer DB bytes per query — the
+memory-roofline win on the full-scan path (EXPERIMENTS.md §Perf boomhq row).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    scal = jnp.asarray(rng.uniform(0, 10, (n, m)), jnp.float32)
+    lo = jnp.asarray([3.0] + [-np.inf] * (m - 1), jnp.float32)
+    hi = jnp.asarray([7.0] + [np.inf] * (m - 1), jnp.float32)
+    act = jnp.asarray([True] + [False] * (m - 1))
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+    s_k, i_k = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k)
+    s_r, i_r = ref.masked_topk_ref(q, vecs, scal, lo, hi, act, n, k=k)
+    parity = bool(np.allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4))
+
+    qv, sc = ops.quantize_rows(vecs)
+    s_q, i_q = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k)
+    rec = len(set(map(int, np.asarray(i_q))) & set(map(int, np.asarray(i_r)))) / k
+
+    def t(f, reps=3):
+        f()
+        jax.block_until_ready(f())
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(f())
+        return (time.perf_counter() - t0) / reps * 1e3
+
+    ms_ref = t(lambda: ref.masked_topk_ref(q, vecs, scal, lo, hi, act, n, k=k))
+    fp32_bytes = n * d * 4
+    int8_bytes = n * d * 1 + n * 4
+    out = {
+        "figure": "kernels_bench",
+        "oracle_parity": parity,
+        "int8_recall_vs_fp32": rec,
+        "ref_scan_ms_cpu": round(ms_ref, 2),
+        "db_bytes_fp32": fp32_bytes,
+        "db_bytes_int8": int8_bytes,
+        "hbm_reduction": round(fp32_bytes / int8_bytes, 2),
+    }
+    print(f"  kernels: parity={parity} int8_recall={rec:.2f} "
+          f"HBM bytes/query {fp32_bytes/2**20:.1f}MiB -> "
+          f"{int8_bytes/2**20:.1f}MiB ({out['hbm_reduction']}x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

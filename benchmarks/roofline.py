@@ -1,0 +1,63 @@
+"""§Roofline — format the dry-run sweep (dryrun_results.jsonl) as the
+per-(arch × shape × mesh) roofline table: the three terms, the dominant
+bottleneck, and the MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str = "dryrun_results.jsonl") -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def fmt_table(recs: list[dict], mesh: str = "16x16") -> str:
+    hdr = (f"| arch | shape | compute s | memory s | collective s | dominant "
+           f"| useful | peak GiB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flop_ratio']:.2f} | {r['peak_hbm_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(path: str = "dryrun_results.jsonl", **_) -> dict:
+    recs = load(path)
+    ok = [r for r in recs if "error" not in r and "skipped" not in r]
+    sk = [r for r in recs if "skipped" in r]
+    er = [r for r in recs if "error" in r]
+    print(f"  roofline: {len(ok)} compiled cells, {len(sk)} documented skips, "
+          f"{len(er)} errors (from {path})")
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"  dominant-term distribution: {doms}")
+        worst = sorted(ok, key=lambda r: r["useful_flop_ratio"])[:3]
+        for w in worst:
+            print(f"  lowest useful-flops: {w['arch']} × {w['shape']} × "
+                  f"{w['mesh']} -> {w['useful_flop_ratio']:.3f}")
+    return {"figure": "roofline", "n_ok": len(ok), "n_skipped": len(sk),
+            "n_error": len(er)}
+
+
+if __name__ == "__main__":
+    print(fmt_table(load()))
+    run()

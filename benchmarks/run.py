@@ -1,0 +1,71 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+  python -m benchmarks.run            # moderate sizes (default)
+  python -m benchmarks.run --fast     # CI-speed
+  python -m benchmarks.run --only fig3,fig4
+  python -m benchmarks.run --full     # paper-scale-ish (slow)
+
+Writes benchmarks_results.json next to the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import (
+    ablation, common, cross_engine, data_updates, datasets_table,
+    kernels_bench, multi_vector, roofline, single_vector, weight_skew,
+)
+
+BENCHES = {
+    "table1": datasets_table.run,
+    "fig3": single_vector.run,
+    "fig4": multi_vector.run,
+    "fig5": weight_skew.run,
+    "fig6": data_updates.run,
+    "sec54": cross_engine.run,
+    "fig7": ablation.run,
+    "kernels": kernels_bench.run,
+    "roofline": roofline.run,
+}
+
+NO_SIZES = ("table1", "kernels", "roofline")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="benchmarks_results.json")
+    args = ap.parse_args()
+
+    sizes = common.FULL if args.full else common.FAST
+    if not args.fast and not args.full:  # default: moderate
+        sizes = dict(common.FAST, n_train=32, rw_steps=300)
+
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    results, t_total = {}, time.time()
+    for name in names:
+        fn = BENCHES[name]
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            results[name] = fn() if name in NO_SIZES else fn(sizes=sizes)
+            results[name]["seconds"] = round(time.time() - t0, 1)
+        except Exception as e:  # noqa: BLE001
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            print(f"  FAILED: {results[name]['error']}")
+        print(f"  ({time.time() - t0:.0f}s)", flush=True)
+    results["total_seconds"] = round(time.time() - t_total, 1)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"\nwrote {args.out} ({results['total_seconds']:.0f}s total)")
+    errs = [n for n in names if "error" in results.get(n, {})]
+    if errs:
+        raise SystemExit(f"benchmarks failed: {errs}")
+
+
+if __name__ == "__main__":
+    main()

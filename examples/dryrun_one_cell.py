@@ -1,0 +1,20 @@
+"""Lower + compile one (arch × shape) cell on the production mesh and print
+its roofline terms — the single-cell version of the multi-pod dry-run.
+
+  PYTHONPATH=src python examples/dryrun_one_cell.py --arch gemma-7b \
+      --shape decode_32k [--multi-pod]
+
+(Must run as its own process: the dry-run forces 512 host devices.)
+"""
+import subprocess
+import sys
+
+
+def main():
+    args = sys.argv[1:] or ["--arch", "gemma-7b", "--shape", "decode_32k"]
+    cmd = [sys.executable, "-m", "repro.launch.dryrun"] + args
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: build a hybrid table, fit BoomHQ, run optimized MHQs.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.data_encoder import DataEncoderConfig
+from repro.core.executor import recall_at_k
+from repro.core.rewriter import RewriterConfig
+from repro.vectordb import flat
+
+
+def main():
+    # 1. a table with two vector columns + four scalar columns (TPC-H Part
+    #    shape, §4 benchmark construction)
+    table = datasets.make("part", rows=4000, seed=0)
+    print(f"table: {table.n_rows} rows, {table.schema.n_vec} vector cols, "
+          f"{table.schema.n_scalar} scalar cols")
+
+    # 2. a stratified MHQ workload (weighted two-vector queries)
+    workload = queries.gen_workload(table, 40, n_vec_used=2, seed=1)
+
+    # 3. fit the learned optimizer (data encoder + self-supervised rewriter)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=32,
+        encoder=DataEncoderConfig(frozen_steps=40, ae_steps=80, sample=1024),
+        rewriter=RewriterConfig(steps=200)))
+    metrics = bq.fit(workload[:30])
+    print(f"fit done: strategy_acc={metrics['strategy_acc']:.2f} "
+          f"({metrics['fit_seconds']:.0f}s)")
+
+    # 4. optimized execution on unseen queries
+    for q in workload[30:36]:
+        plan = bq.optimize(q)
+        ids, scores = bq.execute(q)
+        gt, _ = flat.ground_truth(table, list(q.query_vectors),
+                                  list(q.weights), q.predicates, q.k)
+        print(f"  w={tuple(round(w, 2) for w in q.weights)} "
+              f"plan={plan.strategy:12s} recall={recall_at_k(ids, gt):.2f} "
+              f"top-id={int(np.asarray(ids)[0])}")
+
+
+if __name__ == "__main__":
+    main()

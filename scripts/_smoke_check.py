@@ -1,0 +1,64 @@
+"""Dev scratch: quick forward/train/prefill/decode sanity over all smoke archs."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm
+
+B, S = 2, 32
+
+
+def batch_for(cfg):
+    rng = np.random.default_rng(0)
+    b = {}
+    s_tok = S
+    if cfg.modality == "vlm":
+        s_tok = S - cfg.n_prefix_embeds
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_prefix_embeds, cfg.d_model)), jnp.float32)
+    if cfg.inputs_are_embeds:
+        b["embeds"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        return b
+    b["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, s_tok)), jnp.int32)
+    b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, s_tok)), jnp.int32)
+    return b
+
+
+def main():
+    failures = []
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch, smoke=True)
+        try:
+            params = lm.init(jax.random.PRNGKey(0), cfg)
+            batch = batch_for(cfg)
+            loss, metrics = jax.jit(
+                lambda p, b: lm.loss_fn(p, cfg, b, remat=True))(params, batch)
+            assert jnp.isfinite(loss), f"{arch}: loss not finite"
+            # prefill + decode
+            logits, cache = jax.jit(
+                lambda p, b: lm.prefill(p, cfg, b, max_len=S + 8))(params, batch)
+            assert logits.shape == (B, cfg.vocab)
+            assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: prefill logits NaN"
+            if cfg.inputs_are_embeds:
+                inp = {"embed": jnp.zeros((B, cfg.d_model), jnp.float32)}
+            else:
+                inp = {"token": jnp.argmax(logits, -1).astype(jnp.int32)}
+            lg2, cache = jax.jit(
+                lambda p, i, c: lm.decode_step(p, cfg, i, jnp.asarray(S, jnp.int32), c)
+            )(params, inp, cache)
+            assert lg2.shape == (B, cfg.vocab)
+            assert bool(jnp.all(jnp.isfinite(lg2))), f"{arch}: decode logits NaN"
+            print(f"OK   {arch:26s} loss={float(loss):.4f}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, e))
+            print(f"FAIL {arch:26s} {type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — BoomHQ (learned hybrid-query optimization) on a multi-pod JAX stack."""
+
+__version__ = "0.1.0"

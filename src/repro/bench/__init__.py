@@ -1,0 +1,1 @@
+from repro.bench import augment, datasets, queries  # noqa: F401

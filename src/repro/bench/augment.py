@@ -1,0 +1,124 @@
+"""Benchmark construction (paper §4): correlated scalar/vector augmentation.
+
+Vector → scalar (for ann-benchmark-style datasets):
+  * cluster IDs        — k-means cluster of each vector (categorical);
+  * hyperplane codes   — side-of-random-hyperplane bit strings (categorical);
+  * reference distance — Σ distances to random reference points (continuous).
+
+Scalar → vector (for IMDb/TPC-H-style tables): the paper embeds text columns
+with language models. Offline we provide two embedders with the same key
+property (vectors CORRELATED with the scalars):
+  * "hash"  — deterministic random-feature projection of the scalar row
+              through a fixed tanh network + Gaussian noise (fast; default);
+  * "lm"    — tokens derived from the row are run through a configured
+              assigned-architecture LM (repro.models.lm) and mean-pooled —
+              the framework's own models as embedding producers (DESIGN §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# vector -> scalar
+# ---------------------------------------------------------------------------
+
+def cluster_labels(vectors: np.ndarray, n_clusters: int = 16, seed: int = 0,
+                   iters: int = 8) -> np.ndarray:
+    from repro.vectordb.ivf import _kmeans
+
+    _, assign = _kmeans(jnp.asarray(vectors, jnp.float32),
+                        jax.random.PRNGKey(seed), n_clusters, iters)
+    return np.asarray(assign, np.float32)
+
+
+def hyperplane_codes(vectors: np.ndarray, n_planes: int = 4, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    planes = rng.normal(size=(vectors.shape[1], n_planes)).astype(np.float32)
+    bits = (vectors @ planes > 0).astype(np.int64)
+    code = np.zeros(vectors.shape[0], np.int64)
+    for j in range(n_planes):
+        code = code * 2 + bits[:, j]
+    return code.astype(np.float32)
+
+
+def refpoint_distance_sum(vectors: np.ndarray, n_refs: int = 4, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed + 7)
+    lo, hi = vectors.min(axis=0), vectors.max(axis=0)
+    refs = rng.uniform(lo, hi, size=(n_refs, vectors.shape[1])).astype(np.float32)
+    d = np.sqrt(((vectors[:, None, :] - refs[None]) ** 2).sum(-1))
+    return d.sum(axis=1).astype(np.float32)
+
+
+def augment_with_scalars(vectors: np.ndarray, *, n_clusters: int = 16,
+                         n_planes: int = 4, n_refs: int = 4, seed: int = 0):
+    """-> (scalars (n, 3), column specs) via the three §4 constructions."""
+    from repro.vectordb.table import ScalarCol
+
+    cols = [
+        ScalarCol("cluster_id", "cat", n_clusters),
+        ScalarCol("hplane_code", "cat", 2 ** n_planes),
+        ScalarCol("ref_dist_sum", "num"),
+    ]
+    scalars = np.stack([
+        cluster_labels(vectors, n_clusters, seed),
+        hyperplane_codes(vectors, n_planes, seed),
+        refpoint_distance_sum(vectors, n_refs, seed),
+    ], axis=1)
+    return scalars, cols
+
+
+# ---------------------------------------------------------------------------
+# scalar -> vector
+# ---------------------------------------------------------------------------
+
+def hash_embed(scalars: np.ndarray, dim: int, *, seed: int = 0,
+               noise: float = 0.25) -> np.ndarray:
+    """Deterministic 'semantic' embedding of scalar rows: a fixed random
+    2-layer tanh feature map + noise, L2-normalized. Nearby scalar rows map
+    to nearby vectors — the correlation §4 requires."""
+    rng = np.random.default_rng(seed)
+    m = scalars.shape[1]
+    mu, sd = scalars.mean(axis=0), scalars.std(axis=0) + 1e-6
+    z = (scalars - mu) / sd
+    w1 = rng.normal(size=(m, 4 * m + 8)).astype(np.float32)
+    w2 = rng.normal(size=(4 * m + 8, dim)).astype(np.float32) / np.sqrt(4 * m + 8)
+    h = np.tanh(z @ w1)
+    v = np.tanh(h @ w2) + noise * rng.normal(size=(len(scalars), dim))
+    v = v.astype(np.float32)
+    return v / (np.linalg.norm(v, axis=1, keepdims=True) + 1e-9)
+
+
+def lm_embed(scalars: np.ndarray, dim: int, *, arch: str = "stablelm-1.6b",
+             smoke: bool = True, seed: int = 0, seq: int = 16,
+             batch: int = 256) -> np.ndarray:
+    """Embed rows with one of the assigned-architecture LMs: rows are hashed
+    to token sequences, run through ``lm.hidden``, mean-pooled, projected."""
+    from repro import configs
+    from repro.models import lm
+
+    cfg = configs.get_config(arch, smoke=smoke)
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    # deterministic row -> token hash
+    mu, sd = scalars.mean(axis=0), scalars.std(axis=0) + 1e-6
+    z = ((scalars - mu) / sd * 37.0).astype(np.int64)
+    toks = np.zeros((len(scalars), seq), np.int64)
+    for j in range(seq):
+        toks = toks * 31 + np.roll(z, j, axis=1).sum(axis=1, keepdims=True) + j
+        toks[:, j] = np.abs(toks[:, j]) % cfg.vocab
+    proj = rng.normal(size=(cfg.d_model, dim)).astype(np.float32) / np.sqrt(cfg.d_model)
+
+    @jax.jit
+    def embed(tok_batch):
+        h, _ = lm.hidden(params, cfg, {"tokens": tok_batch})
+        return jnp.mean(h, axis=1) @ proj
+
+    outs = []
+    for i in range(0, len(scalars), batch):
+        outs.append(np.asarray(embed(jnp.asarray(toks[i:i + batch], jnp.int32))))
+    v = np.concatenate(outs).astype(np.float32)
+    return v / (np.linalg.norm(v, axis=1, keepdims=True) + 1e-9)

@@ -1,0 +1,102 @@
+"""Query workload generation (paper §4 'Query Generation').
+
+Per table: hybrid queries with (a) query vectors uniformly sampled within
+each dimension's data range, (b) predicates over a random subset of scalar
+columns (equality for categoricals, ranges for numerics), with (c) the
+SELECTIVITY of the predicate set stratified ~uniformly over [0, 1] by
+oversample-then-flatten (the paper regenerates queries when a selectivity
+sub-interval overfills), and (d) w₁ ~ U[0,1], w₂ = 1 − w₁ for two-vector
+MHQs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.query import MHQ
+from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.table import Table
+
+
+def _random_predicates(table: Table, rng) -> Predicates:
+    m = table.schema.n_scalar
+    scal = np.asarray(table.scalars)
+    n_active = rng.integers(1, m + 1)
+    cols = rng.choice(m, size=n_active, replace=False)
+    conds = {}
+    for c in cols:
+        col = table.schema.scalar_cols[c]
+        if col.kind == "cat":
+            v = float(rng.choice(scal[:, c]))
+            conds[int(c)] = (v, v)  # equality
+        else:
+            lo, hi = scal[:, c].min(), scal[:, c].max()
+            a, b = sorted(rng.uniform(lo, hi, size=2))
+            kind = rng.integers(0, 3)
+            if kind == 0:
+                conds[int(c)] = (float(a), float(b))  # closed range
+            elif kind == 1:
+                conds[int(c)] = (-np.inf, float(b))  # x < b
+            else:
+                conds[int(c)] = (float(a), np.inf)  # x > a
+    return Predicates.from_conditions(m, conds)
+
+
+def _query_vectors(table: Table, rng) -> tuple:
+    qs = []
+    for i, vcol in enumerate(table.schema.vector_cols):
+        v = np.asarray(table.vectors[i])
+        lo, hi = v.min(axis=0), v.max(axis=0)
+        qs.append(jnp.asarray(rng.uniform(lo, hi).astype(np.float32)))
+    return tuple(qs)
+
+
+def gen_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
+                 k: int = 10, recall_target: float = 0.9, seed: int = 0,
+                 stratify_bins: int = 10, oversample: int = 6) -> list[MHQ]:
+    """Selectivity-stratified workload. ``n_vec_used`` ∈ {1, 2}."""
+    rng = np.random.default_rng(seed)
+    n_vec = table.schema.n_vec
+    pool = []
+    for _ in range(n_queries * oversample):
+        pred = _random_predicates(table, rng)
+        sel = float(jnp.mean(eval_mask(pred, table.scalars)))
+        pool.append((sel, pred))
+    # flatten the selectivity histogram (paper: uniform over sub-intervals)
+    bins = [[] for _ in range(stratify_bins)]
+    for sel, pred in pool:
+        b = min(int(sel * stratify_bins), stratify_bins - 1)
+        bins[b].append((sel, pred))
+    cap = max(1, n_queries // stratify_bins)
+    chosen, chosen_ids = [], set()
+    for b in bins:
+        for item in b[:cap]:
+            chosen.append(item)
+            chosen_ids.add(id(item))
+    for b in bins:  # round-robin fill from the remainder
+        for item in b[cap:]:
+            if len(chosen) >= n_queries:
+                break
+            if id(item) not in chosen_ids:
+                chosen.append(item)
+                chosen_ids.add(id(item))
+    chosen = chosen[:n_queries]
+
+    out = []
+    for sel, pred in chosen:
+        qs = _query_vectors(table, rng)
+        if n_vec_used == 1 or n_vec == 1:
+            weights = tuple(1.0 if i == 0 else 0.0 for i in range(n_vec))
+        else:
+            w1 = float(rng.uniform(0.0, 1.0))
+            weights = (w1, 1.0 - w1) + tuple(0.0 for _ in range(n_vec - 2))
+        out.append(MHQ(query_vectors=qs, weights=weights, predicates=pred,
+                       k=k, recall_target=recall_target))
+    return out
+
+
+def workload_selectivities(table: Table, workload) -> np.ndarray:
+    return np.asarray([
+        float(jnp.mean(eval_mask(q.predicates, table.scalars))) for q in workload
+    ])

@@ -1,0 +1,125 @@
+"""Minimal pure-JAX neural-net primitives (init/apply style, plain-dict params).
+
+No flax/haiku in this environment — every layer is a pair of functions:
+``*_init(key, ...) -> params`` and ``*_apply(params, x, ...) -> y``.
+Params are nested dicts of jnp arrays so they stack cleanly for
+``jax.lax.scan`` over homogeneous layer stacks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, std, dtype=jnp.float32):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def lecun_normal(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return trunc_normal(key, shape, 1.0 / math.sqrt(max(1, fan_in)), dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / mlp
+# ---------------------------------------------------------------------------
+
+def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32, std=None):
+    wk, bk = jax.random.split(key)
+    std = std if std is not None else 1.0 / math.sqrt(max(1, in_dim))
+    p = {"w": trunc_normal(wk, (in_dim, out_dim), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key, dims: Sequence[int], *, bias=True, dtype=jnp.float32):
+    """A plain ReLU MLP used by the BoomHQ encoder/rewriter heads."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": linear_init(keys[i], dims[i], dims[i + 1], bias=bias, dtype=dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_apply(p, x, *, final_activation=False):
+    n = len(p)
+    for i in range(n):
+        x = linear_apply(p[f"l{i}"], x)
+        if i < n - 1 or final_activation:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps=1e-6, zero_centered=False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:  # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (x * scale).astype(dt)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, dim, dtype=jnp.float32):
+    return {"table": trunc_normal(key, (vocab, dim), 1.0, dtype)}
+
+
+def embedding_apply(p, ids):
+    return p["table"][ids]
+
+
+def embedding_attend(p, x):
+    """Tied-weights logit projection."""
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu_exact": lambda x: jax.nn.gelu(x, approximate=False),
+        "silu": jax.nn.silu,
+    }[name]

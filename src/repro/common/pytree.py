@@ -1,0 +1,93 @@
+"""Pytree helpers shared across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree.map(fn, *trees)
+
+
+def tree_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    """Flatten a pytree into (dotted-path, leaf) pairs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append((path_str(path), leaf))
+    return out
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:  # pragma: no cover - defensive
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    """Map ``fn(path, leaf)`` over ``tree`` keeping structure."""
+
+    def _fn(path, leaf):
+        return fn(path_str(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(tree)
+    )
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    """Cast floating leaves to ``dtype``; leave integer leaves untouched."""
+
+    def _cast(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype if not hasattr(x, "dtype") else x.dtype, jnp.floating):
+            return x.astype(dtype) if hasattr(x, "astype") else jnp.asarray(x, dtype)
+        return x
+
+    return jax.tree.map(_cast, tree)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def stack_trees(trees: list[PyTree]) -> PyTree:
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def check_finite(tree: PyTree) -> jax.Array:
+    """True iff every floating leaf is finite."""
+    oks = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree.leaves(tree)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    ]
+    if not oks:
+        return jnp.asarray(True)
+    return jnp.stack(oks).all()

@@ -1,0 +1,265 @@
+"""BoomHQ façade: the full learned optimizer wired end-to-end (paper Fig. 2).
+
+  fit():      build per-column IVF indexes + histograms, train the
+              correlation-aware data encoder, generate self-supervised plan
+              labels over the training workload, train the rewriter heads.
+  optimize(): query encoder -> X_in -> predicted ExecutionPlan.
+  execute():  optimize + run on the bound engine personality.
+  insert():   buffer-style data updates — extend indexes/histograms and
+              incrementally fine-tune the data encoder (paper §3.2, §5.3).
+
+Ablation switches (use_de / use_stats / use_gse / use_lnp) zero out the
+corresponding X_in feature groups — BoomHQ w.o. DE / QE-Stats / QE-GSE /
+QE-LNP in the paper's §5.5 naming.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.data_encoder import DataEncoder, DataEncoderConfig
+from repro.core.executor import EngineCaps, HybridExecutor, PGVECTOR, recall_at_k
+from repro.core.query import ExecutionPlan, MHQ, default_plan
+from repro.core.query_encoder import QueryEncoder, feature_dim
+from repro.core.rewriter import MHQRewriter, RewriterConfig, generate_label
+from repro.vectordb import flat, histogram, ivf
+from repro.vectordb.table import Table
+
+
+@dataclasses.dataclass(frozen=True)
+class BoomHQConfig:
+    n_clusters: int = 64
+    hist_bins: int = 64
+    encoder: DataEncoderConfig = dataclasses.field(default_factory=DataEncoderConfig)
+    rewriter: RewriterConfig = dataclasses.field(default_factory=RewriterConfig)
+    # ablations (§5.5)
+    use_de: bool = True
+    use_stats: bool = True
+    use_gse: bool = True
+    use_lnp: bool = True
+
+
+class BoomHQ:
+    def __init__(self, table: Table, cfg: BoomHQConfig = BoomHQConfig(),
+                 engine: EngineCaps = PGVECTOR):
+        self.table = table
+        self.cfg = cfg
+        self.engine = engine
+        self.indexes = [
+            ivf.build(v, min(cfg.n_clusters, max(2, table.n_rows // 8)),
+                      seed=i, metric=table.schema.metric)
+            for i, v in enumerate(table.vectors)
+        ]
+        self.hists = histogram.build(table.scalars, cfg.hist_bins)
+        self.executor = HybridExecutor(table, self.indexes, engine)
+        self.data_encoder: Optional[DataEncoder] = None
+        if cfg.use_de:
+            self.data_encoder = DataEncoder(
+                [v.shape[1] for v in table.vectors], table.schema.n_scalar,
+                cfg.encoder)
+        self.qenc: Optional[QueryEncoder] = None
+        self.rewriter: Optional[MHQRewriter] = None
+        self._fitted = False
+
+    # -- offline -------------------------------------------------------------
+
+    def fit(self, workload: list[MHQ], *, verbose: bool = False) -> dict:
+        metrics = {}
+        t0 = time.perf_counter()
+        if self.data_encoder is not None:
+            metrics.update(self.data_encoder.fit(self.table))
+        self.qenc = QueryEncoder(self.table, self.indexes, self.hists,
+                                 self.data_encoder)
+        feats, labels = [], []
+        for qi, q in enumerate(workload):
+            gt_ids, _ = flat.ground_truth(
+                self.table, list(q.query_vectors), list(q.weights),
+                q.predicates, q.k)
+            x = self._features(q)
+            lab = generate_label(self.executor, q, gt_ids,
+                                 refine_columns=self.cfg.rewriter.refine_columns)
+            feats.append(x)
+            labels.append(lab)
+            if verbose and (qi + 1) % 50 == 0:
+                print(f"  labeled {qi + 1}/{len(workload)} queries")
+        X = np.stack(feats)
+        n_vec = workload[0].n_vec
+        self.rewriter = MHQRewriter(X.shape[1], n_vec, self.cfg.rewriter)
+        metrics.update(self.rewriter.fit(X, labels))
+        metrics["fit_seconds"] = time.perf_counter() - t0
+        self._fitted = True
+        return metrics
+
+    def _features(self, q: MHQ) -> np.ndarray:
+        """X_in for one query, via a single fused jitted pipeline (the
+        unfused per-feature path in QueryEncoder.encode is kept for tests
+        and ablations of individual probes)."""
+        if getattr(self, "_fused_x", None) is None:
+            self._fused_x = self._build_fused_features()
+        de = self.data_encoder
+        de_args = (de.params, de.edges) if (self.cfg.use_de and de is not None) \
+            else (None, None)
+        x = self._fused_x(
+            de_args, self.qenc._edges, self.hists,
+            tuple(self.indexes), tuple(self.table.vectors), self.table.scalars,
+            tuple(q.query_vectors), q.predicates,
+            jnp.asarray(q.weights, jnp.float32),
+            jnp.asarray(float(np.log(q.k)), jnp.float32),
+            jnp.asarray(q.recall_target, jnp.float32))
+        return np.asarray(x)
+
+    def _build_fused_features(self):
+        """One jitted function assembling X_in exactly like
+        QueryFeatures.x_in(): [ε_recon; rates; probe_scores; σ, log1p(1/σ);
+        weights; log k, E_rec; S_enc]."""
+        from functools import partial
+
+        from repro.core.query_encoder import S_ENC_BINS  # noqa: F401
+        from repro.vectordb import ivf as _ivf
+        from repro.vectordb.predicates import soft_encode as _soft
+
+        cfg = self.cfg
+        use_de = cfg.use_de and self.data_encoder is not None
+        de = self.data_encoder
+        probe_k, probe_np = self.qenc.probe_k, self.qenc.probe_nprobe
+        n_vec = self.table.schema.n_vec
+
+        @partial(jax.jit, static_argnums=())
+        def fused(de_args, senc_edges, hists, indexes, vectors, scalars,
+                  qs, pred, weights, logk, rec):
+            de_params, de_edges = de_args
+            if use_de:
+                es = _soft(pred, de_edges).reshape(-1)
+                recon = []
+                for i in range(n_vec):
+                    ev = de._evec(de_params, i, qs[i])
+                    e = jnp.concatenate([ev, es], axis=-1)
+                    recon.append(jnp.mean(jnp.square(de._ae(de_params, e) - e)))
+                recon = jnp.stack(recon)
+            else:
+                recon = jnp.zeros((n_vec,), jnp.float32)
+            if cfg.use_lnp:
+                rates, scores = [], []
+                for i in range(n_vec):
+                    r, s = _ivf.preprobe(indexes[i], vectors[i], scalars, pred,
+                                         qs[i], nprobe=probe_np, probe_k=probe_k)
+                    rates.append(r)
+                    scores.append(s)
+                rates, scores = jnp.stack(rates), jnp.stack(scores)
+            else:
+                rates = jnp.full((n_vec,), 0.5)
+                scores = jnp.zeros((n_vec,))
+            if cfg.use_gse:
+                from repro.vectordb import histogram as _h
+                sel = _h.estimate_selectivity(hists, pred)
+            else:
+                sel = jnp.asarray(0.5)
+            enc = _soft(pred, senc_edges)
+            s_enc = jnp.concatenate(
+                [enc, pred.active.astype(jnp.float32)[:, None]], axis=1).reshape(-1)
+            if not cfg.use_stats:
+                weights = jnp.full((n_vec,), 1.0 / n_vec)
+                logk = jnp.asarray(np.log(10.0), jnp.float32)
+                rec = jnp.asarray(0.9, jnp.float32)
+            return jnp.concatenate([
+                recon, rates, scores,
+                jnp.stack([sel, jnp.log1p(1.0 / jnp.maximum(sel, 1e-6))]),
+                weights, jnp.stack([logk, rec]), s_enc,
+            ]).astype(jnp.float32)
+
+        return fused
+
+    # -- online ----------------------------------------------------------------
+
+    SINGLE_INDEX_MIN_SKEW = 0.85  # paper: single-index only for skewed weights
+
+    def optimize(self, q: MHQ) -> ExecutionPlan:
+        """ONE fused jit call (features + heads + argmax) and ONE host sync
+        per query — the optimizer's serving overhead is dispatch-dominated
+        on small tables, so everything lives in a single graph."""
+        if not self._fitted:
+            return default_plan(q.n_vec)
+        if getattr(self, "_plan_jit", None) is None:
+            self._build_plan_jit()
+        de = self.data_encoder
+        de_args = (de.params, de.edges) if (self.cfg.use_de and de is not None) \
+            else (None, None)
+        codes = np.asarray(self._plan_jit(
+            self.rewriter.params, de_args, self.qenc._edges, self.hists,
+            tuple(self.indexes), tuple(self.table.vectors), self.table.scalars,
+            tuple(q.query_vectors), q.predicates,
+            jnp.asarray(q.weights, jnp.float32),
+            jnp.asarray(float(np.log(q.k)), jnp.float32),
+            jnp.asarray(q.recall_target, jnp.float32)))
+        plan = self.rewriter.plan_from_codes(codes)
+        if plan.strategy == "single_index":
+            wmax = float(np.max(q.weights))
+            if wmax >= self.SINGLE_INDEX_MIN_SKEW:
+                plan = dataclasses.replace(plan, dominant=int(np.argmax(q.weights)))
+            else:  # guard: not skewed enough — fall back to per-column scans
+                plan = dataclasses.replace(plan, strategy="index_scan")
+        return plan
+
+    def _build_plan_jit(self):
+        fused = self._fused_x if getattr(self, "_fused_x", None) is not None \
+            else self._build_fused_features()
+        self._fused_x = fused
+        rew = self.rewriter
+
+        @jax.jit
+        def plan_jit(rw_params, de_args, senc_edges, hists, indexes, vectors,
+                     scalars, qs, pred, weights, logk, rec):
+            x = fused(de_args, senc_edges, hists, indexes, vectors, scalars,
+                      qs, pred, weights, logk, rec)  # nested jit inlines
+            return rew.plan_codes(rw_params, x)
+
+        self._plan_jit = plan_jit
+
+    def execute(self, q: MHQ):
+        ids, scores = self.executor.execute(q, self.optimize(q))
+        # underfill safeguard: if the plan found fewer than k qualifying rows
+        # (severe mis-prediction), escalate once to the robust default plan
+        if int(np.sum(np.asarray(ids) >= 0)) < q.k:
+            ids2, scores2 = self.executor.execute(q, default_plan(q.n_vec))
+            if int(np.sum(np.asarray(ids2) >= 0)) > int(np.sum(np.asarray(ids) >= 0)):
+                return ids2, scores2
+        return ids, scores
+
+    def execute_timed(self, q: MHQ, *, repeats: int = 1):
+        """(ids, scores, seconds) — optimizer overhead INCLUDED (the paper
+        counts pre-probing and inference in the measured latency)."""
+        ids, scores = self.execute(q)  # warm (jit caches)
+        jnp.asarray(scores).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ids, scores = self.execute(q)
+            jnp.asarray(scores).block_until_ready()
+        dt = (time.perf_counter() - t0) / repeats
+        return np.asarray(ids), np.asarray(scores), dt
+
+    # -- updates (paper §3.2 incremental, §5.3) ---------------------------------
+
+    def insert(self, vectors: list[np.ndarray], scalars: np.ndarray,
+               *, finetune: bool = True) -> dict:
+        first_new = self.table.n_rows
+        self.table = self.table.append(vectors, scalars)
+        self.indexes = [
+            ivf.extend(idx, jnp.asarray(v, jnp.float32), first_new)
+            for idx, v in zip(self.indexes, vectors)
+        ]
+        self.hists = histogram.update(self.hists, jnp.asarray(scalars, jnp.float32))
+        self.executor = HybridExecutor(self.table, self.indexes, self.engine)
+        out = {}
+        if self.data_encoder is not None and finetune:
+            new_rows = np.arange(first_new, self.table.n_rows)
+            out = self.data_encoder.update(self.table, new_rows)
+        if self.qenc is not None:
+            self.qenc = QueryEncoder(self.table, self.indexes, self.hists,
+                                     self.data_encoder)
+        return out

@@ -1,0 +1,171 @@
+"""MHQ execution engine: the three strategies + two-phase multi-vector flow.
+
+Strategies (paper §3.4, TPU-adapted per DESIGN.md §2):
+  * filter_first  — evaluate Q_S over all rows, gather ≤ max_candidates
+                    qualifying rows, score only those (scalar-index path);
+  * index_scan    — rewrite the MHQ into one single-vector filtered IVF
+                    subquery per column (k_i, nprobe, max_scan, iterative),
+                    merge the candidates, re-rank by the full weighted score;
+  * single_index  — heavily skewed weights: search only the dominant column,
+                    re-rank by the full score.
+
+``iterative`` implements pgvector's iterative_scan as nprobe doubling while
+the filtered result underfills k (bounded by the engine's nprobe cap).
+
+Engine personalities (§5.4): Milvus/OpenSearch expose no max_scan_tuples /
+iterative_scan, so those knobs pin to engine defaults — the learned
+optimizer is constrained to each engine's search space.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import ExecutionPlan, MHQ, SubqueryParams
+from repro.vectordb import flat, ivf
+from repro.vectordb.table import Table, similarity
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCaps:
+    """What the underlying engine exposes (paper §5 setup / §5.4)."""
+    name: str
+    max_scan_tuples: bool = True
+    iterative_scan: bool = True
+    per_column_params: bool = True  # can k_i / nprobe differ per column?
+    nprobe_cap: int = 64
+    default_max_scan: int = 32768
+
+
+PGVECTOR = EngineCaps("pgvector")
+MILVUS = EngineCaps("milvus", max_scan_tuples=False, iterative_scan=False)
+OPENSEARCH = EngineCaps("opensearch", max_scan_tuples=False, iterative_scan=False)
+ENGINES = {e.name: e for e in (PGVECTOR, MILVUS, OPENSEARCH)}
+
+
+@partial(jax.jit, static_argnames=("k", "n_vec", "metric", "total"))
+def _rerank(vectors, pred_mask_rows, rows, qs, w, *, k, n_vec, metric, total):
+    """Re-rank the union of candidate rows by the full weighted score.
+
+    rows: (total,) candidate ids, -1 = empty. Duplicates suppressed by
+    keeping only the first occurrence (sort-based)."""
+    n = vectors[0].shape[0]
+    rows_c = jnp.clip(rows, 0, n - 1)
+    score = jnp.zeros((total,), jnp.float32)
+    for i in range(n_vec):
+        score = score + w[i] * similarity(qs[i], vectors[i][rows_c], metric)
+    valid = rows >= 0
+    # dedupe: sort by row id; mark first occurrence
+    order = jnp.argsort(rows)
+    sorted_rows = rows[order]
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_rows[1:] != sorted_rows[:-1]])
+    keep = jnp.zeros((total,), bool).at[order].set(first) & valid
+    masked = jnp.where(keep, score, NEG)
+    top_s, top_i = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_s > NEG / 2, rows[top_i], -1)
+    return ids, top_s
+
+
+class HybridExecutor:
+    """Binds a table + per-column IVF indexes + an engine personality."""
+
+    def __init__(self, table: Table, indexes: list, engine: EngineCaps = PGVECTOR):
+        self.table = table
+        self.indexes = indexes
+        self.engine = engine
+
+    # -- plan legalization ---------------------------------------------------
+
+    def legalize(self, plan: ExecutionPlan) -> ExecutionPlan:
+        """Clamp a plan to what the engine personality supports."""
+        e = self.engine
+        subs = []
+        base = plan.subqueries[0]
+        for s in plan.subqueries:
+            if not e.per_column_params:
+                s = dataclasses.replace(s, k_mult=base.k_mult, nprobe=base.nprobe)
+            if not e.max_scan_tuples:
+                s = dataclasses.replace(s, max_scan=e.default_max_scan)
+            if not e.iterative_scan:
+                s = dataclasses.replace(s, iterative=False)
+            s = dataclasses.replace(s, nprobe=min(s.nprobe, e.nprobe_cap))
+            subs.append(s)
+        return dataclasses.replace(plan, subqueries=tuple(subs))
+
+    # -- execution -------------------------------------------------------------
+
+    def execute(self, q: MHQ, plan: ExecutionPlan):
+        """-> (ids (k,), scores (k,)) numpy arrays."""
+        plan = self.legalize(plan)
+        t = self.table
+        w = jnp.asarray(q.weights, jnp.float32)
+        if plan.strategy == "filter_first":
+            ids, scores, _, _ = flat.filter_first(
+                tuple(t.vectors), t.scalars, q.predicates,
+                tuple(q.query_vectors), w, t.schema.metric,
+                k=q.k, max_candidates=plan.max_candidates, n_vec=q.n_vec)
+            return ids, scores
+
+        if plan.strategy == "single_index":
+            cols = [plan.dominant]
+        else:
+            cols = [i for i in range(q.n_vec) if q.weights[i] > 0.0]
+
+        cand = []
+        for i in cols:
+            sp = plan.subqueries[i]
+            k_i = min(sp.k_mult * q.k, t.n_rows)
+            ids_i = self._subquery(i, q, k_i, sp)
+            cand.append(ids_i)
+        rows = jnp.concatenate(cand)
+        total = int(rows.shape[0])
+        return _rerank(tuple(t.vectors), None, rows, tuple(q.query_vectors), w,
+                       k=q.k, n_vec=q.n_vec, metric=t.schema.metric, total=total)
+
+    def _subquery(self, i: int, q: MHQ, k_i: int, sp: SubqueryParams):
+        """One single-vector filtered subquery, with iterative re-expansion."""
+        t = self.table
+        nprobe = sp.nprobe
+        while True:
+            nprobe = min(nprobe, self.indexes[i].n_clusters, self.engine.nprobe_cap)
+            max_scan = min(sp.max_scan, t.n_rows)
+            ids, scores, n_scored, n_qual = ivf.search(
+                self.indexes[i], t.vectors[i], t.scalars, q.predicates,
+                q.query_vectors[i], nprobe=nprobe, max_scan=max_scan, k=k_i)
+            if not sp.iterative:
+                return ids
+            if int(n_qual) >= k_i or nprobe >= min(self.indexes[i].n_clusters,
+                                                   self.engine.nprobe_cap):
+                return ids
+            nprobe *= 2  # iterative_scan: relaxed re-expansion
+
+    # -- measured execution ----------------------------------------------------
+
+    def execute_timed(self, q: MHQ, plan: ExecutionPlan, *, repeats: int = 1):
+        """Returns (ids, scores, seconds). Call once to warm the jit cache
+        before timing loops."""
+        ids, scores = self.execute(q, plan)  # warm + result
+        jax.block_until_ready(scores)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ids, scores = self.execute(q, plan)
+            jax.block_until_ready(scores)
+        dt = (time.perf_counter() - t0) / repeats
+        return np.asarray(ids), np.asarray(scores), dt
+
+
+def recall_at_k(ids, gt_ids) -> float:
+    got = set(int(i) for i in np.asarray(ids) if i >= 0)
+    gt = [int(i) for i in np.asarray(gt_ids) if i >= 0]
+    if not gt:
+        return 1.0
+    return len(got.intersection(gt)) / len(gt)

@@ -1,0 +1,74 @@
+"""MHQ query and execution-plan types (paper §1 definition, §3.4 search space).
+
+A Multiple Hybrid Query Q = ⟨Q_S, Q_V, W_V⟩: scalar predicates, one query
+vector per vector column, and per-column weights. ``ExecutionPlan`` is the
+rewriter's output — the strategy plus per-subquery parameters, i.e. exactly
+the knobs the paper tunes (ef_search→nprobe, max_scan_tuples,
+iterative_scan, per-column candidate count k_i).
+
+Parameters live on small discrete grids so the learned heads are
+classification tasks and the jit cache stays bounded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.vectordb.predicates import Predicates
+
+STRATEGIES = ("filter_first", "index_scan", "single_index")
+
+# parameter grids (ef_search analogue etc.) — §3.4 search space
+NPROBE_GRID = (1, 2, 4, 8, 16, 32)
+MAX_SCAN_GRID = (2048, 8192, 32768, 131072)
+KMULT_GRID = (1, 2, 4, 8)  # k_i = mult · k
+
+
+@dataclasses.dataclass(frozen=True)
+class MHQ:
+    query_vectors: tuple  # one (d_i,) jnp array per vector column
+    weights: tuple  # one float per vector column
+    predicates: Predicates
+    k: int = 10
+    recall_target: float = 0.9
+
+    @property
+    def n_vec(self) -> int:
+        return len(self.query_vectors)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubqueryParams:
+    k_mult: int = 2  # k_i = k_mult · k
+    nprobe: int = 8  # ef_search analogue
+    max_scan: int = 8192  # max_scan_tuples analogue
+    iterative: bool = True  # iterative_scan: re-expand nprobe on underfill
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    strategy: str  # one of STRATEGIES
+    subqueries: tuple  # one SubqueryParams per vector column
+    dominant: int = 0  # column searched when strategy == "single_index"
+    max_candidates: int = 16384  # filter-first gather cap
+
+    def describe(self) -> str:
+        subs = ", ".join(
+            f"col{i}(k×{s.k_mult},np{s.nprobe},ms{s.max_scan}"
+            f"{',iter' if s.iterative else ''})"
+            for i, s in enumerate(self.subqueries))
+        return f"{self.strategy}[{subs}]"
+
+
+def default_plan(n_vec: int, engine_caps: Optional[dict] = None) -> ExecutionPlan:
+    """A robust one-size-fits-all plan (also the underfill-escalation
+    fallback): wide probes + a deep scan cap."""
+    return ExecutionPlan(
+        strategy="index_scan",
+        subqueries=tuple(SubqueryParams(k_mult=4, nprobe=16, max_scan=131072,
+                                        iterative=True) for _ in range(n_vec)),
+    )

@@ -1,0 +1,132 @@
+"""Neighborhood-Selectivity-Enhanced Query Representation (paper §3.3).
+
+Three feature groups, exactly as the paper prescribes:
+  (1) statistics      — weights W_V, k, the user's recall target E_rec;
+  (2) local           — neighborhood pre-probing: a cheap *unfiltered* ANN
+                        probe per vector column, then the fraction of probed
+                        neighbors satisfying Q_S (the local satisfaction
+                        rate), plus the probe's mean similarity;
+  (3) global          — histogram selectivity estimate σ_est (prefix-sum
+                        lookups, independence across conjuncts).
+
+Plus the data-encoder's reconstruction errors ε_recon (§3.2 query phase).
+``encode()`` assembles X_in = [‖ᵢ ε_recon_i ; S_enc ; E_rec ; R_probe ; σ_est]
+for the rewriter heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.data_encoder import DataEncoder
+from repro.core.query import MHQ
+from repro.vectordb import histogram, ivf
+from repro.vectordb.predicates import soft_encode
+from repro.vectordb.table import Table
+
+S_ENC_BINS = 8  # compact predicate encoding for X_in
+
+
+@dataclasses.dataclass
+class QueryFeatures:
+    recon_errors: np.ndarray  # (N,)
+    local_rates: np.ndarray  # (N,) pre-probe satisfaction rate per column
+    probe_scores: np.ndarray  # (N,) mean top-score of the unfiltered probe
+    selectivity: float  # σ_est
+    weights: np.ndarray  # (N,)
+    k: int
+    recall_target: float
+    s_enc: np.ndarray  # flattened predicate encoding
+
+    def x_in(self) -> np.ndarray:
+        return np.concatenate([
+            self.recon_errors,
+            self.local_rates,
+            self.probe_scores,
+            [self.selectivity, np.log1p(1.0 / max(self.selectivity, 1e-6))],
+            self.weights,
+            [np.log(self.k), self.recall_target],
+            self.s_enc,
+        ]).astype(np.float32)
+
+
+def feature_dim(n_vec: int, n_scalar: int) -> int:
+    return 3 * n_vec + 2 + n_vec + 2 + n_scalar * (S_ENC_BINS + 1)
+
+
+class QueryEncoder:
+    """Holds the per-column IVF indexes (for pre-probing), the histograms
+    (for GSE) and the data encoder (for ε_recon)."""
+
+    def __init__(self, table: Table, indexes: list, hists: histogram.Histograms,
+                 data_encoder: Optional[DataEncoder], *, probe_k: int = 32,
+                 probe_nprobe: int = 1):
+        self.table = table
+        self.indexes = indexes
+        self.hists = hists
+        self.data_encoder = data_encoder
+        self.probe_k = probe_k
+        self.probe_nprobe = probe_nprobe
+        m = table.schema.n_scalar
+        # compact bin edges for S_enc
+        scal = np.asarray(table.scalars)
+        lo, hi = scal.min(axis=0), scal.max(axis=0)
+        span = np.maximum(hi - lo, 1e-9)
+        self._edges = jnp.asarray(
+            lo[:, None] + span[:, None]
+            * np.linspace(0.0, 1.0 + 1e-6, S_ENC_BINS + 1)[None, :],
+            jnp.float32)
+
+    # -- single-feature probes (exposed for ablations) ----------------------
+
+    def global_selectivity(self, q: MHQ) -> float:
+        return float(histogram.estimate_selectivity(self.hists, q.predicates))
+
+    def local_probe(self, q: MHQ) -> tuple[np.ndarray, np.ndarray]:
+        rates, scores = [], []
+        for i, qv in enumerate(q.query_vectors):
+            rate, ms = ivf.preprobe(
+                self.indexes[i], self.table.vectors[i], self.table.scalars,
+                q.predicates, qv, nprobe=self.probe_nprobe, probe_k=self.probe_k)
+            rates.append(float(rate))
+            scores.append(float(ms))
+        return np.asarray(rates, np.float32), np.asarray(scores, np.float32)
+
+    def recon_errors(self, q: MHQ) -> np.ndarray:
+        if self.data_encoder is None:
+            return np.zeros((q.n_vec,), np.float32)
+        errs = self.data_encoder.recon_errors(list(q.query_vectors), q.predicates)
+        return np.asarray(errs, np.float32)
+
+    # -- full feature assembly ----------------------------------------------
+
+    def encode(self, q: MHQ, *, use_de=True, use_stats=True, use_gse=True,
+               use_lnp=True) -> QueryFeatures:
+        """Feature flags support the paper's ablations (§5.5)."""
+        n = q.n_vec
+        recon = self.recon_errors(q) if use_de else np.zeros((n,), np.float32)
+        if use_lnp:
+            rates, scores = self.local_probe(q)
+        else:
+            rates = np.full((n,), 0.5, np.float32)
+            scores = np.zeros((n,), np.float32)
+        sel = self.global_selectivity(q) if use_gse else 0.5
+        if not hasattr(self, "_senc_jit") or self._senc_jit is None:
+            self._senc_jit = jax.jit(soft_encode)
+        enc = np.asarray(self._senc_jit(q.predicates, self._edges), np.float32)
+        active = np.asarray(q.predicates.active, np.float32)[:, None]
+        s_enc = np.concatenate([enc, active], axis=1).reshape(-1)
+        if use_stats:
+            weights = np.asarray(q.weights, np.float32)
+            k, rec = q.k, q.recall_target
+        else:
+            weights = np.full((n,), 1.0 / n, np.float32)
+            k, rec = 10, 0.9
+        return QueryFeatures(
+            recon_errors=recon, local_rates=rates, probe_scores=scores,
+            selectivity=float(sel), weights=weights, k=k, recall_target=rec,
+            s_enc=s_enc)

@@ -1,0 +1,1 @@
+from repro.data.pipeline import BatchSpec, SyntheticLM, PackedCorpus, make_source  # noqa: F401

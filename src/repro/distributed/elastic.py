@@ -1,0 +1,61 @@
+"""Elastic scaling: reshard a checkpointed train state onto a new mesh.
+
+Checkpoints are stored mesh-agnostic (repro.checkpoint saves full arrays +
+partition specs in the manifest), so scale-up/down/axis-reshape is just a
+restore with new shardings. ``replan`` recomputes per-arch shardings for the
+new mesh and validates divisibility, reporting which axes changed.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import sharding as shd
+
+
+@dataclasses.dataclass
+class ReshardReport:
+    old_mesh: tuple
+    new_mesh: tuple
+    n_params: int
+    changed_axes: list
+
+
+def replan(cfg: ModelConfig, params_shape, old_mesh, new_mesh, *,
+           fsdp: bool = False) -> tuple:
+    """-> (new sharding tree, report). Raises if a sharded dim no longer
+    divides the new mesh axis size."""
+    spec = shd.param_specs(cfg, params_shape, fsdp=fsdp)
+    flat_specs = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = jax.tree.leaves(params_shape)
+    changed = []
+    for s, leaf in zip(flat_specs, flat_shapes):
+        for dim, ax in enumerate(tuple(s)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= dict(zip(new_mesh.axis_names, new_mesh.axis_sizes
+                                 if hasattr(new_mesh, "axis_sizes")
+                                 else new_mesh.devices.shape))[a]
+            if leaf.shape[dim] % size != 0:
+                raise ValueError(
+                    f"elastic reshard: dim {dim} of {leaf.shape} not divisible "
+                    f"by new axis {axes}={size}")
+    if tuple(old_mesh.devices.shape) != tuple(new_mesh.devices.shape):
+        changed = [
+            (a, o, n) for a, o, n in zip(
+                new_mesh.axis_names, old_mesh.devices.shape,
+                new_mesh.devices.shape) if o != n
+        ]
+    ns = jax.tree.map(lambda s: NamedSharding(new_mesh, s), spec,
+                      is_leaf=lambda x: isinstance(x, P))
+    report = ReshardReport(
+        old_mesh=tuple(old_mesh.devices.shape),
+        new_mesh=tuple(new_mesh.devices.shape),
+        n_params=len(flat_shapes), changed_axes=changed)
+    return ns, report

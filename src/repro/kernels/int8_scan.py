@@ -1,0 +1,84 @@
+"""int8-quantized filtered scan (beyond-paper memory-bound optimization).
+
+The full-scan strategy is HBM-bandwidth-bound: every query reads N·D·4
+bytes. Block-wise int8 quantization of the DB (per-row absmax scale) cuts
+that 4× — scores are computed on the int8 tile (dequantized in VMEM after
+the MXU dot, not in HBM) and rescaled per row, then masked/top-k'd exactly
+like masked_topk. The ref.py oracle bounds the quantization error; tests
+assert recall@k parity within tolerance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def quantize_rows(vectors: jax.Array):
+    """Per-row absmax int8 quantization. -> (q (N,D) int8, scale (N,) f32)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(vectors), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(vectors / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _kernel(q_ref, vec_ref, scale_ref, scal_ref, lo_ref, hi_ref, act_ref,
+            nrows_ref, out_s_ref, out_i_ref, *, k: int, block_rows: int):
+    i = pl.program_id(0)
+    v = vec_ref[...].astype(jnp.float32)  # int8 tile -> f32 in VMEM
+    q = q_ref[...]  # (1, D) f32
+    scores = jnp.dot(v, q.T, preferred_element_type=jnp.float32)  # (BN, 1)
+    scores = scores * scale_ref[...]  # per-row dequant
+    sc = scal_ref[...]
+    ok = (sc >= lo_ref[...]) & (sc <= hi_ref[...]) | (act_ref[...] < 0.5)
+    ok = jnp.all(ok, axis=1, keepdims=True)
+    row = jax.lax.broadcasted_iota(jnp.int32, (block_rows, 1), 0)
+    gid = i * block_rows + row
+    valid = gid < nrows_ref[0, 0]
+    s = jnp.where(ok & valid, scores, NEG)
+    for j in range(k):
+        m = jnp.max(s)
+        is_max = (s >= m) & (s > NEG / 2)
+        first = jnp.min(jnp.where(is_max, gid, jnp.int32(2**30)))
+        out_s_ref[0, j] = m
+        out_i_ref[0, j] = jnp.where(m > NEG / 2, first, -1)
+        s = jnp.where(gid == first, NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def int8_topk_blocks(q, vec_i8, scales, scalars, lo, hi, active, n_rows, *,
+                     k: int, block_rows: int = 1024, interpret: bool = True):
+    n, d = vec_i8.shape
+    m = scalars.shape[1]
+    assert n % block_rows == 0
+    nb = n // block_rows
+    kern = functools.partial(_kernel, k=k, block_rows=block_rows)
+    out_s, out_i = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q[None, :], vec_i8, scales[:, None], scalars, lo[None, :], hi[None, :],
+      active[None, :].astype(jnp.float32),
+      jnp.asarray(n_rows, jnp.int32).reshape(1, 1))
+    return out_s, out_i

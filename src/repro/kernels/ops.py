@@ -1,0 +1,72 @@
+"""jit'd wrappers: padding, kernel dispatch and the cross-block merge.
+
+``interpret`` defaults to True off-TPU (the kernels execute in Python via
+the Pallas interpreter for correctness validation); on a TPU backend the
+same calls lower through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_scan import int8_topk_blocks, quantize_rows  # noqa: F401
+from repro.kernels.masked_topk import masked_topk_blocks
+
+NEG = -1e30
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x, block_rows, value=0):
+    n = x.shape[0]
+    pad = (-n) % block_rows
+    if pad == 0:
+        return x
+    width = ((0, pad),) + tuple((0, 0) for _ in range(x.ndim - 1))
+    return jnp.pad(x, width, constant_values=value)
+
+
+def _merge(block_s, block_i, k):
+    flat_s = block_s.reshape(-1)
+    flat_i = block_i.reshape(-1)
+    top_s, pos = jax.lax.top_k(flat_s, k)
+    ids = jnp.where(top_s > NEG / 2, flat_i[pos], -1)
+    return top_s, ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "metric",
+                                             "interpret"))
+def masked_topk(q, vectors, scalars, lo, hi, active, *, k: int,
+                block_rows: int = 1024, metric: str = "dot",
+                interpret: bool | None = None):
+    """Fused filtered top-k over the whole table. -> (scores (k,), ids (k,))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = vectors.shape[0]
+    block_rows = min(block_rows, max(8, n))
+    v = _pad_rows(vectors, block_rows)
+    s = _pad_rows(scalars, block_rows)
+    bs, bi = masked_topk_blocks(q, v, s, lo, hi, active, n, k=k,
+                                block_rows=block_rows, metric=metric,
+                                interpret=interpret)
+    return _merge(bs, bi, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def int8_masked_topk(q, vec_i8, scales, scalars, lo, hi, active, *, k: int,
+                     block_rows: int = 1024, interpret: bool | None = None):
+    """Quantized fused filtered top-k. -> (scores (k,), ids (k,))."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = vec_i8.shape[0]
+    block_rows = min(block_rows, max(8, n))
+    v = _pad_rows(vec_i8, block_rows)
+    sc = _pad_rows(scales, block_rows)
+    s = _pad_rows(scalars, block_rows)
+    bs, bi = int8_topk_blocks(q, v, sc, s, lo, hi, active, n, k=k,
+                              block_rows=block_rows, interpret=interpret)
+    return _merge(bs, bi, k)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def masked_topk_ref(q, vectors, scalars, lo, hi, active, n_rows, *, k: int,
+                    metric: str = "dot"):
+    """Exact filtered top-k. Tie-break: smaller row id first (kernel parity).
+
+    Returns (scores (k,), ids (k,)); empty slots score NEG / id -1."""
+    n = vectors.shape[0]
+    scores = vectors @ q
+    if metric == "l2":
+        scores = 2.0 * scores - jnp.sum(vectors * vectors, axis=1)
+    ok = (scalars >= lo) & (scalars <= hi) | ~active.astype(bool)
+    ok = jnp.all(ok, axis=1) & (jnp.arange(n) < n_rows)
+    masked = jnp.where(ok, scores, NEG)
+    # stable tie-break by row id: sort by (-score, id)
+    order = jnp.lexsort((jnp.arange(n), -masked))
+    ids = order[:k]
+    top = masked[ids]
+    return top, jnp.where(top > NEG / 2, ids, -1).astype(jnp.int32)
+
+
+def int8_topk_ref(q, vec_i8, scales, scalars, lo, hi, active, n_rows, *, k: int):
+    """Oracle for the quantized scan (dequantize then exact top-k)."""
+    deq = vec_i8.astype(jnp.float32) * scales[:, None]
+    return masked_topk_ref(q, deq, scalars, lo, hi, active, n_rows, k=k,
+                           metric="dot")

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count on first init. No `from __future__` here for that reason.
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this AOT-compiles the real step function (train / prefill /
+decode) against ShapeDtypeStruct inputs on the production mesh, then records:
+  * memory_analysis()  — per-device argument/temp/output bytes (fits proof)
+  * cost_analysis()    — per-device HLO FLOPs & bytes accessed
+  * collective bytes   — parsed from the optimized per-device HLO, summed by
+    opcode (all-gather / all-reduce / reduce-scatter / all-to-all / permute)
+  * the derived roofline terms (TPU v5e constants; see §Roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.jsonl
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config, shape_applicable
+from repro.launch.input_specs import batch_struct, decode_structs, serve_params_struct
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.plans import (prefill_cfg_overrides, train_cfg_overrides,
+                                train_plan)
+from repro.models import lm, sharding
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.train.step import init_state, make_train_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes by collective opcode, from optimized HLO text.
+
+    Uses result sizes (≈ bytes received per device); reduce-scatter results
+    are scaled back up by the group size to count operand bytes."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if not ls.startswith("%") and not ls.startswith("ROOT"):
+            continue
+        m = re.match(r"(?:ROOT )?%[\w.\-]+ = (.*?) ([\w\-]+)\(", ls)
+        if not m:
+            continue
+        type_str, opcode = m.group(1), m.group(2)
+        base = opcode.rstrip("-start").rstrip(".")
+        for coll in _COLLECTIVES:
+            if opcode == coll or opcode == coll + "-start":
+                b = _type_bytes(type_str)
+                if coll == "reduce-scatter":
+                    g = re.search(r"replica_groups=\[\d+,(\d+)\]", ls)
+                    if g:
+                        b *= int(g.group(1))
+                out[coll] += b
+                counts[coll] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh, cfg_overrides=None,
+               plan_overrides=None):
+    """-> (fn, args, in_shardings, out_shardings, meta)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    # production defaults derived in §Perf (overridable via --set / --baseline)
+    if cfg_overrides is None or "baseline" not in (cfg_overrides or {}):
+        auto = (train_cfg_overrides(arch) if shape.step == "train"
+                else prefill_cfg_overrides(arch) if shape.step == "prefill"
+                else {})
+        cfg = _dc.replace(cfg, **auto)
+    if cfg_overrides:
+        cfg_overrides = {k: v for k, v in cfg_overrides.items() if k != "baseline"}
+        if cfg_overrides:
+            cfg = _dc.replace(cfg, **cfg_overrides)
+    daxes = data_axes(mesh)
+    bax = daxes if len(daxes) > 1 else daxes[0]
+
+    if shape.step == "train":
+        plan = train_plan(arch)
+        if plan_overrides:
+            plan = _dc.replace(plan, **plan_overrides)
+        act = sharding.activation_spec(daxes, seq_shard=plan.seq_shard_acts) \
+            if plan.seq_shard_acts else None
+        state_shape = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg, plan))
+        pspec = sharding.param_specs(cfg, state_shape[0], fsdp=plan.fsdp)
+        step = sharding.with_act_axes(
+            make_train_step(cfg, plan, act_spec=act, batch_axes=daxes,
+                            grad_specs=pspec), bax, mesh=mesh)
+        ospec = sharding.opt_state_specs(pspec, state_shape[1])
+        bspec = sharding.batch_specs(cfg, batch_struct(cfg, shape, with_labels=True),
+                                     daxes)
+        args = (state_shape[0], state_shape[1],
+                batch_struct(cfg, shape, with_labels=True))
+        in_sh = (_ns(mesh, pspec), _ns(mesh, ospec), _ns(mesh, bspec))
+        out_sh = (_ns(mesh, pspec), _ns(mesh, ospec), NamedSharding(mesh, P()))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.n_active_params() * tokens
+        return step, args, in_sh, out_sh, {"tokens": tokens,
+                                           "model_flops": model_flops,
+                                           "donate": (0, 1)}
+
+    params = serve_params_struct(cfg)
+    pshape = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    # serving shards weights over data too (weight-stationary; required to
+    # fit the MoE giants' 1-2 TB of bf16 expert weights on 16 GB chips)
+    pspec = sharding.param_specs(cfg, pshape, fsdp=cfg.family == "moe",
+                                 moe_shard_ffn_dim=True)
+
+    if shape.step == "prefill":
+        step = sharding.with_act_axes(
+            make_prefill_step(cfg, max_len=shape.seq_len), bax, mesh=mesh)
+        batch = batch_struct(cfg, shape, with_labels=False)
+        bspec = sharding.batch_specs(cfg, batch, daxes)
+        cache_shape = jax.eval_shape(
+            lambda: lm.make_cache(cfg, shape.global_batch, shape.seq_len,
+                                  dtype="bfloat16"))
+        cspec = sharding.cache_specs(cfg, cache_shape, daxes)
+        args = (params, batch)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, bspec))
+        out_sh = (NamedSharding(mesh, P(bax, "model")), _ns(mesh, cspec))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.n_active_params() * tokens
+        return step, args, in_sh, out_sh, {"tokens": tokens,
+                                           "model_flops": model_flops}
+
+    # decode
+    shard_b = shape.global_batch > 1
+    step = sharding.with_act_axes(make_decode_step(cfg), bax if shard_b else None,
+                                  mesh=mesh)
+    inputs, pos, cache = decode_structs(cfg, shape)
+    shard_batch = shape.global_batch > 1
+    cspec = sharding.cache_specs(cfg, cache, daxes, shard_batch=shard_batch)
+    ispec = jax.tree.map(
+        lambda l: P(bax, *([None] * (len(l.shape) - 1))) if shard_batch else P(),
+        inputs)
+    args = (params, inputs, pos, cache)
+    in_sh = (_ns(mesh, pspec), _ns(mesh, ispec), NamedSharding(mesh, P()),
+             _ns(mesh, cspec))
+    lspec = P(bax, "model") if shard_batch else P(None, "model")
+    out_sh = (NamedSharding(mesh, lspec), _ns(mesh, cspec))
+    tokens = shape.global_batch
+    model_flops = 2.0 * cfg.n_active_params() * tokens
+    return step, args, in_sh, out_sh, {"tokens": tokens,
+                                       "model_flops": model_flops,
+                                       "donate": (3,)}  # cache aliases in/out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, cfg_overrides=None,
+             plan_overrides=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.perf_counter()
+    with mesh:
+        fn, args, in_sh, out_sh, meta = build_cell(
+            arch, shape_name, mesh, cfg_overrides, plan_overrides)
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=meta.get("donate", ())).lower(*args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        from repro.launch import hlo_analysis
+        hlo = hlo_analysis.analyze(compiled.as_text())
+        coll = {**hlo["collectives"], "counts": hlo["collective_counts"],
+                "unknown_trip_whiles": hlo["unknown_trip_whiles"]}
+
+    # scan-aware per-device costs (hlo_analysis multiplies while-loop bodies
+    # by their trip counts; raw cost_analysis counts each body once)
+    flops_dev = float(hlo["flops"])
+    bytes_dev = float(hlo["bytes"])
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    model_flops_dev = meta["model_flops"] / n_dev
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll["total"] / LINK_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "n_dev": n_dev,
+        "tag": tag,
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "raw_cost_flops": raw_flops, "raw_cost_bytes": raw_bytes,
+        "collectives": coll,
+        "arg_bytes_per_dev": mem.argument_size_in_bytes,
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "out_bytes_per_dev": mem.output_size_in_bytes,
+        "alias_bytes_per_dev": mem.alias_size_in_bytes,
+        "peak_hbm_gib": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                         + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes) / 2**30,
+        "model_flops_per_dev": model_flops_dev,
+        "useful_flop_ratio": model_flops_dev / flops_dev if flops_dev else 0.0,
+        **terms,
+        "dominant": dom,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] "
+              f"flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e} "
+              f"coll/dev={coll['total']:.3e}B peak_hbm={rec['peak_hbm_gib']:.2f}GiB "
+              f"| compute={t_comp*1e3:.1f}ms memory={t_mem*1e3:.1f}ms "
+              f"coll={t_coll*1e3:.1f}ms -> {dom} "
+              f"| useful={rec['useful_flop_ratio']:.2f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (perf iterations)")
+    ap.add_argument("--plan-set", action="append", default=[],
+                    help="train-plan override key=value")
+    ap.add_argument("--tag", default="", help="label for the record")
+    args = ap.parse_args()
+
+    def _parse_over(items):
+        out = {}
+        for it in items:
+            k, v = it.split("=", 1)
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = {"true": True, "false": False}.get(v.lower(), v)
+        return out
+
+    cfg_over = _parse_over(args.set)
+    plan_over = _parse_over(args.plan_set)
+
+    from repro import configs  # populate registry
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               cfg_overrides=cfg_over or None,
+                               plan_overrides=plan_over or None, tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures.append(rec)
+                print(f"[{arch} × {shape}] FAILED: {rec['error']}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed")
+
+
+if __name__ == "__main__":
+    main()

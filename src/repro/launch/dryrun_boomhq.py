@@ -1,0 +1,121 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+# (device-count override must precede any jax import; see dryrun.py)
+DOC = """BoomHQ-technique dry-run: the distributed MHQ full-scan path at
+production scale (the §Perf 'most representative of the paper's technique'
+cell).
+
+DB: 2 vector columns × 268M rows × 768 dims, 4 scalar columns, sharded over
+the data axis of the 16×16 mesh (1M rows/device). Variants:
+  C0  f32 DB, one query per step      (paper-faithful baseline)
+  C1  f32 DB, 64-query batch          (amortize the DB read over queries)
+  C2  int8 DB + per-row scales, 64-q  (4× less HBM per pass; kernels/int8_scan)
+
+Usage: python -m repro.launch.dryrun_boomhq [--rows-per-dev 1048576] [--out f]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.vectordb.distributed import sharded_masked_scan_batched
+from repro.vectordb.predicates import Predicates
+
+
+def _stacked_preds(q_batch: int, m: int):
+    return Predicates(
+        active=jax.ShapeDtypeStruct((q_batch, m), jnp.bool_),
+        lo=jax.ShapeDtypeStruct((q_batch, m), jnp.float32),
+        hi=jax.ShapeDtypeStruct((q_batch, m), jnp.float32),
+    )
+
+
+def run_variant(name: str, *, q_batch: int, int8: bool, rows_per_dev: int,
+                d: int = 768, n_vec: int = 2, m: int = 4, k: int = 10,
+                multi_pod: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    daxes = data_axes(mesh)
+    n_data = 1
+    for a in daxes:
+        n_data *= mesh.shape[a]
+    n = rows_per_dev * n_data
+    vt = jnp.int8 if int8 else jnp.float32
+    vectors = tuple(jax.ShapeDtypeStruct((n, d), vt) for _ in range(n_vec))
+    scales = tuple(jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(n_vec))
+    scalars = jax.ShapeDtypeStruct((n, m), jnp.float32)
+    qs = tuple(jax.ShapeDtypeStruct((q_batch, d), jnp.float32)
+               for _ in range(n_vec))
+    w = jax.ShapeDtypeStruct((q_batch, n_vec), jnp.float32)
+    preds = _stacked_preds(q_batch, m)
+
+    fn = sharded_masked_scan_batched(mesh, daxes, k=k, n_vec=n_vec, int8=int8)
+    t0 = time.perf_counter()
+    dummy = jax.ShapeDtypeStruct((), jnp.float32)
+    with mesh:
+        lowered = fn.lower(vectors, scales if int8 else dummy, scalars,
+                           preds, qs, w)
+        compiled = lowered.compile()
+    hlo = hlo_analysis.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    dt = time.perf_counter() - t0
+    # per-QUERY roofline terms
+    flops_q = hlo["flops"] / q_batch
+    bytes_q = hlo["bytes"] / q_batch
+    coll_q = hlo["collectives"]["total"] / q_batch
+    model_flops_q = 2.0 * n * d * n_vec / (n_data)  # useful scoring flops/dev
+    rec = {
+        "variant": name, "q_batch": q_batch, "int8": int8,
+        "rows": n, "rows_per_dev": rows_per_dev,
+        "flops_per_dev_per_q": flops_q, "bytes_per_dev_per_q": bytes_q,
+        "coll_bytes_per_dev_per_q": coll_q,
+        "compute_s": flops_q / PEAK_FLOPS,
+        "memory_s": bytes_q / HBM_BW,
+        "collective_s": coll_q / LINK_BW,
+        "useful_flop_ratio": model_flops_q / flops_q if flops_q else 0.0,
+        "db_gib_per_dev": (rows_per_dev * d * n_vec * (1 if int8 else 4)
+                           + rows_per_dev * m * 4) / 2**30,
+        "arg_gib_per_dev": mem.argument_size_in_bytes / 2**30,
+        "compile_s": round(dt, 1),
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda t: rec[t])
+    rec["dominant"] = dom
+    print(f"[boomhq-scan {name}] per-query/dev: flops={flops_q:.3e} "
+          f"bytes={bytes_q:.3e} coll={coll_q:.3e}B | "
+          f"compute={rec['compute_s']*1e3:.3f}ms memory={rec['memory_s']*1e3:.3f}ms "
+          f"coll={rec['collective_s']*1e3:.4f}ms -> {dom} "
+          f"| db/dev={rec['db_gib_per_dev']:.2f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows-per-dev", type=int, default=1_048_576)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    variants = [
+        ("C0_f32_q1", dict(q_batch=1, int8=False)),
+        ("C1_f32_q64", dict(q_batch=64, int8=False)),
+        ("C2_int8_q64", dict(q_batch=64, int8=True)),
+    ]
+    recs = []
+    for name, kw in variants:
+        recs.append(run_variant(name, rows_per_dev=args.rows_per_dev,
+                                multi_pod=args.multi_pod, **kw))
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in recs:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Scan-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+program built on ``lax.scan`` (our layer stacks, microbatch accumulation,
+q-chunked attention) under-reports FLOPs/bytes/collectives by the trip
+count. This module re-derives per-device costs from ``compiled.as_text()``:
+
+  * builds the computation call graph (fusions, calls, while bodies),
+  * multiplies while-body costs by ``known_trip_count`` (CPU/TPU backends
+    emit it in backend_config; missing counts fall back to 1 and are
+    reported in ``unknown_trips``),
+  * FLOPs: 2·out·contract for every ``dot``, window flops for convolutions,
+  * bytes: Σ (operand + result buffer sizes) of top-level (post-fusion)
+    instructions — the same convention as XLA's "bytes accessed",
+  * collective bytes by opcode (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), result-size based; reduce-scatter
+    scaled up by group size to count operand bytes.
+
+Everything is per-device (the SPMD-partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt in _DTYPE_BYTES:
+            total += _shape_elems(m.group(2)) * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    # (callee, multiplier, is_fusion)
+    calls: list = dataclasses.field(default_factory=list)
+    is_fusion_callee: bool = False
+
+
+def _split_computations(text: str) -> dict[str, tuple[bool, list[str]]]:
+    comps: dict[str, tuple[bool, list[str]]] = {}
+    cur, lines, entry = None, [], False
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            entry = bool(m.group(1))
+            lines = []
+            comps[cur] = (entry, lines)
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                lines.append(line)
+    return comps
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+
+def analyze(text: str) -> dict:
+    raw = _split_computations(text)
+    comps: dict[str, _Comp] = {}
+    result_types: dict[str, str] = {}
+    entry_name = None
+
+    # first pass: result types of every instruction (for operand byte lookups)
+    for name, (entry, lines) in raw.items():
+        if entry:
+            entry_name = name
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                result_types[m.group(1)] = m.group(2)
+
+    unknown_trips = 0
+    fusion_callees = set()
+
+    for name, (entry, lines) in raw.items():
+        c = _Comp(name)
+        comps[name] = c
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, type_str, opcode = m.groups()
+
+            # --- flops ---
+            if opcode == "dot":
+                out_elems = sum(_shape_elems(s.group(2))
+                                for s in _SHAPE_RE.finditer(type_str))
+                lhs = re.search(r"dot\(%?([\w.\-]+)", line)
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                contract = 1
+                if lhs and cd and lhs.group(1) in result_types:
+                    lhs_type = result_types[lhs.group(1)]
+                    sm = _SHAPE_RE.search(lhs_type)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for idx in cd.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                contract *= dims[int(idx)]
+                c.flops += 2.0 * out_elems * contract
+            elif opcode == "convolution":
+                out_elems = sum(_shape_elems(s.group(2))
+                                for s in _SHAPE_RE.finditer(type_str))
+                win = re.search(r"window=\{size=([\dx]+)", line)
+                k = 1
+                if win:
+                    for d in win.group(1).split("x"):
+                        k *= int(d)
+                c.flops += 2.0 * out_elems * k
+
+            # --- collectives ---
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVES:
+                b = _type_bytes(type_str)
+                if base == "reduce-scatter":
+                    g = re.search(r"replica_groups=\[\d+,(\d+)\]", line)
+                    if g:
+                        b *= int(g.group(1))
+                c.coll[base] += b
+                c.coll_counts[base] += 1
+
+            # --- bytes accessed (top-level ops only; fusions counted whole) ---
+            if opcode not in _SKIP_BYTES_OPS and not opcode.endswith("-done"):
+                b = _type_bytes(type_str)
+                for op in re.finditer(r"%([\w.\-]+)", line.split("(", 1)[1]
+                                      if "(" in line else ""):
+                    t = result_types.get(op.group(1))
+                    if t:
+                        b += _type_bytes(t)
+                c.bytes += b
+
+            # --- call graph ---
+            if opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", line)
+                if fm:
+                    c.calls.append((fm.group(1), 1.0, True))
+                    fusion_callees.add(fm.group(1))
+            elif opcode in ("call", "custom-call", "map", "reduce",
+                            "reduce-window", "sort", "scatter", "select-and-scatter"):
+                fm = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", line)
+                if fm and opcode in ("call", "custom-call"):
+                    c.calls.append((fm.group(1), 1.0, True))
+                    fusion_callees.add(fm.group(1))
+            elif opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                tm = re.search(r'known_trip_count[\\"=:{]+n[\\":]+(\d+)', line)
+                trip = float(tm.group(1)) if tm else 1.0
+                if not tm:
+                    unknown_trips += 1
+                if bm:
+                    c.calls.append((bm.group(1), trip, False))
+                if cm:
+                    c.calls.append((cm.group(1), trip, False))
+            elif opcode == "conditional":
+                bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        c.calls.append((b.strip().lstrip("%"), 1.0, False))
+
+    # fusion callees contribute flops/collectives but NOT byte counts
+    # (their traffic is the fusion op's operands/results, already counted)
+    memo: dict[str, tuple[float, float, dict, dict]] = {}
+
+    def total(name: str, as_fusion: bool):
+        key = name
+        if key in memo:
+            f, b, co, cc = memo[key]
+        else:
+            c = comps.get(name)
+            if c is None:
+                memo[key] = (0.0, 0.0, {}, {})
+                f, b, co, cc = memo[key]
+            else:
+                f, b = c.flops, c.bytes
+                co = dict(c.coll)
+                cc = dict(c.coll_counts)
+                for callee, mult, is_fused in c.calls:
+                    cf, cb, cco, ccc = total(callee, is_fused)
+                    f += mult * cf
+                    b += mult * cb
+                    for k, v in cco.items():
+                        co[k] = co.get(k, 0) + mult * v
+                    for k, v in ccc.items():
+                        cc[k] = cc.get(k, 0) + mult * v
+                memo[key] = (f, b, co, cc)
+        if as_fusion:
+            return f, 0.0, co, cc  # drop byte counts for fused interiors
+        return f, b, co, cc
+
+    # callees of fusions: byte counts suppressed at the call edge above; but a
+    # computation reachable both ways is rare — acceptable approximation.
+    f, b, co, cc = total(entry_name, False)
+    co = {k: co.get(k, 0.0) for k in COLLECTIVES}
+    co["total"] = sum(co.values())
+    return {
+        "flops": f,
+        "bytes": b,
+        "collectives": co,
+        "collective_counts": {k: cc.get(k, 0) for k in COLLECTIVES},
+        "unknown_trip_whiles": unknown_trips,
+    }

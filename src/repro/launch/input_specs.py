@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape_name)`` returns the abstract inputs for the step
+that shape lowers (train_* -> train_step batch; prefill_* -> prefill batch;
+decode_*/long_* -> (inputs, pos, cache)). Weak-type-correct and shardable —
+the dry-run lowers against these exclusively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec, get_config
+from repro.models import lm
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool) -> dict:
+    """Train/prefill batch: tokens/labels (+ modality stub embeddings)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: dict = {}
+    if cfg.modality == "vlm":
+        s_tok = s - cfg.n_prefix_embeds
+        out["patch_embeds"] = _sds((b, cfg.n_prefix_embeds, cfg.d_model), BF16)
+        out["tokens"] = _sds((b, s_tok), I32)
+        if with_labels:
+            out["labels"] = _sds((b, s_tok), I32)
+    elif cfg.inputs_are_embeds:
+        out["embeds"] = _sds((b, s, cfg.d_model), BF16)
+        if with_labels:
+            out["labels"] = _sds((b, s), I32)
+    else:
+        out["tokens"] = _sds((b, s), I32)
+        if with_labels:
+            out["labels"] = _sds((b, s), I32)
+    return out
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeSpec):
+    """-> (inputs, pos, cache) abstract values for one decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.inputs_are_embeds:
+        inputs = {"embed": _sds((b, cfg.d_model), BF16)}
+    else:
+        inputs = {"token": _sds((b,), I32)}
+    pos = _sds((), I32)
+    cache = jax.eval_shape(lambda: lm.make_cache(cfg, b, s, dtype="bfloat16"))
+    return inputs, pos, cache
+
+
+def serve_params_struct(cfg: ModelConfig, dtype: str = "bfloat16"):
+    """Abstract parameter tree with float leaves cast to the serving dtype."""
+    shape = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, dt if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+        shape)
+
+
+def input_specs(arch: str, shape_name: str, *, smoke: bool = False):
+    """The assigned deliverable: abstract inputs for (arch × shape)."""
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    if shape.step == "train":
+        return {"batch": batch_struct(cfg, shape, with_labels=True)}
+    if shape.step == "prefill":
+        return {"batch": batch_struct(cfg, shape, with_labels=False)}
+    inputs, pos, cache = decode_structs(cfg, shape)
+    return {"inputs": inputs, "pos": pos, "cache": cache}

@@ -1,0 +1,69 @@
+"""Per-architecture execution plans (microbatching, optimizer, FSDP, SP).
+
+Sizing rationale (16 GB HBM v5e chips, DESIGN.md §5 / EXPERIMENTS.md §Dry-run):
+  * dense 1.6B–14B   — AdamW with int8 moments; activations bounded by
+    microbatching the 1M-token train_4k batch down to ~1–2 GB of layer
+    carries per device.
+  * MoE giants       — Adafactor (factored second moment), bf16 params,
+    FSDP over `data` (XLA all-gathers each layer's experts inside the
+    scan), sequence-sharded residual carries (SP), 4 microbatches.
+  * SSM/hybrid       — small models; modest microbatching.
+"""
+from __future__ import annotations
+
+from repro.train.step import TrainPlan
+
+TRAIN_PLANS: dict[str, TrainPlan] = {
+    "gemma-7b": TrainPlan(microbatches=8, state_dtype="int8"),
+    "qwen3-14b": TrainPlan(microbatches=16, state_dtype="int8"),
+    "phi3-mini-3.8b": TrainPlan(microbatches=8, state_dtype="int8"),
+    "stablelm-1.6b": TrainPlan(microbatches=4, state_dtype="int8"),
+    "llava-next-mistral-7b": TrainPlan(microbatches=8, state_dtype="int8"),
+    "musicgen-large": TrainPlan(microbatches=8, state_dtype="int8"),
+    "zamba2-2.7b": TrainPlan(microbatches=16, state_dtype="int8"),
+    # giants: mb=2 after §Perf iteration B5 (FSDP weight re-gathers scale
+    # with the microbatch count; SP-sharded carries keep activations bounded)
+    "kimi-k2-1t-a32b": TrainPlan(
+        microbatches=2, optimizer="adafactor", param_dtype="bfloat16",
+        fsdp=True, seq_shard_acts=True, grad_accum_dtype="bfloat16"),
+    "deepseek-v3-671b": TrainPlan(
+        microbatches=2, optimizer="adafactor", param_dtype="bfloat16",
+        fsdp=True, seq_shard_acts=True, grad_accum_dtype="bfloat16"),
+    "mamba2-370m": TrainPlan(microbatches=2, state_dtype="int8"),
+}
+
+# serving always runs bf16 params / bf16 caches
+SERVE_PARAM_DTYPE = "bfloat16"
+
+# §Perf-derived per-step config overrides (see EXPERIMENTS.md §Perf):
+#   * prefill: flash attention (iteration A2) — online softmax kills the
+#     (B,H,cq,S) score traffic; NOT used for training (the scan-of-scan
+#     backward re-saves per-iteration carries without a custom VJP);
+#   * MoE: sequence sub-groups shrink the GShard dispatch tensors (A1/B2).
+TRAIN_CFG_OVERRIDES: dict[str, dict] = {
+    # scatter-based expert parallelism (§Perf B7): −24% collectives,
+    # useful 0.47→0.52 vs the grouped-einsum dispatch on deepseek train
+    "deepseek-v3-671b": {"moe_impl": "sharded"},
+    "kimi-k2-1t-a32b": {"moe_impl": "sharded"},
+}
+# Flash helps when the score matrix dwarfs K/V traffic (many heads per
+# device, large batch — the MoE giants: −69..82% on the dominant term);
+# on the small-head dense cells its per-kv-block carry traffic REGRESSED
+# the counted bytes 80-230% (final-sweep A/B), so it is opt-in per arch.
+PREFILL_CFG_OVERRIDES_COMMON: dict = {}
+PREFILL_CFG_OVERRIDES: dict[str, dict] = {
+    "deepseek-v3-671b": {"flash_attention": True, "moe_group_tokens": 2048},
+    "kimi-k2-1t-a32b": {"flash_attention": True, "moe_group_tokens": 2048},
+}
+
+
+def train_plan(arch: str) -> TrainPlan:
+    return TRAIN_PLANS[arch]
+
+
+def train_cfg_overrides(arch: str) -> dict:
+    return TRAIN_CFG_OVERRIDES.get(arch, {})
+
+
+def prefill_cfg_overrides(arch: str) -> dict:
+    return PREFILL_CFG_OVERRIDES.get(arch, dict(PREFILL_CFG_OVERRIDES_COMMON))

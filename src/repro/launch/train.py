@@ -1,0 +1,118 @@
+"""Production training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m --smoke \
+      --steps 50 --ckpt /tmp/run1 --resume auto
+
+Wires together: config registry, data pipeline, train-step builder, sharded
+checkpointing (auto-resume from the newest valid manifest), the preemption
+guard and the straggler watchdog. On a real pod the same entry point runs
+under `jax.distributed.initialize()`; on this CPU container use --smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import ckpt
+from repro.data.pipeline import BatchSpec, make_source
+from repro.distributed.fault_tolerance import PreemptionGuard, StepWatchdog
+from repro.launch.plans import TRAIN_PLANS
+from repro.train.step import TrainPlan, init_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--schedule-total", type=int, default=None,
+                    help="LR-schedule horizon (defaults to --steps); pass the full-run horizon when training in resumable legs")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    base = TRAIN_PLANS.get(args.arch, TrainPlan())
+    total = args.schedule_total or args.steps
+    plan = TrainPlan(
+        microbatches=args.microbatches, remat=base.remat,
+        optimizer=base.optimizer, state_dtype=base.state_dtype,
+        lr=args.lr, warmup=max(1, total // 10), total_steps=total)
+
+    params, opt_state = init_state(jax.random.PRNGKey(args.seed), cfg, plan)
+    step_fn = jax.jit(make_train_step(cfg, plan))
+
+    spec = BatchSpec(args.global_batch, args.seq_len, cfg.vocab)
+    src = make_source("synthetic", spec, seed=args.seed)
+
+    start = 0
+    if args.ckpt and args.resume == "auto":
+        latest = ckpt.latest_step(args.ckpt)
+        if latest is not None:
+            start, tree, meta = ckpt.restore(
+                args.ckpt, like={"params": params, "opt": opt_state})
+            params, opt_state = tree["params"], tree["opt"]
+            print(f"resumed from step {start}")
+
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog()
+    losses = []
+    for step in range(start, args.steps):
+        batch = src.batch_at(step)
+        feed = _adapt_batch(cfg, batch)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, feed)
+        loss = float(metrics["loss"])
+        watchdog.record(time.perf_counter() - t0)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"p50 {watchdog.p50()*1e3:.0f}ms"
+                  + (" [STRAGGLER]" if watchdog.flagged else ""))
+        do_ckpt = args.ckpt and (
+            (step + 1) % args.ckpt_every == 0 or step == args.steps - 1
+            or guard.should_checkpoint)
+        if do_ckpt:
+            ckpt.save(args.ckpt, step + 1, {"params": params, "opt": opt_state},
+                      meta={"arch": args.arch, "loss": loss})
+        if guard.should_checkpoint:
+            print(f"preempted at step {step + 1}; checkpointed; exiting")
+            break
+    guard.restore()
+    if len(losses) >= 10:
+        print(f"loss: first10={np.mean(losses[:10]):.4f} "
+              f"last10={np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+def _adapt_batch(cfg, batch):
+    """Token batch -> the arch's input dict (modality stubs)."""
+    tokens = jnp.asarray(batch["tokens"])
+    labels = jnp.asarray(batch["labels"])
+    b, s = tokens.shape
+    if cfg.modality == "vlm":
+        npre = min(cfg.n_prefix_embeds, s // 2)
+        rng = np.random.default_rng(int(tokens[0, 0]))
+        patches = jnp.asarray(rng.normal(size=(b, npre, cfg.d_model)), jnp.float32)
+        return {"tokens": tokens[:, npre:], "labels": labels[:, npre:],
+                "patch_embeds": patches}
+    if cfg.inputs_are_embeds:
+        emb = jax.nn.one_hot(tokens % cfg.d_model, cfg.d_model, dtype=jnp.float32)
+        return {"embeds": emb, "labels": labels % cfg.vocab}
+    return {"tokens": tokens % cfg.vocab, "labels": labels % cfg.vocab}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import attention, ffn, lm, mamba2, moe, rotary  # noqa: F401

@@ -1,0 +1,372 @@
+"""Attention variants: GQA (with qk-norm, partial rotary, softcap) and MLA.
+
+Full-sequence attention (train / prefill) is **q-chunked** (flash-style
+online computation is unnecessary when K/V stay resident: we scan over query
+blocks so the score matrix never exceeds (B, H, q_chunk, S) — this is what
+keeps prefill_32k inside HBM; see EXPERIMENTS.md §Dry-run).
+
+Decode attends one new token against a (B, S_max, ...) cache updated in
+place with ``dynamic_update_slice``.
+
+MLA (deepseek-v3) implements the **absorbed** decode path: the cache stores
+only the compressed (c_kv, k_rope) stream — 576 f-elements/token instead of
+n_heads·(192+128) — and W_uk/W_uv are folded into the query/output einsums.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.configs.base import ModelConfig
+from repro.models.rotary import apply_rope
+
+
+def _cb(x, dim: int = 0):
+    from repro.models.sharding import constrain_batch
+    return constrain_batch(x, dim)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def _qk_norm_apply(p, x, eps):
+    # per-head RMS norm over head_dim (qwen3 style)
+    return nn.rmsnorm_apply(p, x, eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": nn.lecun_normal(ks[0], (d, h * hd), dtype=dtype),
+        "wk": nn.lecun_normal(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": nn.lecun_normal(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": nn.lecun_normal(ks[3], (h * hd, d), fan_in=h * hd, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(hd, dtype)
+        p["k_norm"] = nn.rmsnorm_init(hd, dtype)
+    return p
+
+
+def _gqa_qkv(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope + qk-norm applied."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = _qk_norm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = _qk_norm_apply(p["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+    return _cb(q), _cb(k), _cb(v)
+
+
+def chunked_causal_attention(q, k, v, *, q_chunk: int, scale: float,
+                             softcap: float = 0.0, q_offset=0):
+    """Grouped causal attention, scanning over query blocks.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). H % KV == 0. q position i
+    attends to k positions <= q_offset + i. Returns (B, Sq, H, hd_v).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, hdv = v.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    k_pos = jnp.arange(sk)
+
+    n_chunks = max(1, sq // q_chunk)
+    assert sq % n_chunks == 0, (sq, q_chunk)
+    cq = sq // n_chunks
+    qg = _cb(qg.reshape(b, n_chunks, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5), 1)
+
+    def one_chunk(ci, qc):
+        # qc: (B, cq, KV, G, hd)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        q_pos = q_offset + ci * cq + jnp.arange(cq)
+        causal = k_pos[None, :] <= q_pos[:, None]  # (cq, sk)
+        scores = jnp.where(causal[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return _cb(jnp.einsum("bkgqs,bskh->bqkgh", probs, v))
+
+    if n_chunks == 1:
+        out = one_chunk(0, qg[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qg))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hdv)
+    return out
+
+
+def flash_causal_attention(q, k, v, *, q_chunk: int, kv_chunk: int,
+                           scale: float, softcap: float = 0.0, q_offset=0):
+    """Online-softmax (flash) causal attention: the running (m, l, acc)
+    carry means no (B, H, cq, S) score matrix ever materializes — HBM
+    traffic is O(S·ckv) per query block instead of O(S²).
+
+    Shapes as chunked_causal_attention. Returns (B, Sq, H, hd_v)."""
+    b, sq, h, hd = q.shape
+    _, sk, kvh, hdv = v.shape
+    g = h // kvh
+    nq = max(1, sq // q_chunk)
+    assert sq % nq == 0
+    cq = sq // nq
+    nk = max(1, sk // kv_chunk)
+    assert sk % nk == 0
+    ck = sk // nk
+    qg = _cb(q.reshape(b, nq, cq, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5), 1)
+    kc = _cb(k.reshape(b, nk, ck, kvh, hd).transpose(1, 0, 3, 2, 4), 1)
+    vc = _cb(v.reshape(b, nk, ck, kvh, hdv).transpose(1, 0, 3, 2, 4), 1)
+
+    def one_q_chunk(args):
+        qi, qc = args  # qc: (B, KV, G, cq, hd)
+        q_pos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, kb, vb = inputs  # kb: (B, KV, ck, hd)
+            s = jnp.einsum("bkgqh,bksh->bkgqs", qc, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            k_pos = kj * ck + jnp.arange(ck)
+            causal = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(causal[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksh->bkgqh", p.astype(vb.dtype), vb)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, hdv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(one_q_chunk, (jnp.arange(nq), qg))  # (nq,B,KV,G,cq,hdv)
+    out = _cb(out, 1).transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hdv)
+    return _cb(out.astype(v.dtype))
+
+
+def full_attention(cfg: ModelConfig, q, k, v, *, scale, softcap=0.0, q_offset=0):
+    if cfg.flash_attention:
+        return flash_causal_attention(
+            q, k, v, q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv,
+            scale=scale, softcap=softcap, q_offset=q_offset)
+    return chunked_causal_attention(q, k, v, q_chunk=cfg.attn_chunk_q,
+                                    scale=scale, softcap=softcap,
+                                    q_offset=q_offset)
+
+
+def gqa_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Full-sequence causal self-attention (train / prefill). x (B,S,D)."""
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    out = full_attention(cfg, q, k, v, scale=scale,
+                         softcap=cfg.attn_logit_softcap)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def gqa_make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def gqa_prefill(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array, cache: dict):
+    """Run full attention AND fill the cache with k/v. Returns (y, cache)."""
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    out = full_attention(cfg, q, k, v, scale=scale,
+                         softcap=cfg.attn_logit_softcap)
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, -1) @ p["wo"]
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    return y, cache
+
+
+def gqa_decode(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array, cache: dict):
+    """One-token decode. x (B,1,D); pos () current position. Returns (y, cache)."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)  # squeeze S=1
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, ck,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    valid = jnp.arange(ck.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, cv).reshape(b, 1, h * hd)
+    return out @ p["wo"], {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq_a": nn.lecun_normal(ks[0], (d, qr), dtype=dtype),
+        "q_norm": nn.rmsnorm_init(qr, dtype),
+        "wq_b": nn.lecun_normal(ks[1], (qr, h * (nope + rope_d)), fan_in=qr, dtype=dtype),
+        "wkv_a": nn.lecun_normal(ks[2], (d, kvr + rope_d), dtype=dtype),
+        "kv_norm": nn.rmsnorm_init(kvr, dtype),
+        "wkv_b": nn.lecun_normal(ks[3], (kvr, h * (nope + vd)), fan_in=kvr, dtype=dtype),
+        "wo": nn.lecun_normal(ks[4], (h * vd, d), fan_in=h * vd, dtype=dtype),
+    }
+
+
+def _mla_q(p, cfg: ModelConfig, x, positions):
+    """-> q_nope (B,S,H,nope), q_rope (B,S,H,rope) with rope applied."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = nn.rmsnorm_apply(p["q_norm"], x @ p["wq_a"], eps=cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return _cb(q_nope), _cb(q_rope)
+
+
+def _mla_kv_compressed(p, cfg: ModelConfig, x, positions):
+    """-> c_kv (B,S,kvr) normalized, k_rope (B,S,rope) rope applied (shared)."""
+    kvr, rope_d = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = x @ p["wkv_a"]
+    c_kv = nn.rmsnorm_apply(p["kv_norm"], kv[..., :kvr], eps=cfg.norm_eps)
+    k_rope = apply_rope(kv[..., kvr:], positions, theta=cfg.rope_theta)
+    return _cb(c_kv), _cb(k_rope)
+
+
+def mla_apply(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Full-sequence MLA (train / prefill), expanded (non-absorbed) form."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_compressed(p, cfg, x, positions)
+    kvb = (c_kv @ p["wkv_b"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kvb[..., :nope], kvb[..., nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, s, h, rope_d))],
+                        axis=-1)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    out = full_attention(cfg, q, k, v, scale=scale)
+    return out.reshape(b, s, h * vd) @ p["wo"]
+
+
+def mla_make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p, cfg: ModelConfig, x, positions, cache: dict):
+    y = mla_apply(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_compressed(p, cfg, x, positions)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, 0, 0)),
+    }
+    return y, cache
+
+
+def mla_decode(p, cfg: ModelConfig, x: jax.Array, pos: jax.Array, cache: dict):
+    """Absorbed one-token MLA decode against the compressed cache.
+
+    W_uk is folded into the query (q_c = q_nope·W_uk) and W_uv into the
+    output, so attention runs entirely in the kv_lora_rank space.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope_d, vd, kvr = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                             cfg.v_head_dim, cfg.kv_lora_rank)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)  # (B,1,H,·)
+    c_kv_new, k_rope_new = _mla_kv_compressed(p, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    wkv_b = p["wkv_b"].reshape(kvr, h, nope + vd)
+    w_uk, w_uv = wkv_b[..., :nope], wkv_b[..., nope:]
+    # absorb: q_c (B,H,kvr)
+    q_c = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_c, ck, preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], cr,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(ck.shape[1]) <= pos
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ck.dtype)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", probs, ck)  # (B,H,kvr)
+    out = jnp.einsum("bhr,rhv->bhv", ctx_c, w_uv).reshape(b, 1, h * vd)
+    return out @ p["wo"], {"c_kv": ck, "k_rope": cr}
+
+
+# ---------------------------------------------------------------------------
+# family dispatch
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return mla_init(key, cfg, dtype) if cfg.use_mla else gqa_init(key, cfg, dtype)
+
+
+def attn_apply(p, cfg: ModelConfig, x, positions):
+    return mla_apply(p, cfg, x, positions) if cfg.use_mla else gqa_apply(p, cfg, x, positions)
+
+
+def attn_make_cache(cfg: ModelConfig, batch, max_len, dtype):
+    return (mla_make_cache(cfg, batch, max_len, dtype) if cfg.use_mla
+            else gqa_make_cache(cfg, batch, max_len, dtype))
+
+
+def attn_prefill(p, cfg: ModelConfig, x, positions, cache):
+    return (mla_prefill(p, cfg, x, positions, cache) if cfg.use_mla
+            else gqa_prefill(p, cfg, x, positions, cache))
+
+
+def attn_decode(p, cfg: ModelConfig, x, pos, cache):
+    return (mla_decode(p, cfg, x, pos, cache) if cfg.use_mla
+            else gqa_decode(p, cfg, x, pos, cache))

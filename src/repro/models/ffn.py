@@ -1,0 +1,28 @@
+"""Feed-forward variants: gated (SwiGLU/GeGLU) and plain MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.configs.base import ModelConfig
+
+
+def ffn_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": nn.lecun_normal(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": nn.lecun_normal(ks[1], (d_ff, d_model), fan_in=d_ff, dtype=dtype),
+    }
+    if act in ("silu", "gelu"):
+        p["w_gate"] = nn.lecun_normal(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def ffn_apply(p, x: jax.Array, act: str) -> jax.Array:
+    up = x @ p["w_up"]
+    if "w_gate" in p:
+        up = nn.act_fn(act)(x @ p["w_gate"]) * up
+    else:
+        up = nn.act_fn("gelu" if act == "gelu_mlp" else act)(up)
+    return up @ p["w_down"]

@@ -1,0 +1,613 @@
+"""LM assembly: blocks, parameter init, train loss, prefill and decode.
+
+One module covers all four assigned families:
+
+  dense   — [norm → attn → +res, norm → ffn → +res] × L     (scan, stacked)
+  moe     — dense prefix (first_k_dense) + MoE blocks        (two scans)
+  ssm     — [norm → mamba2 → +res] × L                       (scan)
+  hybrid  — mamba2 × L with a SHARED attn+ffn block applied
+            after every ``hybrid_attn_every``-th layer        (group scan)
+
+Layer stacks are scanned (``jax.lax.scan`` over stacked params) so the HLO
+is O(1) in depth; ``remat=True`` checkpoints each block for training. The
+loss computes cross-entropy in sequence chunks so the (T, vocab) logits
+matrix never materializes (gemma's 256k vocab would be 128 GB otherwise).
+
+Modality stubs (DESIGN.md §4): vlm prepends projected patch embeddings,
+audio feeds precomputed frame embeddings straight to the stack.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.ffn import ffn_init, ffn_apply
+from repro.models.moe import moe_init, moe_apply
+from repro.models.rotary import sinusoidal
+
+MTP_COEF = 0.1
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, dtype=jnp.float32):
+    if cfg.norm == "layernorm":
+        return nn.layernorm_init(cfg.d_model, dtype)
+    p = nn.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.zero_centered_norm:
+        p = {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return nn.layernorm_apply(p, x, eps=cfg.norm_eps)
+    return nn.rmsnorm_apply(p, x, eps=cfg.norm_eps,
+                            zero_centered=cfg.zero_centered_norm)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+_KEEP_F32 = ("router", "A_log", "D", "dt_bias")  # numerics-sensitive leaves
+
+
+def _cast_block(p, cfg: ModelConfig):
+    """Mixed precision: cast block params to the compute dtype at use."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(path, leaf):
+        if path.split("/")[-1] in _KEEP_F32:
+            return leaf
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf.astype(dt)
+        return leaf
+
+    from repro.common import pytree as _pt
+    return _pt.tree_map_with_path(one, p)
+
+
+def _attn_block_init(key, cfg: ModelConfig, d_ff: int, *, moe: bool, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": norm_init(cfg, dtype),
+        "attn": attn.attn_init(k1, cfg, dtype),
+        "norm2": norm_init(cfg, dtype),
+    }
+    if moe:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(k2, cfg.d_model, d_ff, cfg.ffn_act, dtype)
+    return p
+
+
+def _moe_dispatch(p, cfg: ModelConfig, h):
+    """Select the MoE implementation (einsum baseline vs sharded scatter)."""
+    from repro.models import sharding as _shd
+
+    ctx = _shd.act_ctx()
+    if cfg.moe_impl == "sharded" and ctx is not None:
+        from repro.models.moe_sharded import moe_apply_sharded
+
+        return moe_apply_sharded(p, cfg, h, batch_axes=ctx["batch"],
+                                 model_axis=ctx["model"], mesh=ctx.get("mesh"))
+    return moe_apply(p, cfg, h)
+
+
+def _attn_block_apply(p, cfg: ModelConfig, x, positions, *, moe: bool):
+    """Train/prefill-without-cache path. Returns (x, aux)."""
+    p = _cast_block(p, cfg)
+    y = attn.attn_apply(p["attn"], cfg, norm_apply(cfg, p["norm1"], x), positions)
+    x = x + y
+    h = norm_apply(cfg, p["norm2"], x)
+    if moe:
+        y, aux = _moe_dispatch(p["moe"], cfg, h)
+    else:
+        y, aux = ffn_apply(p["ffn"], h, cfg.ffn_act), {}
+    return x + y, aux
+
+
+def _attn_block_prefill(p, cfg: ModelConfig, x, positions, cache, *, moe: bool):
+    p = _cast_block(p, cfg)
+    y, cache = attn.attn_prefill(p["attn"], cfg, norm_apply(cfg, p["norm1"], x),
+                                 positions, cache)
+    x = x + y
+    h = norm_apply(cfg, p["norm2"], x)
+    if moe:
+        y, _ = _moe_dispatch(p["moe"], cfg, h)
+    else:
+        y = ffn_apply(p["ffn"], h, cfg.ffn_act)
+    return x + y, cache
+
+
+def _attn_block_decode(p, cfg: ModelConfig, x, pos, cache, *, moe: bool):
+    p = _cast_block(p, cfg)
+    y, cache = attn.attn_decode(p["attn"], cfg, norm_apply(cfg, p["norm1"], x),
+                                pos, cache)
+    x = x + y
+    h = norm_apply(cfg, p["norm2"], x)
+    if moe:
+        y, _ = _moe_dispatch(p["moe"], cfg, h)
+    else:
+        y = ffn_apply(p["ffn"], h, cfg.ffn_act)
+    return x + y, cache
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype):
+    return {"norm1": norm_init(cfg, dtype), "mamba": mamba2.mamba_init(key, cfg, dtype)}
+
+
+def _mamba_block_apply(p, cfg: ModelConfig, x, *, return_state=False):
+    p = _cast_block(p, cfg)
+    h = norm_apply(cfg, p["norm1"], x)
+    if return_state:
+        y, st = mamba2.mamba_apply(p["mamba"], cfg, h, return_state=True)
+        return x + y, st
+    return x + mamba2.mamba_apply(p["mamba"], cfg, h)
+
+
+def _mamba_block_decode(p, cfg: ModelConfig, x, cache):
+    p = _cast_block(p, cfg)
+    h = norm_apply(cfg, p["norm1"], x)
+    y, cache = mamba2.mamba_decode(p["mamba"], cfg, h, cache)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n: int, one_init):
+    """Initialize n blocks and stack their params along axis 0."""
+    keys = jax.random.split(key, max(n, 1))
+    ps = [one_init(keys[i]) for i in range(n)]
+    if not ps:
+        return None
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params: dict = {}
+    if not cfg.inputs_are_embeds:
+        params["embed"] = {
+            "table": nn.trunc_normal(ks[0], (cfg.vocab_padded, cfg.d_model),
+                                     1.0 / math.sqrt(cfg.d_model), dtype)
+        }
+    if cfg.modality == "vlm":
+        params["patch_proj"] = nn.linear_init(ks[1], cfg.d_model, cfg.d_model,
+                                              bias=True, dtype=dtype)
+
+    if cfg.family == "dense":
+        params["blocks"] = _stacked_init(
+            ks[2], cfg.n_layers,
+            lambda k: _attn_block_init(k, cfg, cfg.d_ff, moe=False, dtype=dtype))
+    elif cfg.family == "moe":
+        kd, km = jax.random.split(ks[2])
+        if cfg.first_k_dense:
+            params["dense_blocks"] = _stacked_init(
+                kd, cfg.first_k_dense,
+                lambda k: _attn_block_init(k, cfg, cfg.dense_d_ff, moe=False, dtype=dtype))
+        params["moe_blocks"] = _stacked_init(
+            km, cfg.n_layers - cfg.first_k_dense,
+            lambda k: _attn_block_init(k, cfg, 0, moe=True, dtype=dtype))
+    elif cfg.family == "ssm":
+        params["blocks"] = _stacked_init(
+            ks[2], cfg.n_layers, lambda k: _mamba_block_init(k, cfg, dtype))
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stacked_init(
+            ks[2], cfg.n_layers, lambda k: _mamba_block_init(k, cfg, dtype))
+        params["shared_attn"] = _attn_block_init(ks[3], cfg, cfg.d_ff, moe=False,
+                                                 dtype=dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = norm_init(cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": nn.trunc_normal(ks[4], (cfg.d_model, cfg.vocab_padded),
+                                 1.0 / math.sqrt(cfg.d_model), dtype)
+        }
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "norm_h": norm_init(cfg, dtype),
+            "norm_e": norm_init(cfg, dtype),
+            "proj": nn.linear_init(ks[5], 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+            "block": _attn_block_init(ks[6], cfg,
+                                      cfg.dense_d_ff or cfg.d_ff, moe=False, dtype=dtype),
+            "norm_f": norm_init(cfg, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict):
+    """-> (x (B,S,D) in cfg.dtype, positions (B,S))."""
+    dt = jnp.dtype(cfg.dtype)
+    parts = []
+    if cfg.modality == "vlm":
+        patches = batch["patch_embeds"].astype(dt)
+        parts.append(nn.linear_apply(params["patch_proj"], patches).astype(dt))
+    if cfg.inputs_are_embeds:
+        parts.append(batch["embeds"].astype(dt))
+    elif "tokens" in batch:
+        tok = params["embed"]["table"][batch["tokens"]].astype(dt)
+        parts.append(tok)
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal(positions, cfg.d_model).astype(dt)
+    return x, positions
+
+
+def unembed(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """hidden (..., D) -> logits (..., vocab_padded), f32. Pad cols masked."""
+    h = h.astype(jnp.float32)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].astype(jnp.float32).T
+    else:
+        logits = h @ params["lm_head"]["w"].astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# stacked forward (train / no-cache)
+# ---------------------------------------------------------------------------
+
+def _scan_blocks(stacked, fn, x, *, remat: bool, collect_aux: bool, act_spec=None):
+    """Scan ``fn(block_params, x) -> (x, aux)`` over stacked block params.
+
+    ``act_spec`` (a PartitionSpec) constrains the residual-stream carry —
+    used to shard the saved activations over the sequence dim (Megatron-style
+    sequence parallelism for the remat footprint). Requires a mesh context.
+    """
+    if act_spec is not None:
+        inner = fn
+
+        def fn(bp, y):  # noqa: F811 — deliberate wrap
+            y = jax.lax.with_sharding_constraint(y, act_spec)
+            out, aux = inner(bp, y)
+            return jax.lax.with_sharding_constraint(out, act_spec), aux
+
+    if remat:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+
+    def body(carry, bp):
+        y, aux = fn(bp, carry)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, stacked)
+    if collect_aux and auxs:
+        auxs = {k: jnp.sum(v) for k, v in auxs.items()}
+    return x, auxs
+
+
+def hidden(params, cfg: ModelConfig, batch: dict, *, remat: bool = False,
+           act_spec=None):
+    """Full forward to final-norm hidden states. Returns (h, aux)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    aux: dict = {}
+
+    if cfg.family == "dense":
+        x, _ = _scan_blocks(
+            params["blocks"],
+            lambda bp, y: (_attn_block_apply(bp, cfg, y, positions, moe=False)[0], {}),
+            x, remat=remat, collect_aux=False, act_spec=act_spec)
+    elif cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, _ = _scan_blocks(
+                params["dense_blocks"],
+                lambda bp, y: (_attn_block_apply(bp, cfg, y, positions, moe=False)[0], {}),
+                x, remat=remat, collect_aux=False, act_spec=act_spec)
+        x, aux = _scan_blocks(
+            params["moe_blocks"],
+            lambda bp, y: _attn_block_apply(bp, cfg, y, positions, moe=True),
+            x, remat=remat, collect_aux=True, act_spec=act_spec)
+    elif cfg.family == "ssm":
+        x, _ = _scan_blocks(
+            params["blocks"],
+            lambda bp, y: (_mamba_block_apply(bp, cfg, y), {}),
+            x, remat=remat, collect_aux=False, act_spec=act_spec)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions, remat=remat,
+                            act_spec=act_spec)
+
+    return norm_apply(cfg, params["final_norm"], x), aux
+
+
+def _hybrid_forward(params, cfg: ModelConfig, x, positions, *, remat: bool,
+                    act_spec=None):
+    """zamba2: groups of ``hybrid_attn_every`` mamba layers + one SHARED attn block."""
+    k = cfg.hybrid_attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n_groups, k, *a.shape[1:]), params["blocks"])
+    shared = params["shared_attn"]
+
+    def group_fn(bp_group, y):
+        y, _ = _scan_blocks(
+            bp_group, lambda bp, z: (_mamba_block_apply(bp, cfg, z), {}),
+            y, remat=False, collect_aux=False)
+        y, _ = _attn_block_apply(shared, cfg, y, positions, moe=False)
+        return y, {}
+
+    x, _ = _scan_blocks(grouped, group_fn, x, remat=remat, collect_aux=False,
+                        act_spec=act_spec)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked cross-entropy)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(s: int, target: int = 2048) -> int:
+    for c in (target, 1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if c <= s and s % c == 0:
+            return c
+    return s
+
+
+def chunked_ce(params, cfg: ModelConfig, h: jax.Array, labels: jax.Array,
+               *, chunk: int = 0):
+    """Mean next-token CE without materializing (T, V). labels < 0 ignored."""
+    b, s, d = h.shape
+    chunk = chunk or _pick_chunk(s)
+    nc = s // chunk
+    hc = h.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def one(args):
+        hh, ll = args
+        logits = unembed(params, cfg, hh)  # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(ll, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (ll >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return jnp.sum(nll), jnp.sum(valid), jnp.sum(jnp.square(logz) * valid)
+
+    nll, cnt, zsq = jax.lax.map(one, (hc, lc))
+    total_cnt = jnp.maximum(jnp.sum(cnt), 1.0)
+    return jnp.sum(nll) / total_cnt, jnp.sum(zsq) / total_cnt
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, remat: bool = False,
+            z_loss_coef: float = 1e-4, act_spec=None):
+    """Scalar training loss + metrics. batch carries 'labels' (B, S_lab)."""
+    h, aux = hidden(params, cfg, batch, remat=remat, act_spec=act_spec)
+    labels = batch["labels"]
+    s_lab = labels.shape[1]
+    h_lab = h[:, h.shape[1] - s_lab:]
+    ce, zsq = chunked_ce(params, cfg, h_lab, labels)
+    loss = ce + z_loss_coef * zsq
+    metrics = {"ce": ce, "z_sq": zsq}
+    if aux:
+        loss = loss + cfg.router_aux_coef * aux["moe_lb_loss"] \
+            + 1e-4 * aux["moe_z_loss"]
+        metrics.update(aux)
+    if cfg.mtp_depth and "tokens" in batch:
+        mtp_ce = _mtp_loss(params, cfg, h, batch)
+        loss = loss + MTP_COEF * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, batch):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict token t+2 from
+    [h_t ; embed(token_{t+1})] through one extra block, shared unembedding."""
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    h_in = norm_apply(cfg, p["norm_h"], h[:, : s - 1])
+    e_in = norm_apply(
+        cfg, p["norm_e"],
+        params["embed"]["table"][tokens[:, 1:]].astype(h.dtype))
+    x = nn.linear_apply(p["proj"], jnp.concatenate([h_in, e_in], axis=-1))
+    positions = jnp.broadcast_to(jnp.arange(s - 1, dtype=jnp.int32), (b, s - 1))
+    x, _ = _attn_block_apply(p["block"], cfg, x, positions, moe=False)
+    x = norm_apply(cfg, p["norm_f"], x)
+    # target for position t is labels[t+1] (= token t+2); t ranges 0..s-2
+    tgt = labels[:, 1:]
+    ce, _ = chunked_ce(params, cfg, x, tgt)
+    return ce
+
+
+# ---------------------------------------------------------------------------
+# caches / prefill / decode
+# ---------------------------------------------------------------------------
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    L = cfg.n_layers
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.zeros((n, *x.shape), x.dtype), tree)
+
+    if cfg.family == "dense":
+        return {"attn": stack(attn.attn_make_cache(cfg, batch, max_len, dt), L)}
+    if cfg.family == "moe":
+        c = {}
+        if cfg.first_k_dense:
+            c["dense"] = stack(attn.attn_make_cache(cfg, batch, max_len, dt),
+                               cfg.first_k_dense)
+        c["moe"] = stack(attn.attn_make_cache(cfg, batch, max_len, dt),
+                         cfg.n_layers - cfg.first_k_dense)
+        return c
+    if cfg.family == "ssm":
+        return {"mamba": stack(mamba2.mamba_make_cache(cfg, batch, dt), L)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        return {
+            "mamba": stack(mamba2.mamba_make_cache(cfg, batch, dt), L),
+            "attn": stack(attn.attn_make_cache(cfg, batch, max_len, dt), n_groups),
+        }
+    raise ValueError(cfg.family)
+
+
+def _scan_with_cache(stacked, cache, fn, x):
+    """Scan blocks threading per-layer cache. fn(bp, cache_l, x) -> (x, cache_l)."""
+
+    def body(carry, xs):
+        bp, cl = xs
+        y, new_cl = fn(bp, cl, carry)
+        return y, new_cl
+
+    x, new_cache = jax.lax.scan(body, x, (stacked, cache))
+    return x, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int):
+    """Run the prompt, fill caches. Returns (last_token_logits (B,V), cache)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    b = x.shape[0]
+    cache = make_cache(cfg, b, max_len)
+
+    if cfg.family == "dense":
+        x, c = _scan_with_cache(
+            params["blocks"], cache["attn"],
+            lambda bp, cl, y: _attn_block_prefill(bp, cfg, y, positions, cl, moe=False),
+            x)
+        cache = {"attn": c}
+    elif cfg.family == "moe":
+        new = {}
+        if cfg.first_k_dense:
+            x, new["dense"] = _scan_with_cache(
+                params["dense_blocks"], cache["dense"],
+                lambda bp, cl, y: _attn_block_prefill(bp, cfg, y, positions, cl, moe=False),
+                x)
+        x, new["moe"] = _scan_with_cache(
+            params["moe_blocks"], cache["moe"],
+            lambda bp, cl, y: _attn_block_prefill(bp, cfg, y, positions, cl, moe=True),
+            x)
+        cache = new
+    elif cfg.family == "ssm":
+        def fn(bp, cl, y):
+            h = norm_apply(cfg, bp["norm1"], y)
+            out, st = mamba2.mamba_apply(bp["mamba"], cfg, h, return_state=True)
+            return y + out, jax.tree.map(lambda a, b: a.astype(b.dtype), st, cl)
+
+        x, c = _scan_with_cache(params["blocks"], cache["mamba"], fn, x)
+        cache = {"mamba": c}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_prefill(params, cfg, x, positions, cache)
+
+    h = norm_apply(cfg, params["final_norm"], x)
+    logits = unembed(params, cfg, h[:, -1])
+    return logits, cache
+
+
+def _hybrid_prefill(params, cfg: ModelConfig, x, positions, cache):
+    k = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda a: a.reshape(n_groups, k, *a.shape[1:]),
+                           params["blocks"])
+    mcache = jax.tree.map(lambda a: a.reshape(n_groups, k, *a.shape[1:]),
+                          cache["mamba"])
+    shared = params["shared_attn"]
+
+    def body(carry, xs):
+        gp, mcl, acl = xs
+
+        def fn(bp, cl, z):
+            h = norm_apply(cfg, bp["norm1"], z)
+            out, st = mamba2.mamba_apply(bp["mamba"], cfg, h, return_state=True)
+            return z + out, jax.tree.map(lambda a, b: a.astype(b.dtype), st, cl)
+
+        y, nm = _scan_with_cache(gp, mcl, fn, carry)
+        y, na = _attn_block_prefill(shared, cfg, y, positions, acl, moe=False)
+        return y, (nm, na)
+
+    x, (new_m, new_a) = jax.lax.scan(body, x, (grouped, mcache, cache["attn"]))
+    new_m = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_m)
+    return x, {"mamba": new_m, "attn": new_a}
+
+
+def decode_step(params, cfg: ModelConfig, inputs: dict, pos: jax.Array, cache: dict):
+    """One token for every sequence in the batch.
+
+    inputs: {"token": (B,)} or {"embed": (B, D)} (audio). pos: () int32 —
+    the cache slot to write (same for the whole batch). Returns
+    (logits (B, V) f32, new_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.inputs_are_embeds:
+        x = inputs["embed"][:, None].astype(dt)
+    else:
+        x = params["embed"]["table"][inputs["token"]][:, None].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if cfg.pos_embed == "sinusoidal":
+        b = x.shape[0]
+        ppos = jnp.full((b, 1), pos, jnp.int32)
+        x = x + sinusoidal(ppos, cfg.d_model).astype(dt)
+
+    if cfg.family == "dense":
+        x, c = _scan_with_cache(
+            params["blocks"], cache["attn"],
+            lambda bp, cl, y: _attn_block_decode(bp, cfg, y, pos, cl, moe=False), x)
+        cache = {"attn": c}
+    elif cfg.family == "moe":
+        new = {}
+        if cfg.first_k_dense:
+            x, new["dense"] = _scan_with_cache(
+                params["dense_blocks"], cache["dense"],
+                lambda bp, cl, y: _attn_block_decode(bp, cfg, y, pos, cl, moe=False), x)
+        x, new["moe"] = _scan_with_cache(
+            params["moe_blocks"], cache["moe"],
+            lambda bp, cl, y: _attn_block_decode(bp, cfg, y, pos, cl, moe=True), x)
+        cache = new
+    elif cfg.family == "ssm":
+        x, c = _scan_with_cache(
+            params["blocks"], cache["mamba"],
+            lambda bp, cl, y: _mamba_block_decode(bp, cfg, y, cl), x)
+        cache = {"mamba": c}
+    elif cfg.family == "hybrid":
+        x, cache = _hybrid_decode(params, cfg, x, pos, cache)
+
+    h = norm_apply(cfg, params["final_norm"], x)
+    return unembed(params, cfg, h[:, 0]), cache
+
+
+def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache):
+    k = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k
+    grouped = jax.tree.map(lambda a: a.reshape(n_groups, k, *a.shape[1:]),
+                           params["blocks"])
+    mcache = jax.tree.map(lambda a: a.reshape(n_groups, k, *a.shape[1:]),
+                          cache["mamba"])
+    shared = params["shared_attn"]
+
+    def body(carry, xs):
+        gp, mcl, acl = xs
+        y, new_m = _scan_with_cache(
+            gp, mcl, lambda bp, cl, z: _mamba_block_decode(bp, cfg, z, cl), carry)
+        y, new_a = _attn_block_decode(shared, cfg, y, pos, acl, moe=False)
+        return y, (new_m, new_a)
+
+    x, (new_m, new_a) = jax.lax.scan(body, x, (grouped, mcache, cache["attn"]))
+    new_m = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_m)
+    return x, {"mamba": new_m, "attn": new_a}

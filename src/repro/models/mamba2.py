@@ -1,0 +1,190 @@
+"""Mamba2 (SSD — state-space duality) layer: chunked scan + one-step decode.
+
+The forward pass is the SSD chunked algorithm (Dao & Gu 2024, §6): the
+sequence splits into chunks of length L; within a chunk the recurrence is
+evaluated as a (masked, decay-weighted) attention-like matmul — MXU-friendly
+— and chunk-final states are carried through a ``lax.scan``, so memory is
+O(B·H·L²) per step instead of O(B·H·S²).
+
+Tensor-parallel layout (the Mamba2 paper's own §7 TP design): the z / x / dt
+projections are head-structured and shard over the `model` axis; the group
+(B, C) stream is replicated (n_groups < TP degree). The depthwise conv is
+per-channel, so splitting it into an x-conv (sharded) and a bc-conv
+(replicated) is mathematically identical to the fused conv.
+
+Decode carries (conv_x, conv_bc, ssm_state) and costs O(1) per token — this
+is what makes the ``long_500k`` shape runnable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.configs.base import ModelConfig
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    gn2 = 2 * cfg.ssm_n_groups * cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    # dt bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[0], (h,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_z": nn.lecun_normal(ks[1], (d, di), dtype=dtype),
+        "in_x": nn.lecun_normal(ks[2], (d, di), dtype=dtype),
+        "in_bc": nn.lecun_normal(ks[3], (d, gn2), dtype=dtype),
+        "in_dt": nn.lecun_normal(ks[4], (d, h), dtype=dtype),
+        "conv_x_w": nn.trunc_normal(ks[5], (cfg.ssm_conv, di),
+                                    1.0 / math.sqrt(cfg.ssm_conv), dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": nn.trunc_normal(ks[6], (cfg.ssm_conv, gn2),
+                                     1.0 / math.sqrt(cfg.ssm_conv), dtype),
+        "conv_bc_b": jnp.zeros((gn2,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": nn.rmsnorm_init(di, dtype),
+        "out_proj": nn.lecun_normal(ks[0], (di, d), fan_in=di, dtype=dtype),
+    }
+
+
+def _causal_conv(w, b, x: jax.Array, width: int) -> jax.Array:
+    """Depthwise causal conv along S. x (B,S,C), w (width,C)."""
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _heads_from_groups(t: jax.Array, h: int, g: int):
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group across its heads."""
+    b, s, _, n = t.shape
+    rep = h // g
+    return jnp.broadcast_to(t[:, :, :, None], (b, s, g, rep, n)).reshape(b, s, h, n)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk: int, state_in=None):
+    """The SSD chunked recurrence.
+
+    x (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative; B_,C_ (B,S,H,N).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)). All math f32.
+    """
+    b, s, h, p_dim = x.shape
+    n = B_.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(b, nc, L, h, p_dim)
+    dtc = dt.astype(f32).reshape(b, nc, L, h)
+    Bc = B_.astype(f32).reshape(b, nc, L, h, n)
+    Cc = C_.astype(f32).reshape(b, nc, L, h, n)
+    dA = dtc * A[None, None, None, :]  # (B,nc,L,H) log-decay, <= 0
+
+    if state_in is None:
+        state_in = jnp.zeros((b, h, n, p_dim), f32)
+
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]  # (L, L) l >= m
+
+    def step(state, inputs):
+        x_c, dt_c, dA_c, b_c, c_c = inputs  # leading dim B
+        seg = jnp.cumsum(dA_c, axis=1)  # (B,L,H)
+        lam = jnp.exp(seg[:, -1])  # (B,H) whole-chunk decay
+        # intra-chunk: M[l,m] = C[l]·B[m] · exp(seg l - seg m) · dt[m], m <= l
+        cb = jnp.einsum("blhn,bmhn->bhlm", c_c, b_c)
+        decay = jnp.exp(seg.transpose(0, 2, 1)[:, :, :, None]
+                        - seg.transpose(0, 2, 1)[:, :, None, :])  # (B,H,L,L)
+        m_mat = cb * jnp.where(causal[None, None], decay, 0.0) \
+            * dt_c.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhlm,bmhp->blhp", m_mat, x_c)
+        # inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum("blhn,bhnp,blh->blhp", c_c, state, jnp.exp(seg))
+        # chunk-final state
+        w_st = jnp.exp(seg[:, -1:, :] - seg) * dt_c  # (B,L,H)
+        state = lam[:, :, None, None] * state \
+            + jnp.einsum("blh,blhn,blhp->bhnp", w_st, b_c, x_c)
+        return state, y_intra + y_inter
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          dA.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2, 3, 4),
+          Cc.transpose(1, 0, 2, 3, 4))
+    final_state, ys = jax.lax.scan(step, state_in, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_dim)
+    return y, final_state
+
+
+def mamba_apply(p, cfg: ModelConfig, x: jax.Array, *, return_state: bool = False):
+    """Full-sequence Mamba2. x (B,S,D) -> y (B,S,D) [, (conv_x, conv_bc, ssm_state)]."""
+    b, s, _ = x.shape
+    h, p_dim, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_n_groups, cfg.ssm_state
+    di, w = cfg.d_inner, cfg.ssm_conv
+    z = x @ p["in_z"]
+    x_raw = x @ p["in_x"]
+    bc_raw = x @ p["in_bc"]
+    dt_raw = x @ p["in_dt"]
+    xs = _causal_conv(p["conv_x_w"], p["conv_x_b"], x_raw, w).reshape(b, s, h, p_dim)
+    bc = _causal_conv(p["conv_bc_w"], p["conv_bc_b"], bc_raw, w)
+    B_ = _heads_from_groups(bc[..., : g * n].reshape(b, s, g, n), h, g)
+    C_ = _heads_from_groups(bc[..., g * n:].reshape(b, s, g, n), h, g)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_scan(xs, dt, A, B_, C_, chunk=cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMS norm (mamba2's RMSNormGated): gate, then normalize
+    y = nn.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out
+    state = {
+        "conv_x": x_raw[:, s - (w - 1):, :],
+        "conv_bc": bc_raw[:, s - (w - 1):, :],
+        "state": final_state,
+    }
+    return out, state
+
+
+def mamba_make_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    gn2 = 2 * cfg.ssm_n_groups * cfg.ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, gn2), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                           jnp.float32),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x: jax.Array, cache: dict):
+    """One-token step. x (B,1,D) -> (y (B,1,D), cache)."""
+    b = x.shape[0]
+    h, p_dim, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_n_groups, cfg.ssm_state
+    di, w = cfg.d_inner, cfg.ssm_conv
+    z, x_new, bc_new, dt_raw = (x[:, 0] @ p["in_z"], x[:, 0] @ p["in_x"],
+                                x[:, 0] @ p["in_bc"], x[:, 0] @ p["in_dt"])
+    win_x = jnp.concatenate(
+        [cache["conv_x"], x_new[:, None].astype(cache["conv_x"].dtype)], axis=1)
+    win_bc = jnp.concatenate(
+        [cache["conv_bc"], bc_new[:, None].astype(cache["conv_bc"].dtype)], axis=1)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_x, p["conv_x_w"]) + p["conv_x_b"])
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", win_bc, p["conv_bc_w"]) + p["conv_bc_b"])
+    xs = xs.reshape(b, h, p_dim).astype(jnp.float32)
+    rep = h // g
+    B_ = bc[..., : g * n].reshape(b, g, n)
+    C_ = bc[..., g * n:].reshape(b, g, n)
+    B_h = jnp.broadcast_to(B_[:, :, None], (b, g, rep, n)).reshape(b, h, n).astype(jnp.float32)
+    C_h = jnp.broadcast_to(C_[:, :, None], (b, g, rep, n)).reshape(b, h, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (B,H)
+    state = cache["state"] * decay[:, :, None, None] \
+        + jnp.einsum("bh,bhn,bhp->bhnp", dt, B_h, xs)
+    y = jnp.einsum("bhn,bhnp->bhp", C_h, state) + p["D"][None, :, None] * xs
+    y = y.reshape(b, di).astype(x.dtype)
+    y = nn.rmsnorm_apply(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "state": state}

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded einsum dispatch.
+
+GShard-style **grouped** dispatch: each batch row is a group with its own
+expert capacity C = ceil(S·k/E · capacity_factor), so the dispatch/combine
+tensors are (B, S, E, C) — B shards over `data`, E over `model`, and the
+tensors stay O(S·k·cf·D) per device regardless of global token count.
+
+This einsum dispatch is the *baseline* (paper-faithful GShard); the
+scatter-based ``moe_sharded`` path (see moe_sharded.py) removes the
+dispatch-einsum FLOP overhead and is the §Perf hillclimb implementation.
+
+Dropped tokens (beyond per-expert capacity) fall through on the residual
+path. Aux losses: Switch load-balance (top-1 occupancy × mean prob) and a
+router z-loss.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import nn
+from repro.configs.base import ModelConfig
+from repro.models.ffn import ffn_init, ffn_apply
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": nn.trunc_normal(ks[0], (d, e), std, jnp.float32),  # router kept f32
+        "w_up": nn.trunc_normal(ks[1], (e, d, f), std, dtype),
+        "w_gate": nn.trunc_normal(ks[2], (e, d, f), std, dtype),
+        "w_down": nn.trunc_normal(ks[3], (e, f, d), 1.0 / math.sqrt(f), dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[4], d, cfg.moe_d_ff * cfg.n_shared_experts,
+                               cfg.ffn_act, dtype)
+    return p
+
+
+def router_topk(logits: jax.Array, k: int):
+    """logits (..., E) -> (weights (..., k), idx (..., k), probs); renormalized."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    return top_p, top_i, probs
+
+
+def group_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(math.ceil(tokens_per_group * cfg.n_experts_per_tok / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(1, -(-c // 4) * 4) if c > 4 else max(1, c)
+
+
+def routing_tensors(top_w, top_i, keep_dtype, e: int, cap: int):
+    """Build grouped dispatch/combine. top_w/top_i: (B, S, k).
+
+    Returns dispatch (B,S,E,C) in keep_dtype, combine (B,S,E,C) f32-cast,
+    keep mask (B,S,k)."""
+    b, s, k = top_i.shape
+    pos_list, keep_list = [], []
+    counts = jnp.zeros((b, e), jnp.int32)
+    for j in range(k):  # priority order: choice 0 wins capacity ties
+        onehot_j = jax.nn.one_hot(top_i[:, :, j], e, dtype=jnp.int32)  # (B,S,E)
+        pos_j = jnp.cumsum(onehot_j, axis=1) - 1 + counts[:, None, :]
+        counts = counts + jnp.sum(onehot_j, axis=1)
+        pos_in_e = jnp.sum(pos_j * onehot_j, axis=-1)  # (B,S)
+        keep_list.append(pos_in_e < cap)
+        pos_list.append(pos_in_e)
+    pos = jnp.stack(pos_list, -1)  # (B,S,k)
+    keep = jnp.stack(keep_list, -1)
+    e_onehot = jax.nn.one_hot(top_i, e, dtype=keep_dtype)  # (B,S,k,E)
+    c_onehot = jax.nn.one_hot(pos, cap, dtype=keep_dtype)  # (B,S,k,C)
+    kw = top_w.astype(keep_dtype) * keep.astype(keep_dtype)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", kw, e_onehot, c_onehot)
+    dispatch = jnp.einsum("bske,bskc->bsec",
+                          e_onehot * keep.astype(keep_dtype)[..., None], c_onehot)
+    return dispatch, combine, keep
+
+
+def experts_ffn(p, cfg: ModelConfig, expert_in: jax.Array) -> jax.Array:
+    """(..., E, C, D) -> (..., E, C, D) through each expert's gated FFN."""
+    up = jnp.einsum("...ecd,edf->...ecf", expert_in, p["w_up"])
+    gate = nn.act_fn(cfg.ffn_act)(jnp.einsum("...ecd,edf->...ecf", expert_in,
+                                             p["w_gate"]))
+    return jnp.einsum("...ecf,efd->...ecd", gate * up, p["w_down"])
+
+
+def aux_losses(probs, top_i, keep) -> dict:
+    """probs (B,S,E), top_i (B,S,k), keep (B,S,k)."""
+    e = probs.shape[-1]
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    assign = jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32)
+    ce = jnp.mean(assign, axis=(0, 1))
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(
+        jnp.log(jnp.maximum(probs, 1e-20)), axis=-1)))
+    return {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+            "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array):
+    """x (B, S, D) -> (y (B, S, D), aux dict). Grouped GShard dispatch.
+
+    With ``moe_group_tokens`` set, each batch row splits into sequence
+    sub-groups of that many tokens: capacity C scales with the group size,
+    so the dispatch tensors and the dispatch-einsum FLOPs shrink linearly
+    (at the cost of slightly higher drop variance; bump capacity_factor)."""
+    b0, s0, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_tok
+    g = cfg.moe_group_tokens
+    if g and g < s0 and s0 % g == 0:
+        x = x.reshape(b0 * (s0 // g), g, d)
+    from repro.models.sharding import constrain_batch
+    x = constrain_batch(x)
+    b, s, _ = x.shape
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    top_w, top_i, probs = router_topk(logits, k)
+    cap = group_capacity(s, cfg)
+    dispatch, combine, keep = routing_tensors(top_w, top_i, x.dtype, e, cap)
+
+    expert_in = constrain_batch(jnp.einsum("bsec,bsd->becd", dispatch, x))
+    expert_out = constrain_batch(experts_ffn(p, cfg, expert_in))
+    y = constrain_batch(jnp.einsum("bsec,becd->bsd", combine, expert_out))
+
+    y = y.reshape(b0, s0, d)
+    if cfg.n_shared_experts:
+        y = y + ffn_apply(p["shared"], x.reshape(b0, s0, d), cfg.ffn_act)
+
+    return y, aux_losses(probs, top_i, keep)

@@ -1,0 +1,49 @@
+"""Rotary and sinusoidal position embeddings.
+
+``apply_rope`` supports partial rotary (stablelm rotates only the first 25%
+of head_dim) and interleaved vs half-split layouts (we use the half-split
+"neox" layout used by every assigned arch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension. (rot_dim/2,) f32."""
+    rot = rotary_dims(head_dim, rotary_pct)
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def rotary_dims(head_dim: int, rotary_pct: float) -> int:
+    rot = int(head_dim * rotary_pct)
+    return rot - (rot % 2)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, rotary_pct: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, head_dim) or (..., S, head_dim); positions: (..., S)."""
+    head_dim = x.shape[-1]
+    rot = rotary_dims(head_dim, rotary_pct)
+    if rot == 0:
+        return x
+    freqs = rope_freqs(head_dim, rotary_pct, theta)  # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:  # insert head axis
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < head_dim else out
+
+
+def sinusoidal(positions: jax.Array, dim: int, max_scale: float = 10000.0) -> jax.Array:
+    """Classic sin/cos absolute position table. positions (..., S) -> (..., S, dim)."""
+    half = dim // 2
+    freq = jnp.exp(-jnp.log(max_scale) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

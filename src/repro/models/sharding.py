@@ -1,0 +1,236 @@
+"""Partition-spec rules: DP / TP / EP / FSDP / SP for every arch family.
+
+Layout on the production mesh (DESIGN.md §5):
+  * batch dims            -> data axes ("data", or ("pod","data") multi-pod)
+  * attention heads / ffn -> "model" (Megatron column/row parallel)
+  * MoE experts           -> "model" (expert parallel; all-to-all dispatch)
+  * FSDP (giants only)    -> the non-model dim of each large weight also
+                             shards over "data" (ZeRO-3; XLA all-gathers
+                             per layer inside the scan)
+  * Mamba2 heads          -> "model" (the z/x/dt streams; B,C replicated)
+  * decode KV caches      -> sequence dim over "model" (context parallelism)
+
+``param_specs`` maps a params pytree (from jax.eval_shape) to PartitionSpec
+by path pattern; stacked layer dims (leading L) are detected by rank.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.common import pytree
+from repro.configs.base import ModelConfig
+
+MODEL = "model"
+
+
+def _rule_table(fsdp_axis, moe_shard_ffn_dim: bool = False):
+    """Ordered (regex, base-spec) table. First match wins. ``F`` marks the
+    FSDP axis slot (None when FSDP is off). ``moe_shard_ffn_dim`` places the
+    experts' second shard axis on the FFN dim instead of d_model — keeps the
+    up/gate contraction dim unsharded (the weight-stationary serving layout)."""
+    F = fsdp_axis
+    if moe_shard_ffn_dim:
+        moe_rules = [
+            (r"moe/router$", (F, None)),
+            (r"moe/shared/w_(up|gate)$", (F, MODEL)),
+            (r"moe/shared/w_down$", (MODEL, F)),
+            (r"moe/w_(up|gate)$", (MODEL, None, F)),
+            (r"moe/w_down$", (MODEL, F, None)),
+        ]
+    else:
+        moe_rules = [
+            (r"moe/router$", (F, None)),
+            (r"moe/shared/w_(up|gate)$", (F, MODEL)),
+            (r"moe/shared/w_down$", (MODEL, F)),
+            (r"moe/w_(up|gate)$", (MODEL, F, None)),
+            (r"moe/w_down$", (MODEL, None, F)),
+        ]
+    return moe_rules + [
+        # embedding / head
+        (r"embed/table$", (MODEL, None)),
+        (r"lm_head/w$", (None, MODEL)),
+        (r"patch_proj/w$", (None, None)),
+        (r"patch_proj/b$", (None,)),
+        # MLA
+        (r"attn/wq_a$", (F, MODEL)),
+        (r"attn/wq_b$", (None, MODEL)),
+        (r"attn/wkv_a$", (MODEL, None)),   # row-parallel; 576-wide output
+        (r"attn/wkv_b$", (None, MODEL)),
+        (r"attn/(q_norm|kv_norm|k_norm)/scale$", (None,)),
+        # GQA
+        (r"attn/w[qkv]$", (F, MODEL)),
+        (r"attn/wo$", (MODEL, F)),
+        # dense FFN
+        (r"ffn/w_(up|gate)$", (F, MODEL)),
+        (r"ffn/w_down$", (MODEL, F)),
+        # Mamba2 (heads on model; B/C replicated)
+        (r"mamba/in_z$", (F, MODEL)),
+        (r"mamba/in_x$", (F, MODEL)),
+        (r"mamba/in_bc$", (F, None)),
+        (r"mamba/in_dt$", (F, None)),
+        (r"mamba/conv_x_w$", (None, MODEL)),
+        (r"mamba/conv_x_b$", (MODEL,)),
+        (r"mamba/conv_bc_(w|b)$", None),  # replicate
+        (r"mamba/(A_log|D|dt_bias)$", (None,)),
+        (r"mamba/norm/scale$", (MODEL,)),
+        (r"mamba/out_proj$", (MODEL, F)),
+        # mtp glue
+        (r"mtp/proj/w$", (None, None)),
+        (r"mtp/proj/b$", (None,)),
+        # norms (catch-all)
+        (r"(norm1|norm2|final_norm|norm_h|norm_e|norm_f|norm)/(scale|bias)$", None),
+    ]
+
+
+def spec_for_path(path: str, ndim: int, fsdp_axis=None,
+                  moe_shard_ffn_dim: bool = False) -> P:
+    for pat, base in _rule_table(fsdp_axis, moe_shard_ffn_dim):
+        if re.search(pat, path):
+            if base is None:
+                return P()
+            base = tuple(base)
+            if ndim == len(base) + 1:  # stacked layer dim
+                return P(None, *base)
+            if ndim == len(base):
+                return P(*base)
+            # rank mismatch (e.g. scalar leaf) — replicate
+            return P()
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_shape, *, fsdp: bool = False,
+                fsdp_axis="data", moe_shard_ffn_dim: bool = False):
+    """PartitionSpec pytree matching ``params_shape`` (a ShapeDtypeStruct tree)."""
+    F = fsdp_axis if fsdp else None
+    return pytree.tree_map_with_path(
+        lambda path, leaf: spec_for_path(path, len(leaf.shape), F,
+                                         moe_shard_ffn_dim), params_shape)
+
+
+def opt_state_specs(param_spec_tree, opt_state_shape, *, model_size: int = 16):
+    """Optimizer-state specs: float moments inherit their parameter's spec;
+    int8 moments ({q, scale} blocks, shape (n_blocks, 256)/(n_blocks, 1))
+    shard their block dim over `model` when divisible; the Adafactor row/col
+    stats drop the reduced dim; scalars replicate."""
+    flat_p = {path: spec for path, spec in pytree.tree_paths(param_spec_tree)}
+
+    def one(path: str, leaf):
+        # paths look like  m/<param_path>, v/<param_path>[/vr|/vc|/v|/q|/scale]
+        parts = path.split("/")
+        if parts[0] in ("m", "v"):
+            tail = parts[-1]
+            core = "/".join(parts[1:-1] if tail in ("vr", "vc", "v", "q", "scale")
+                            else parts[1:])
+            base = flat_p.get(core) or flat_p.get("/".join(parts[1:]))
+            if base is None:
+                return P()
+            bs = tuple(base)
+            if tail == "vr":  # reduced over last dim
+                return P(*bs[:-1]) if len(bs) == len(leaf.shape) + 1 else P()
+            if tail == "vc":  # reduced over second-to-last dim
+                return P(*(bs[:-2] + bs[-1:])) if len(bs) == len(leaf.shape) + 1 else P()
+            if tail == "scale" and len(bs) == len(leaf.shape):
+                return P(*bs[:-1], None)  # per-row scale: (..., 1)
+            if len(bs) == len(leaf.shape):
+                return P(*bs)
+            return P()
+        return P()
+
+    return pytree.tree_map_with_path(one, opt_state_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shape: dict, data_axes=("data",)) -> dict:
+    """Inputs: batch dim over the data axes, everything else unsharded."""
+    d = tuple(data_axes)
+    ax = d if len(d) > 1 else d[0]
+    return {k: P(ax, *([None] * (len(v.shape) - 1)))
+            for k, v in batch_shape.items()}
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, data_axes=("data",),
+                *, shard_batch: bool = True):
+    """Decode caches: (L, B, S, heads, hd) — B over data, S over model for
+    attention caches (context parallelism); mamba states shard heads/channels
+    over model. With batch=1 (long_500k) ``shard_batch=False`` keeps B whole."""
+    d = tuple(data_axes)
+    bax = (d if len(d) > 1 else d[0]) if shard_batch else None
+
+    def one(path: str, leaf):
+        nd = len(leaf.shape)
+        if "conv_x" in path:  # (L, B, w-1, di)
+            return P(None, bax, None, MODEL)
+        if "conv_bc" in path:  # (L, B, w-1, 2gn)
+            return P(None, bax, None, None)
+        if path.endswith("state"):  # (L, B, H, N, P)
+            return P(None, bax, MODEL, None, None)
+        if "c_kv" in path or "k_rope" in path:  # MLA: (L, B, S, r)
+            return P(None, bax, MODEL, None)
+        if nd == 5:  # GQA k/v: (L, B, S, KV, hd)
+            return P(None, bax, MODEL, None, None)
+        return P()
+
+    return pytree.tree_map_with_path(one, cache_shape)
+
+
+def activation_spec(data_axes=("data",), *, seq_shard: bool = False) -> P:
+    """Residual-stream (B, S, D) constraint for the layer-scan carry."""
+    d = tuple(data_axes)
+    bax = d if len(d) > 1 else d[0]
+    return P(bax, MODEL if seq_shard else None, None)
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding context: batch-dim constraints inside the model
+# ---------------------------------------------------------------------------
+# XLA's sharding propagation can lose the batch dim through the
+# reshape/transpose-heavy attention and MoE interiors and silently REPLICATE
+# the batch across `data` (observed: 16x redundant attention compute on
+# deepseek prefill). The fix is a hard constraint on the batch dim only,
+# with every other dim left UNCONSTRAINED so head/ffn sharding stays free.
+
+import contextlib as _contextlib
+import contextvars as _contextvars
+
+_ACT_CTX = _contextvars.ContextVar("repro_act_ctx", default=None)
+
+
+@_contextlib.contextmanager
+def act_axes(batch_axis, model_axis: str = MODEL, mesh=None):
+    """Enable batch-dim constraints (+ mesh-aware layers) during tracing."""
+    tok = _ACT_CTX.set({"batch": batch_axis, "model": model_axis, "mesh": mesh}
+                       if batch_axis is not None else None)
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def with_act_axes(fn, batch_axis, model_axis: str = MODEL, mesh=None):
+    def wrapped(*a, **kw):
+        with act_axes(batch_axis, model_axis, mesh):
+            return fn(*a, **kw)
+
+    return wrapped
+
+
+def act_ctx():
+    return _ACT_CTX.get()
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin x's batch dim to the data axes; other dims unconstrained."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    U = P.UNCONSTRAINED
+    dims = [U] * x.ndim
+    dims[batch_dim] = ctx["batch"]
+    return jax.lax.with_sharding_constraint(x, P(*dims))

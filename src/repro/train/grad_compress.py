@@ -1,0 +1,80 @@
+"""Error-feedback gradient compression for cross-pod data parallelism.
+
+At pod scale the gradient all-reduce crosses the (slow) inter-pod links.
+We compress each gradient tensor to int8 with a per-tensor scale before the
+cross-pod reduction and carry the quantization error in an fp32 residual
+(error feedback, à la 1-bit Adam / EF-SGD), which keeps SGD convergence
+unbiased in the long run.
+
+Two entry points:
+  * ``compress``/``decompress`` — the quantizer itself (unit-testable).
+  * ``ef_allreduce`` — shard_map-compatible: quantize -> psum over the given
+    axis -> dequantize, with residual update. Inside pjit'd code the psum is
+    whatever collective XLA chooses for the mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress(x: jax.Array):
+    """Per-tensor absmax int8 quantization. Returns (q, scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: PyTree, residual: PyTree):
+    """Quantize grads+residual; return (quantized tree, new residual)."""
+
+    def _one(g, r):
+        val = g.astype(jnp.float32) + r
+        q, s = compress(val)
+        back = decompress(q, s)
+        return (q, s), val - back
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [_one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = treedef.unflatten([o[0] for o in outs])
+    new_res = treedef.unflatten([o[1] for o in outs])
+    return qtree, new_res
+
+
+def decompress_tree(qtree: PyTree, dtype=jnp.float32) -> PyTree:
+    return jax.tree.map(
+        lambda leaf: decompress(*leaf, dtype=dtype),
+        qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def ef_allreduce(grads: PyTree, residual: PyTree, axis_name: str, *, mean=True):
+    """Error-feedback compressed all-reduce over ``axis_name`` (shard_map ctx)."""
+    qtree, new_res = compress_tree(grads, residual)
+
+    def _reduce(leaf):
+        q, s = leaf
+        # reduce in f32 to avoid int overflow across many participants
+        summed = jax.lax.psum(decompress(q, s), axis_name)
+        if mean:
+            summed = summed / jax.lax.psum(1.0, axis_name)
+        return summed
+
+    reduced = jax.tree.map(
+        _reduce, qtree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+    return reduced, new_res
+
+
+def init_residual(grads_shape: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)

@@ -1,0 +1,124 @@
+"""Training-step builder: remat + microbatch gradient accumulation + optimizer.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch) -> (params,
+opt_state, metrics)`` suitable for ``jax.jit`` with in/out shardings. The
+microbatch loop is a ``lax.scan`` so grad-accumulation buffers inherit the
+parameter sharding (ZeRO-sharded accumulation when FSDP is on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.train.optimizer import (
+    AdafactorConfig, AdamWConfig, adafactor_init, adafactor_update,
+    adamw_init, adamw_update, cosine_schedule,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Per-arch execution plan (launch/plans.py owns the per-arch table)."""
+    microbatches: int = 1
+    remat: bool = True
+    optimizer: str = "adamw"  # "adamw" | "adafactor"
+    state_dtype: str = "float32"  # adamw moment dtype ("int8" = 8-bit adam)
+    param_dtype: str = "float32"
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    grad_clip: Optional[float] = 1.0
+    fsdp: bool = False  # shard big weights over data too (ZeRO-3)
+    seq_shard_acts: bool = False  # SP: shard the residual carry over `model`
+    grad_accum_dtype: str = "float32"
+
+
+def _opt(plan: TrainPlan):
+    sched = cosine_schedule(plan.lr, plan.warmup, plan.total_steps)
+    if plan.optimizer == "adafactor":
+        cfg = AdafactorConfig(lr=sched, weight_decay=plan.weight_decay)
+        return cfg, adafactor_init, adafactor_update
+    cfg = AdamWConfig(lr=sched, weight_decay=plan.weight_decay,
+                      grad_clip_norm=plan.grad_clip, state_dtype=plan.state_dtype)
+    return cfg, adamw_init, adamw_update
+
+
+def init_state(key, cfg: ModelConfig, plan: TrainPlan):
+    """(params, opt_state) — traceable (usable under jax.eval_shape)."""
+    params = lm.init(key, cfg)
+    if plan.param_dtype != "float32":
+        dt = jnp.dtype(plan.param_dtype)
+        params = jax.tree.map(
+            lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            params)
+    ocfg, oinit, _ = _opt(plan)
+    return params, oinit(params, ocfg)
+
+
+def make_train_step(cfg: ModelConfig, plan: TrainPlan, act_spec=None,
+                    batch_axes=None, grad_specs=None):
+    """``grad_specs`` (a PartitionSpec tree matching params) pins the
+    microbatch grad-accumulation buffers to the parameter sharding —
+    without it SPMD can leave the accumulator replicated and the gradient
+    sync degenerates to full all-reduces instead of sharded accumulation."""
+    ocfg, _, oupdate = _opt(plan)
+
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch, remat=plan.remat, act_spec=act_spec)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        n = plan.microbatches
+        if n == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+        else:
+            bax = (tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]) \
+                if batch_axes else None
+
+            def split(x):
+                b = x.shape[0]
+                assert b % n == 0, (b, n)
+                y = x.reshape(n, b // n, *x.shape[1:])
+                if bax is not None:
+                    # keep the LOOP dim unsharded; shard only the batch dim —
+                    # otherwise SPMD factors the data axis across both and
+                    # every device redundantly processes extra microbatches
+                    from jax.sharding import PartitionSpec as P
+                    y = jax.lax.with_sharding_constraint(
+                        y, P(None, bax, *([None] * (x.ndim - 1))))
+                return y
+
+            mbatches = jax.tree.map(split, batch)
+            acc_dt = jnp.dtype(plan.grad_accum_dtype)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            if grad_specs is not None:
+                constrain = lambda t: jax.tree.map(  # noqa: E731
+                    lambda a, s: jax.lax.with_sharding_constraint(a, s), t,
+                    grad_specs)
+                zero = constrain(zero)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, gg: a + gg.astype(acc_dt), acc, g)
+                if grad_specs is not None:
+                    acc = constrain(acc)
+                return acc, (l, m)
+
+            grads, (ls, ms) = jax.lax.scan(body, zero, mbatches)
+            grads = jax.tree.map(lambda g: (g / n).astype(jnp.float32), grads)
+            l = jnp.mean(ls)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        new_params, new_opt = oupdate(grads, opt_state, params, ocfg)
+        metrics = dict(metrics)
+        metrics["loss"] = l
+        return new_params, new_opt, metrics
+
+    return train_step

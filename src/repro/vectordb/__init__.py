@@ -1,0 +1,3 @@
+from repro.vectordb.table import Table, TableSchema, ScalarCol, VectorCol, similarity, weighted_score  # noqa: F401
+from repro.vectordb.predicates import Predicates, eval_mask, soft_encode, value_encode  # noqa: F401
+from repro.vectordb import histogram, ivf, flat  # noqa: F401

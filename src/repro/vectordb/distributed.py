@@ -1,0 +1,147 @@
+"""Mesh-sharded MHQ search (beyond-paper: the technique as a distributed,
+first-class feature — DESIGN.md §2 'Distribution').
+
+DB rows are sharded over the mesh's data axes; each device scores its local
+shard and keeps a local top-k; the global top-k merges the per-device
+candidates with one all-gather of O(devices · k) elements — independent of
+DB size, so the collective term stays negligible (see EXPERIMENTS.md
+§Roofline boomhq rows).
+
+Implemented with ``shard_map`` so the collective schedule is explicit.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.table import similarity
+
+NEG = -1e30
+
+
+def sharded_masked_scan(mesh: Mesh, data_axes=("data",), *, k: int, n_vec: int,
+                        metric: str = "dot"):
+    """Build a jit'd sharded filtered top-k: rows sharded over ``data_axes``.
+
+    Returned fn signature:
+      fn(vectors: tuple[(n, d_i)], scalars (n, M), pred, qs tuple[(d_i,)], w (N,))
+        -> (ids (k,), scores (k,))
+    Row ids are global.
+    """
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+
+    def local(vectors, scalars, pred, qs, w, row0):
+        n_local = scalars.shape[0]
+        total = jnp.zeros((n_local,), jnp.float32)
+        for i in range(n_vec):
+            total = total + w[i] * similarity(qs[i], vectors[i], metric)
+        mask = eval_mask(pred, scalars)
+        masked = jnp.where(mask, total, NEG)
+        kk = min(k, n_local)
+        s, idx = jax.lax.top_k(masked, kk)
+        gids = row0 + idx  # globalize
+        # gather candidates from every shard, then merge
+        s_all = jax.lax.all_gather(s, axes, tiled=True)
+        g_all = jax.lax.all_gather(gids, axes, tiled=True)
+        ms, mi = jax.lax.top_k(s_all, k)
+        out_ids = jnp.where(ms > NEG / 2, g_all[mi], -1)
+        return out_ids, ms
+
+    from jax.experimental.shard_map import shard_map
+
+    vec_specs = tuple(P(axes, None) for _ in range(n_vec))
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(vec_specs, P(axes, None), P(), tuple(P() for _ in range(n_vec)), P(), P(axes)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+    def run(vectors, scalars, pred, qs, w):
+        n = scalars.shape[0]
+        n_dev = 1
+        for a in axes:
+            n_dev *= mesh.shape[a]
+        assert n % n_dev == 0, (n, n_dev)
+        row0 = jnp.arange(n_dev, dtype=jnp.int32) * (n // n_dev)
+        return fn(tuple(vectors), scalars, pred, tuple(qs), w, row0)
+
+    return jax.jit(run)
+
+
+def sharded_masked_scan_batched(mesh: Mesh, data_axes=("data",), *, k: int,
+                                n_vec: int, metric: str = "dot",
+                                int8: bool = False):
+    """Beyond-paper optimized distributed scan: QUERY BATCHING (one pass over
+    the DB shard serves Q queries — turns the memory-bound matvec into an
+    MXU matmul) and optional INT8 DB storage (per-row absmax scales; 4× less
+    HBM traffic on the scan — the Pallas int8_scan kernel's layout).
+
+    Returned fn:
+      fn(vectors, [scales,] scalars, preds (stacked Q), qs tuple[(Q, d_i)],
+         w (Q, N)) -> (ids (Q, k), scores (Q, k))
+    """
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+
+    def local(vectors, scales, scalars, preds, qs, w, row0):
+        n_local = scalars.shape[0]
+        q_batch = qs[0].shape[0]
+        total = jnp.zeros((q_batch, n_local), jnp.float32)
+        for i in range(n_vec):
+            v = vectors[i]
+            if int8:
+                # true int8 path: quantize the queries too and run the dot
+                # on the MXU's int8×int8→int32 — the DB is read as int8
+                qsc = jnp.maximum(jnp.max(jnp.abs(qs[i]), axis=-1), 1e-12) / 127.0
+                q8 = jnp.clip(jnp.round(qs[i] / qsc[:, None]), -127, 127
+                              ).astype(jnp.int8)
+                acc = jnp.einsum("nd,qd->qn", v, q8,
+                                 preferred_element_type=jnp.int32)
+                s = acc.astype(jnp.float32) * scales[i][None, :] * qsc[:, None]
+            else:
+                s = jnp.einsum("nd,qd->qn", v, qs[i])
+                if metric == "l2":
+                    s = 2.0 * s - jnp.sum(v * v, axis=-1)[None] \
+                        - jnp.sum(qs[i] * qs[i], axis=-1)[:, None]
+            total = total + w[:, i][:, None] * s
+        # per-query predicate masks: preds fields stacked over Q
+        ok = (scalars[None] >= preds.lo[:, None]) & (scalars[None] <= preds.hi[:, None])
+        ok = ok | ~preds.active[:, None]
+        mask = jnp.all(ok, axis=-1)  # (Q, n_local)
+        masked = jnp.where(mask, total, NEG)
+        kk = min(k, n_local)
+        s_loc, idx = jax.lax.top_k(masked, kk)  # (Q, kk)
+        gids = row0 + idx
+        s_all = jax.lax.all_gather(s_loc, axes, axis=1, tiled=True)
+        g_all = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
+        ms, mi = jax.lax.top_k(s_all, k)
+        out_ids = jnp.where(ms > NEG / 2, jnp.take_along_axis(g_all, mi, 1), -1)
+        return out_ids, ms
+
+    vec_specs = tuple(P(axes, None) for _ in range(n_vec))
+    scale_specs = tuple(P(axes) for _ in range(n_vec)) if int8 else P()
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(vec_specs, scale_specs, P(axes, None), P(),
+                  tuple(P() for _ in range(n_vec)), P(), P(axes)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def run(vectors, scales, scalars, preds, qs, w):
+        n = scalars.shape[0]
+        n_dev = 1
+        for a in axes:
+            n_dev *= mesh.shape[a]
+        assert n % n_dev == 0, (n, n_dev)
+        row0 = jnp.arange(n_dev, dtype=jnp.int32) * (n // n_dev)
+        scales = tuple(scales) if int8 else jnp.zeros(())
+        return fn(tuple(vectors), scales, scalars, preds, tuple(qs), w, row0)
+
+    return jax.jit(run)

@@ -1,0 +1,92 @@
+"""Flat (sequential-scan) search paths.
+
+``filter_first``: evaluate the predicate over all rows, gather up to
+``max_candidates`` qualifying rows, score only those — cost ∝ selectivity·n,
+the TPU analogue of 'scalar-index assisted sequential scan'.
+
+``masked_scan``: score every row with the predicate as a mask — the exact
+oracle (ground truth) and the fallback when selectivity is high. On TPU the
+inner loop is the fused Pallas ``masked_topk`` kernel (kernels/); the jnp
+path here is its oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.table import Table, weighted_score
+
+NEG = -1e30
+
+
+@partial(jax.jit, static_argnames=("k", "max_candidates", "n_vec", "metric"))
+def filter_first(
+    vectors: tuple,  # tuple of (n, d_i)
+    scalars: jax.Array,
+    pred: Predicates,
+    query_vectors: tuple,  # tuple of (d_i,)
+    weights: jax.Array,
+    metric: str = "dot",
+    *,
+    k: int,
+    max_candidates: int,
+    n_vec: int,
+):
+    """Filter-first execution. Returns (ids, scores, n_scored, n_qualified)."""
+    mask = eval_mask(pred, scalars)
+    n = scalars.shape[0]
+    rows = jnp.nonzero(mask, size=max_candidates, fill_value=n)[0]
+    valid = rows < n
+    rows_c = jnp.clip(rows, 0, n - 1)
+    from repro.vectordb.table import similarity
+
+    total = jnp.zeros((max_candidates,), jnp.float32)
+    for i in range(n_vec):
+        total = total + weights[i] * similarity(query_vectors[i], vectors[i][rows_c], metric)
+    masked = jnp.where(valid, total, NEG)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_scores > NEG / 2, rows_c[top_idx], -1)
+    return ids, top_scores, jnp.sum(valid), jnp.sum(valid)
+
+
+@partial(jax.jit, static_argnames=("k", "n_vec", "metric"))
+def masked_scan(
+    vectors: tuple,
+    scalars: jax.Array,
+    pred: Predicates,
+    query_vectors: tuple,
+    weights: jax.Array,
+    metric: str = "dot",
+    *,
+    k: int,
+    n_vec: int,
+):
+    """Exact filtered top-k over the full table (also the recall oracle)."""
+    from repro.vectordb.table import similarity
+
+    n = scalars.shape[0]
+    total = jnp.zeros((n,), jnp.float32)
+    for i in range(n_vec):
+        total = total + weights[i] * similarity(query_vectors[i], vectors[i], metric)
+    mask = eval_mask(pred, scalars)
+    masked = jnp.where(mask, total, NEG)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_scores > NEG / 2, top_idx, -1)
+    return ids, top_scores, jnp.asarray(n), jnp.sum(mask)
+
+
+def ground_truth(table: Table, query_vectors, weights, pred: Predicates, k: int):
+    ids, scores, _, _ = masked_scan(
+        tuple(table.vectors),
+        table.scalars,
+        pred,
+        tuple(query_vectors),
+        jnp.asarray(weights),
+        table.schema.metric,
+        k=k,
+        n_vec=table.schema.n_vec,
+    )
+    return ids, scores

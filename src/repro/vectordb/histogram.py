@@ -1,0 +1,94 @@
+"""Histogram-based global selectivity estimation (paper §3.3).
+
+Per scalar column we keep equi-width bin edges and a **prefix-sum** count
+array, exactly as the paper prescribes: a range predicate is answered by two
+interpolated prefix lookups; conjunctions multiply per-column selectivities
+under the independence assumption.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.vectordb.predicates import Predicates
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Histograms:
+    edges: jax.Array  # (M, B+1)
+    prefix: jax.Array  # (M, B+1) cumulative counts, prefix[:,0] = 0
+    n_rows: jax.Array  # ()
+
+    def tree_flatten(self):
+        return (self.edges, self.prefix, self.n_rows), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build(scalars: jax.Array, n_bins: int = 64) -> Histograms:
+    """scalars: (n, M). Equi-width per column with a tiny epsilon pad so the
+    max value falls inside the last bin."""
+    n, m = scalars.shape
+    lo = jnp.min(scalars, axis=0)
+    hi = jnp.max(scalars, axis=0)
+    span = jnp.maximum(hi - lo, 1e-9)
+    edges = lo[:, None] + span[:, None] * jnp.linspace(0.0, 1.0 + 1e-6, n_bins + 1)[None, :]
+
+    def per_col(col, e):
+        idx = jnp.clip(jnp.searchsorted(e, col, side="right") - 1, 0, n_bins - 1)
+        counts = jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+        return jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(counts)])
+
+    prefix = jax.vmap(per_col, in_axes=(1, 0))(scalars, edges)
+    return Histograms(edges=edges, prefix=prefix, n_rows=jnp.asarray(float(n)))
+
+
+def update(h: Histograms, scalars_new: jax.Array) -> Histograms:
+    """Incremental maintenance on insert: re-bin new rows into existing edges
+    (edges are kept — consistent with paper's 'offline background' stats)."""
+    n_bins = h.prefix.shape[1] - 1
+
+    def per_col(col, e, pref):
+        idx = jnp.clip(jnp.searchsorted(e, col, side="right") - 1, 0, n_bins - 1)
+        counts = jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+        return pref + jnp.concatenate([jnp.zeros((1,)), jnp.cumsum(counts)])
+
+    prefix = jax.vmap(per_col, in_axes=(1, 0, 0))(scalars_new, h.edges, h.prefix)
+    return Histograms(h.edges, prefix, h.n_rows + scalars_new.shape[0])
+
+
+def _prefix_at(edges_c: jax.Array, prefix_c: jax.Array, x: jax.Array) -> jax.Array:
+    """Interpolated cumulative count of values <= x for one column."""
+    b = prefix_c.shape[0] - 1
+    idx = jnp.clip(jnp.searchsorted(edges_c, x, side="right") - 1, 0, b - 1)
+    left, right = edges_c[idx], edges_c[idx + 1]
+    frac = jnp.clip((x - left) / jnp.maximum(right - left, 1e-12), 0.0, 1.0)
+    below = prefix_c[idx] + frac * (prefix_c[idx + 1] - prefix_c[idx])
+    below = jnp.where(x < edges_c[0], 0.0, below)
+    below = jnp.where(x >= edges_c[-1], prefix_c[-1], below)
+    return below
+
+
+@jax.jit
+def estimate_selectivity(h: Histograms, pred: Predicates) -> jax.Array:
+    """σ_est ∈ [0, 1] for a conjunctive predicate set."""
+    def per_col(e, p, lo, hi, act):
+        b = p.shape[0] - 1
+        cnt = _prefix_at(e, p, hi) - _prefix_at(e, p, lo - 1e-9)
+        # point predicates (equality): interpolation of discrete mass is ~0;
+        # answer with the containing bin's full count instead.
+        binw = e[1] - e[0]
+        is_point = (hi - lo) <= 1e-12
+        idx = jnp.clip(jnp.searchsorted(e, lo, side="right") - 1, 0, b - 1)
+        bin_cnt = p[idx + 1] - p[idx]
+        cnt = jnp.where(is_point, bin_cnt, cnt)
+        sel = jnp.clip(cnt / jnp.maximum(p[-1], 1.0), 0.0, 1.0)
+        return jnp.where(act, sel, 1.0)
+
+    sels = jax.vmap(per_col)(h.edges, h.prefix, pred.lo, pred.hi, pred.active)
+    return jnp.prod(sels)

@@ -1,0 +1,198 @@
+"""IVF-Flat index: k-means clustering + probe-based search.
+
+TPU adaptation of the paper's HNSW substrate (DESIGN.md §2): the navigable
+graph becomes a cluster decomposition; ``ef_search`` becomes ``nprobe``;
+``max_scan_tuples`` caps the gathered candidate count; ``iterative_scan``
+becomes nprobe re-expansion when the filtered result underfills k.
+
+Everything is static-shape jit-able: the probed clusters' rows are mapped to
+a fixed ``max_scan`` slot array via a prefix-sum + searchsorted trick, so a
+single fused gather/score/mask/top-k runs on device regardless of how many
+rows each cluster holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.table import Table, similarity
+
+NEG = -1e30
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: jax.Array  # (C, d)
+    sorted_rows: jax.Array  # (n,) i32 — row ids grouped by cluster
+    offsets: jax.Array  # (C+1,) i32 — cluster c owns sorted_rows[offsets[c]:offsets[c+1]]
+    metric: str
+
+    def tree_flatten(self):
+        return (self.centroids, self.sorted_rows, self.offsets), self.metric
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, metric=aux)
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.centroids.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# k-means
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n_clusters", "iters"))
+def _kmeans(vectors: jax.Array, key: jax.Array, n_clusters: int, iters: int = 12):
+    n = vectors.shape[0]
+    idx = jax.random.choice(key, n, (n_clusters,), replace=False)
+    cent = vectors[idx]
+
+    def step(cent, _):
+        d = (
+            jnp.sum(cent * cent, axis=1)[None, :]
+            - 2.0 * (vectors @ cent.T)
+        )  # (n, C) up to +||v||² const
+        assign = jnp.argmin(d, axis=1)
+        one = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
+        counts = one.sum(0)
+        sums = one.T @ vectors
+        newc = sums / jnp.maximum(counts[:, None], 1.0)
+        # dead centroids keep their old position
+        newc = jnp.where(counts[:, None] > 0, newc, cent)
+        return newc, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d = jnp.sum(cent * cent, axis=1)[None, :] - 2.0 * (vectors @ cent.T)
+    assign = jnp.argmin(d, axis=1)
+    return cent, assign
+
+
+def build(vectors: jax.Array, n_clusters: int, seed: int = 0, iters: int = 12,
+          metric: str = "dot") -> IVFIndex:
+    cent, assign = _kmeans(vectors, jax.random.PRNGKey(seed), n_clusters, iters)
+    assign_np = np.asarray(assign)
+    order = np.argsort(assign_np, kind="stable").astype(np.int32)
+    counts = np.bincount(assign_np, minlength=n_clusters)
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return IVFIndex(
+        centroids=cent,
+        sorted_rows=jnp.asarray(order),
+        offsets=jnp.asarray(offsets),
+        metric=metric,
+    )
+
+
+def extend(index: IVFIndex, new_vectors: jax.Array, first_new_row: int) -> IVFIndex:
+    """Insert rows into existing clusters (centroids unchanged) — the cheap
+    maintenance path that matches the paper's buffer-then-integrate updates."""
+    d = (
+        jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
+        - 2.0 * (new_vectors @ index.centroids.T)
+    )
+    assign = np.asarray(jnp.argmin(d, axis=1))
+    rows = np.arange(first_new_row, first_new_row + new_vectors.shape[0], dtype=np.int32)
+    old_rows = np.asarray(index.sorted_rows)
+    old_off = np.asarray(index.offsets)
+    C = index.n_clusters
+    buckets = [old_rows[old_off[c]: old_off[c + 1]] for c in range(C)]
+    for r, a in zip(rows, assign):
+        buckets[a] = np.append(buckets[a], r)
+    counts = np.array([len(b) for b in buckets])
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return IVFIndex(
+        centroids=index.centroids,
+        sorted_rows=jnp.asarray(np.concatenate(buckets).astype(np.int32)),
+        offsets=jnp.asarray(offsets),
+        metric=index.metric,
+    )
+
+
+# ---------------------------------------------------------------------------
+# probing search
+# ---------------------------------------------------------------------------
+
+def _candidate_slots(index: IVFIndex, probe_clusters: jax.Array, max_scan: int):
+    """Map ``max_scan`` static slots onto the rows of the probed clusters.
+
+    Returns (row_ids (max_scan,), valid (max_scan,)).
+    """
+    starts = index.offsets[probe_clusters]
+    sizes = index.offsets[probe_clusters + 1] - starts
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes)])
+    total = cum[-1]
+    slots = jnp.arange(max_scan, dtype=jnp.int32)
+    which = jnp.clip(jnp.searchsorted(cum, slots, side="right") - 1, 0, sizes.shape[0] - 1)
+    within = slots - cum[which]
+    valid = slots < jnp.minimum(total, max_scan)
+    gather_pos = jnp.clip(starts[which] + within, 0, index.sorted_rows.shape[0] - 1)
+    return index.sorted_rows[gather_pos], valid
+
+
+@partial(jax.jit, static_argnames=("nprobe", "max_scan", "k"))
+def search(
+    index: IVFIndex,
+    vectors: jax.Array,  # (n, d) the indexed column
+    scalars: jax.Array,  # (n, M)
+    pred: Predicates,
+    q: jax.Array,  # (d,)
+    *,
+    nprobe: int,
+    max_scan: int,
+    k: int,
+):
+    """Index-first filtered search on one vector column.
+
+    Returns (ids (k,), scores (k,), n_scored (), n_qualified ()). Unfilled
+    result slots carry id -1 / score NEG.
+    """
+    csim = similarity(q, index.centroids, index.metric)
+    _, probe_clusters = jax.lax.top_k(csim, nprobe)
+    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    cand_vecs = vectors[rows]
+    cand_scal = scalars[rows]
+    scores = similarity(q, cand_vecs, index.metric)
+    qual = eval_mask(pred, cand_scal) & valid
+    masked = jnp.where(qual, scores, NEG)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_scores > NEG / 2, rows[top_idx], -1)
+    return ids, top_scores, jnp.sum(valid), jnp.sum(qual)
+
+
+@partial(jax.jit, static_argnames=("nprobe", "probe_k"))
+def preprobe(
+    index: IVFIndex,
+    vectors: jax.Array,
+    scalars: jax.Array,
+    pred: Predicates,
+    q: jax.Array,
+    *,
+    nprobe: int = 1,
+    probe_k: int = 32,
+):
+    """Paper §3.3 neighborhood pre-probing: a cheap *unfiltered* ANN probe,
+    then the local satisfaction rate of the predicates among those neighbors.
+
+    Returns (rate (), mean_top_score ()).
+    """
+    csim = similarity(q, index.centroids, index.metric)
+    _, probe_clusters = jax.lax.top_k(csim, nprobe)
+    # bound the probe scan: nprobe * expected cluster size * 4
+    n = vectors.shape[0]
+    max_scan = min(n, max(probe_k * 4, (nprobe * 4 * n) // max(1, index.n_clusters)))
+    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    scores = jnp.where(valid, similarity(q, vectors[rows], index.metric), NEG)
+    top_scores, top_idx = jax.lax.top_k(scores, probe_k)
+    neigh_rows = rows[top_idx]
+    ok = eval_mask(pred, scalars[neigh_rows])
+    found = top_scores > NEG / 2
+    rate = jnp.sum(ok & found) / jnp.maximum(jnp.sum(found), 1)
+    mean_s = jnp.sum(jnp.where(found, top_scores, 0.0)) / jnp.maximum(jnp.sum(found), 1)
+    return rate, mean_s

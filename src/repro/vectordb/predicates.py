@@ -1,0 +1,88 @@
+"""Scalar predicates: representation, evaluation and soft encodings.
+
+A conjunctive predicate set Q_S is stored densely over all M scalar columns:
+``active`` marks which columns carry a condition; each condition is the
+closed range ``[lo, hi]`` (equality for categoricals is ``[code, code]``).
+Dense representation keeps the structure static under jit — an inactive
+column is simply the full range.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Predicates:
+    active: jax.Array  # (M,) bool
+    lo: jax.Array  # (M,) f32
+    hi: jax.Array  # (M,) f32
+
+    def tree_flatten(self):
+        return (self.active, self.lo, self.hi), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def none(m: int) -> "Predicates":
+        return Predicates(
+            active=jnp.zeros((m,), bool),
+            lo=jnp.full((m,), -jnp.inf),
+            hi=jnp.full((m,), jnp.inf),
+        )
+
+    @staticmethod
+    def from_conditions(m: int, conds: dict[int, tuple[float, float]]) -> "Predicates":
+        active = np.zeros((m,), bool)
+        lo = np.full((m,), -np.inf, np.float32)
+        hi = np.full((m,), np.inf, np.float32)
+        for idx, (l, h) in conds.items():
+            active[idx] = True
+            lo[idx] = l
+            hi[idx] = h
+        return Predicates(jnp.asarray(active), jnp.asarray(lo), jnp.asarray(hi))
+
+
+def eval_mask(pred: Predicates, scalars: jax.Array) -> jax.Array:
+    """(n, M) scalars -> (n,) bool conjunction mask."""
+    ok = (scalars >= pred.lo) & (scalars <= pred.hi)
+    ok = ok | ~pred.active  # inactive columns always pass
+    return jnp.all(ok, axis=-1)
+
+
+def soft_encode(
+    pred: Predicates, edges: jax.Array
+) -> jax.Array:
+    """Paper §3.2 'Scalar Encoding' generalized to predicates.
+
+    ``edges``: (M, B+1) per-column bin edges. A point value one-hots into its
+    bin; a range spreads unit mass over the bins it overlaps; an inactive
+    column is maximum-entropy (uniform). Returns (M, B).
+    """
+    lo = jnp.maximum(pred.lo[:, None], edges[:, :-1])
+    hi = jnp.minimum(pred.hi[:, None], edges[:, 1:])
+    width = jnp.maximum(edges[:, 1:] - edges[:, :-1], 1e-12)
+    overlap = jnp.clip(hi - lo, 0.0, None) / width
+    # point predicates (lo == hi) get an indicator on the containing bin
+    point = (pred.lo >= edges[:, :-1].T).T & (pred.lo <= edges[:, 1:].T).T
+    is_point = (pred.hi - pred.lo)[:, None] <= 1e-12
+    mass = jnp.where(is_point, point.astype(jnp.float32), overlap)
+    mass_sum = jnp.sum(mass, axis=-1, keepdims=True)
+    uniform = jnp.full_like(mass, 1.0 / mass.shape[-1])
+    enc = jnp.where(mass_sum > 0, mass / jnp.maximum(mass_sum, 1e-12), uniform)
+    return jnp.where(pred.active[:, None], enc, uniform)
+
+
+def value_encode(values: jax.Array, edges: jax.Array) -> jax.Array:
+    """One-hot bin encoding of concrete scalar values. values: (M,) -> (M, B)."""
+    b = edges.shape[1] - 1
+    idx = jnp.clip(
+        jax.vmap(jnp.searchsorted)(edges, values) - 1, 0, b - 1
+    )
+    return jax.nn.one_hot(idx, b)

@@ -1,0 +1,102 @@
+"""Columnar vector+scalar table — the storage substrate for MHQ.
+
+A table holds N vector columns and M scalar columns (paper Fig. 1). All
+scalar columns are stored as a dense ``(n, M)`` float32 matrix; categorical
+columns carry integer category codes (their cardinality lives in the schema),
+so every predicate is expressible as a closed range ``[lo, hi]`` (equality is
+``[c, c]``). This keeps predicate evaluation a single fused compare-reduce on
+TPU, and the encoder re-expands categoricals to one-hot from the codes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarCol:
+    name: str
+    kind: str  # "num" | "cat"
+    n_categories: int = 0  # for "cat"
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorCol:
+    name: str
+    dim: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSchema:
+    vector_cols: tuple[VectorCol, ...]
+    scalar_cols: tuple[ScalarCol, ...]
+    metric: str = "dot"  # "dot" (higher=closer) | "l2" (lower=closer)
+
+    @property
+    def n_vec(self) -> int:
+        return len(self.vector_cols)
+
+    @property
+    def n_scalar(self) -> int:
+        return len(self.scalar_cols)
+
+    def vec_index(self, name: str) -> int:
+        return [v.name for v in self.vector_cols].index(name)
+
+
+@dataclasses.dataclass
+class Table:
+    schema: TableSchema
+    vectors: list[jax.Array]  # one (n, d_i) per vector column
+    scalars: jax.Array  # (n, M) float32
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.scalars.shape[0])
+
+    @staticmethod
+    def from_numpy(schema: TableSchema, vectors: list[np.ndarray], scalars: np.ndarray) -> "Table":
+        assert len(vectors) == schema.n_vec
+        n = scalars.shape[0]
+        for v, col in zip(vectors, schema.vector_cols):
+            assert v.shape == (n, col.dim), (v.shape, col)
+        assert scalars.shape == (n, schema.n_scalar)
+        return Table(
+            schema=schema,
+            vectors=[jnp.asarray(v, jnp.float32) for v in vectors],
+            scalars=jnp.asarray(scalars, jnp.float32),
+        )
+
+    def append(self, vectors: list[np.ndarray], scalars: np.ndarray) -> "Table":
+        """Immutable append (used by the data-update experiments)."""
+        return Table(
+            schema=self.schema,
+            vectors=[jnp.concatenate([a, jnp.asarray(b, jnp.float32)]) for a, b in zip(self.vectors, vectors)],
+            scalars=jnp.concatenate([self.scalars, jnp.asarray(scalars, jnp.float32)]),
+        )
+
+
+def similarity(q: jax.Array, vecs: jax.Array, metric: str) -> jax.Array:
+    """Score rows of ``vecs`` (n, d) against ``q`` (d,). Higher = better."""
+    if metric == "dot":
+        return vecs @ q
+    if metric == "l2":
+        # -||v - q||^2 expanded — keeps it a single matmul + row norms
+        return 2.0 * (vecs @ q) - jnp.sum(vecs * vecs, axis=-1) - jnp.sum(q * q)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def weighted_score(
+    table: Table, query_vectors: list[jax.Array], weights: jax.Array, rows: Optional[jax.Array] = None
+) -> jax.Array:
+    """Composite score Σ_i w_i · sim(q_i, o.v_i) (paper §1 definition)."""
+    total = None
+    for i, q in enumerate(query_vectors):
+        vecs = table.vectors[i] if rows is None else table.vectors[i][rows]
+        s = weights[i] * similarity(q, vecs, table.schema.metric)
+        total = s if total is None else total + s
+    return total

@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see 1 CPU device; multi-device tests run in
+subprocesses (tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_table():
+    from repro.bench import datasets
+
+    return datasets.make("part", rows=1500, seed=0)

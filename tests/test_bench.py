@@ -1,0 +1,86 @@
+"""Benchmark construction (§4): correlation properties + stratification."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.bench import augment, datasets, queries
+from repro.vectordb.predicates import eval_mask
+
+
+def test_cluster_labels_are_vector_correlated():
+    """Rows sharing a cluster label must be closer than random pairs."""
+    rng = np.random.default_rng(0)
+    vecs = datasets._mixture_vectors(2000, 32, n_comp=8, seed=1)
+    labels = augment.cluster_labels(vecs, n_clusters=8, seed=0)
+    d_same, d_diff = [], []
+    for _ in range(300):
+        i, j = rng.integers(0, 2000, 2)
+        d = np.linalg.norm(vecs[i] - vecs[j])
+        (d_same if labels[i] == labels[j] else d_diff).append(d)
+    assert np.mean(d_same) < np.mean(d_diff)
+
+
+def test_hyperplane_codes_binary_structure():
+    vecs = datasets._mixture_vectors(500, 16, seed=2)
+    codes = augment.hyperplane_codes(vecs, n_planes=4, seed=0)
+    assert codes.min() >= 0 and codes.max() < 16
+    assert len(np.unique(codes)) > 2
+
+
+def test_refdist_is_continuous_and_smooth():
+    vecs = datasets._mixture_vectors(500, 16, seed=3)
+    d = augment.refpoint_distance_sum(vecs, n_refs=4, seed=0)
+    assert d.std() > 0
+    # neighbours in vector space have close ref-dist sums
+    i = np.argsort(vecs[:, 0])
+    assert abs(d[i[0]] - d[i[1]]) < d.std() * 3
+
+
+def test_hash_embed_correlates_with_scalars():
+    scal, _ = datasets._scalar_table(1500, seed=0)
+    v = augment.hash_embed(scal, 64, seed=0)
+    # same category rows more similar than different-category rows
+    cats = scal[:, 0]
+    c = cats[0]
+    same = v[cats == c]
+    diff = v[cats != c]
+    sim_same = (same[:50] @ same[:50].T).mean()
+    sim_diff = (same[:50] @ diff[:50].T).mean()
+    assert sim_same > sim_diff
+
+
+def test_lm_embed_runs_with_assigned_arch():
+    scal, _ = datasets._scalar_table(64, seed=0)
+    v = augment.lm_embed(scal, 32, arch="stablelm-1.6b", smoke=True, seq=8)
+    assert v.shape == (64, 32)
+    np.testing.assert_allclose(np.linalg.norm(v, axis=1), 1.0, atol=1e-3)
+
+
+def test_all_dataset_specs_build():
+    for name in datasets.SPECS:
+        t = datasets.make(name, rows=300, seed=0)
+        assert t.n_rows == 300
+        assert t.schema.n_vec == len(datasets.SPECS[name].dims)
+        for v, vc in zip(t.vectors, t.schema.vector_cols):
+            assert v.shape == (300, vc.dim)
+            assert np.isfinite(np.asarray(v)).all()
+
+
+def test_workload_selectivity_stratified(tiny_table):
+    wl = queries.gen_workload(tiny_table, 40, n_vec_used=2, seed=0)
+    sels = queries.workload_selectivities(tiny_table, wl)
+    # must cover both selective and permissive regimes
+    assert (sels < 0.3).sum() >= 5
+    assert (sels > 0.6).sum() >= 5
+    # weights: w1 + w2 == 1
+    for q in wl:
+        assert abs(sum(q.weights) - 1.0) < 1e-6
+
+
+def test_workload_predicates_valid(tiny_table):
+    wl = queries.gen_workload(tiny_table, 10, seed=3)
+    for q in wl:
+        assert bool(q.predicates.active.any())
+        mask = eval_mask(q.predicates, tiny_table.scalars)
+        assert mask.dtype == jnp.bool_

@@ -1,0 +1,163 @@
+"""BoomHQ core: data encoder anomaly signal, query encoder features,
+executor strategies, rewriter training, end-to-end optimizer behaviour."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.data_encoder import DataEncoder, DataEncoderConfig
+from repro.core.executor import (
+    ENGINES, HybridExecutor, MILVUS, PGVECTOR, recall_at_k,
+)
+from repro.core.query import ExecutionPlan, MHQ, SubqueryParams, default_plan
+from repro.core.query_encoder import QueryEncoder
+from repro.core.rewriter import MHQRewriter, RewriterConfig, candidate_plans
+from repro.vectordb import flat, histogram, ivf
+from repro.vectordb.predicates import Predicates
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    table = datasets.make("part", rows=2000, seed=0)
+    wl = queries.gen_workload(table, 20, n_vec_used=2, seed=1)
+    return table, wl
+
+
+def _fast_cfg(**over):
+    return BoomHQConfig(
+        n_clusters=16,
+        encoder=DataEncoderConfig(frozen_steps=25, ae_steps=40, sample=512),
+        rewriter=RewriterConfig(steps=80, refine_columns=False), **over)
+
+
+def test_data_encoder_anomaly_signal(small_setup):
+    """ε_recon must be higher for anomalous vector–scalar pairings than for
+    pairings drawn from the data (the paper's core §3.2 claim)."""
+    table, _ = small_setup
+    de = DataEncoder([v.shape[1] for v in table.vectors], table.schema.n_scalar,
+                     DataEncoderConfig(frozen_steps=80, ae_steps=150, sample=1024))
+    de.fit(table)
+    scal = np.asarray(table.scalars)
+    m = table.schema.n_scalar
+    normal_errs, anom_errs = [], []
+    rng = np.random.default_rng(0)
+    for i in rng.integers(0, table.n_rows, 24):
+        qv = [jnp.asarray(np.asarray(v[i])) for v in table.vectors]
+        # matched pairing: this row's own scalar values as point predicates
+        pred_ok = Predicates.from_conditions(
+            m, {j: (float(scal[i, j]), float(scal[i, j])) for j in range(2)})
+        # anomalous: another random row's categories
+        j = (i + 997) % table.n_rows
+        pred_bad = Predicates.from_conditions(
+            m, {0: (float(scal[j, 0]), float(scal[j, 0])),
+                1: (float((scal[i, 1] + 13) % 50), float((scal[i, 1] + 13) % 50))})
+        normal_errs.append(float(de.recon_errors(qv, pred_ok).mean()))
+        anom_errs.append(float(de.recon_errors(qv, pred_bad).mean()))
+    assert np.mean(anom_errs) > np.mean(normal_errs)
+
+
+def test_local_probe_tracks_neighborhood_density(small_setup):
+    table, _ = small_setup
+    idxs = [ivf.build(v, 16, seed=i) for i, v in enumerate(table.vectors)]
+    hists = histogram.build(table.scalars)
+    qe = QueryEncoder(table, idxs, hists, None)
+    m = table.schema.n_scalar
+    row = 17
+    qv = tuple(jnp.asarray(np.asarray(v[row])) for v in table.vectors)
+    scal = np.asarray(table.scalars)
+    # predicate satisfied by this row's own cluster -> high local rate
+    pred_local = Predicates.from_conditions(
+        m, {0: (float(scal[row, 0]), float(scal[row, 0]))})
+    # impossible predicate -> zero local rate
+    pred_none = Predicates.from_conditions(m, {2: (1e9, 2e9)})
+    q1 = MHQ(qv, (1.0, 0.0), pred_local)
+    q2 = MHQ(qv, (1.0, 0.0), pred_none)
+    r1, _ = qe.local_probe(q1)
+    r2, _ = qe.local_probe(q2)
+    assert r1[0] > r2[0]
+    assert r2[0] == 0.0
+
+
+def test_executor_strategies_reach_target(small_setup):
+    table, wl = small_setup
+    idxs = [ivf.build(v, 16, seed=i) for i, v in enumerate(table.vectors)]
+    ex = HybridExecutor(table, idxs, PGVECTOR)
+    q = wl[0]
+    gt, _ = flat.ground_truth(table, list(q.query_vectors), list(q.weights),
+                              q.predicates, q.k)
+    # exhaustive variants must hit recall 1.0
+    ff = ExecutionPlan("filter_first",
+                       tuple(SubqueryParams() for _ in range(q.n_vec)),
+                       max_candidates=table.n_rows)
+    ids, _ = ex.execute(q, ff)
+    assert recall_at_k(ids, gt) == 1.0
+    big = ExecutionPlan("index_scan", tuple(
+        SubqueryParams(k_mult=8, nprobe=16, max_scan=table.n_rows,
+                       iterative=True) for _ in range(q.n_vec)))
+    ids, _ = ex.execute(q, big)
+    assert recall_at_k(ids, gt) >= 0.9
+
+
+def test_engine_legalization(small_setup):
+    table, wl = small_setup
+    idxs = [ivf.build(v, 16, seed=i) for i, v in enumerate(table.vectors)]
+    ex = HybridExecutor(table, idxs, MILVUS)
+    plan = ExecutionPlan("index_scan", (
+        SubqueryParams(k_mult=8, nprobe=32, max_scan=128, iterative=True),
+        SubqueryParams(k_mult=2, nprobe=4, max_scan=64, iterative=True)))
+    legal = ex.legalize(plan)
+    for s in legal.subqueries:
+        assert not s.iterative  # milvus: no iterative_scan
+        assert s.max_scan == MILVUS.default_max_scan  # no max_scan_tuples
+    # per-column k_i / nprobe remain free (BoomHQ tunes them per column, §5.4)
+    assert legal.subqueries[0].k_mult == 8
+    assert legal.subqueries[1].k_mult == 2
+
+
+def test_single_index_skew_guard(small_setup):
+    table, wl = small_setup
+    bq = BoomHQ(table, _fast_cfg())
+    bq.fit(wl[:10])
+    q = dataclasses.replace(wl[10], weights=(0.5, 0.5))
+    plan = bq.optimize(q)
+    assert plan.strategy != "single_index"  # balanced weights never single-index
+
+
+def test_boomhq_end_to_end_recall(small_setup):
+    table, wl = small_setup
+    bq = BoomHQ(table, _fast_cfg())
+    bq.fit(wl[:14])
+    recs = []
+    for q in wl[14:]:
+        gt, _ = flat.ground_truth(table, list(q.query_vectors),
+                                  list(q.weights), q.predicates, q.k)
+        ids, _ = bq.execute(q)
+        recs.append(recall_at_k(ids, gt))
+    assert np.mean(recs) >= 0.75  # tiny training set; safeguards carry it
+
+
+def test_boomhq_insert_keeps_working(small_setup):
+    table, wl = small_setup
+    bq = BoomHQ(table, _fast_cfg())
+    bq.fit(wl[:10])
+    n0 = bq.table.n_rows
+    rng = np.random.default_rng(9)
+    vecs = [np.asarray(v[:100]) + 0.01 for v in table.vectors]
+    scal = np.asarray(table.scalars[:100])
+    bq.insert(vecs, scal, finetune=True)
+    assert bq.table.n_rows == n0 + 100
+    q = wl[12]
+    gt, _ = flat.ground_truth(bq.table, list(q.query_vectors), list(q.weights),
+                              q.predicates, q.k)
+    ids, _ = bq.execute(q)
+    assert recall_at_k(ids, gt) >= 0.5
+
+
+def test_candidate_plans_cover_strategies():
+    plans = candidate_plans(2, weights=(0.95, 0.05))
+    strategies = {p.strategy for p in plans}
+    assert strategies == {"filter_first", "index_scan", "single_index"}

@@ -1,0 +1,76 @@
+"""The scan-aware HLO analyzer: trip-count multiplication and dot flops."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_plain_matmul_flops():
+    def f(a, b):
+        return a @ b
+
+    comp = _compile(f, jnp.zeros((64, 128)), jnp.zeros((128, 32)))
+    r = hlo_analysis.analyze(comp.as_text())
+    expect = 2 * 64 * 128 * 32
+    assert abs(r["flops"] - expect) / expect < 0.05
+
+
+def test_scan_multiplies_body_flops():
+    w = jnp.zeros((32, 32))
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    comp = _compile(f, jnp.zeros((8, 32)))
+    r = hlo_analysis.analyze(comp.as_text())
+    expect = 10 * 2 * 8 * 32 * 32  # 10 trips
+    assert abs(r["flops"] - expect) / expect < 0.1, r["flops"]
+    assert r["unknown_trip_whiles"] == 0
+
+
+def test_nested_scan_multiplies_twice():
+    w = jnp.zeros((16, 16))
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    comp = _compile(f, jnp.zeros((4, 16)))
+    r = hlo_analysis.analyze(comp.as_text())
+    expect = 3 * 4 * 2 * 4 * 16 * 16
+    assert abs(r["flops"] - expect) / expect < 0.1, r["flops"]
+
+
+def test_bytes_nonzero_and_scaled_by_trips():
+    def f1(x):
+        return x + 1.0
+
+    def f10(x):
+        def body(c, _):
+            return c + 1.0, None
+
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    r1 = hlo_analysis.analyze(_compile(f1, jnp.zeros((1024,))).as_text())
+    r10 = hlo_analysis.analyze(_compile(f10, jnp.zeros((1024,))).as_text())
+    assert r1["bytes"] > 0
+    assert r10["bytes"] > 5 * r1["bytes"]  # ~10x modulo loop overhead

@@ -1,0 +1,77 @@
+"""End-to-end behaviour: the paper's pipeline on a small table, plus the
+input-spec deliverable and engine personalities."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.data_encoder import DataEncoderConfig
+from repro.core.executor import recall_at_k
+from repro.core.rewriter import RewriterConfig
+from repro.vectordb import flat
+
+
+def _cfg():
+    return BoomHQConfig(
+        n_clusters=16,
+        encoder=DataEncoderConfig(frozen_steps=30, ae_steps=50, sample=512),
+        rewriter=RewriterConfig(steps=120, refine_columns=False))
+
+
+def test_full_pipeline_meets_recall_targets():
+    table = datasets.make("aka_title", rows=2500, seed=4)
+    wl = queries.gen_workload(table, 26, n_vec_used=2, seed=5)
+    bq = BoomHQ(table, _cfg())
+    metrics = bq.fit(wl[:18])
+    assert metrics["strategy_acc"] > 0.4
+    recs = []
+    for q in wl[18:]:
+        gt, _ = flat.ground_truth(table, list(q.query_vectors),
+                                  list(q.weights), q.predicates, q.k)
+        ids, scores = bq.execute(q)
+        recs.append(recall_at_k(ids, gt))
+        # scores sorted descending among valid entries
+        s = np.asarray(scores)
+        valid = s > -1e29
+        assert (np.diff(s[valid]) <= 1e-5).all()
+    assert np.mean(recs) >= 0.7
+
+
+def test_plans_adapt_across_queries():
+    table = datasets.make("part", rows=2500, seed=6)
+    wl = queries.gen_workload(table, 40, n_vec_used=2, seed=7)
+    bq = BoomHQ(table, _cfg())
+    bq.fit(wl[:30])
+    plans = [bq.optimize(q) for q in wl[30:]]
+    descs = {p.describe() for p in plans}
+    assert len(descs) >= 2, descs  # per-query adaptation, not one static plan
+
+
+def test_input_specs_cover_all_cells():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.launch.input_specs import input_specs
+
+    n_cells = 0
+    for arch in configs.ARCHS:
+        for shape in SHAPES:
+            specs = input_specs(arch, shape)
+            assert isinstance(specs, dict) and specs
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+            n_cells += 1
+    assert n_cells == 40  # the assigned 10 archs × 4 shapes
+
+
+def test_engine_personalities_registered():
+    from repro.core.executor import ENGINES
+
+    assert set(ENGINES) == {"pgvector", "milvus", "opensearch"}
+    assert ENGINES["pgvector"].iterative_scan
+    assert not ENGINES["milvus"].iterative_scan
+    assert not ENGINES["opensearch"].max_scan_tuples

@@ -1,0 +1,121 @@
+"""vectordb substrate: predicates, histograms, IVF, flat scans."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.vectordb import flat, histogram, ivf
+from repro.vectordb.predicates import Predicates, eval_mask, soft_encode
+from repro.vectordb.table import Table, similarity, weighted_score
+
+
+def test_eval_mask_conjunction(tiny_table):
+    t = tiny_table
+    pred = Predicates.from_conditions(
+        t.schema.n_scalar, {2: (0.0, 2.0), 3: (100.0, np.inf)})
+    mask = np.asarray(eval_mask(pred, t.scalars))
+    scal = np.asarray(t.scalars)
+    expect = (scal[:, 2] >= 0) & (scal[:, 2] <= 2) & (scal[:, 3] >= 100)
+    assert np.array_equal(mask, expect)
+
+
+def test_eval_mask_inactive_passes(tiny_table):
+    t = tiny_table
+    pred = Predicates.none(t.schema.n_scalar)
+    assert np.asarray(eval_mask(pred, t.scalars)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(lo=st.floats(0, 500), width=st.floats(0.1, 500), col=st.integers(2, 3))
+def test_histogram_selectivity_close_to_exact(lo, width, col):
+    rng = np.random.default_rng(42)
+    scal = np.stack([rng.integers(0, 10, 4000).astype(np.float32),
+                     rng.uniform(0, 1000, 4000).astype(np.float32),
+                     rng.uniform(0, 1000, 4000).astype(np.float32),
+                     rng.lognormal(3, 1, 4000).astype(np.float32)], axis=1)
+    h = histogram.build(jnp.asarray(scal), n_bins=64)
+    pred = Predicates.from_conditions(4, {col: (lo, lo + width)})
+    est = float(histogram.estimate_selectivity(h, pred))
+    exact = float(np.mean((scal[:, col] >= lo) & (scal[:, col] <= lo + width)))
+    assert abs(est - exact) < 0.06  # histogram-resolution error bound
+
+
+def test_histogram_update_matches_rebuild():
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0, 10, (2000, 2)).astype(np.float32)
+    b = rng.uniform(0, 10, (500, 2)).astype(np.float32)  # same range
+    h1 = histogram.update(histogram.build(jnp.asarray(a), 32), jnp.asarray(b))
+    pred = Predicates.from_conditions(2, {0: (2.0, 5.0)})
+    est1 = float(histogram.estimate_selectivity(h1, pred))
+    exact = float(np.mean((np.concatenate([a, b])[:, 0] >= 2)
+                          & (np.concatenate([a, b])[:, 0] <= 5)))
+    assert abs(est1 - exact) < 0.05
+
+
+def test_ivf_unfiltered_recall(tiny_table):
+    t = tiny_table
+    idx = ivf.build(t.vectors[0], 16, metric="dot")
+    q = np.asarray(t.vectors[0][7])  # a data point: its NN is itself
+    pred = Predicates.none(t.schema.n_scalar)
+    ids, scores, n_scored, n_qual = ivf.search(
+        idx, t.vectors[0], t.scalars, pred, jnp.asarray(q),
+        nprobe=16, max_scan=t.n_rows, k=10)
+    qs = [jnp.asarray(np.asarray(v[7])) for v in t.vectors]
+    w = [1.0] + [0.0] * (t.schema.n_vec - 1)
+    gt, _ = flat.ground_truth(t, qs, w, pred, 10)
+    # full probe == exhaustive
+    assert set(np.asarray(ids).tolist()) == set(np.asarray(gt).tolist())
+
+
+def test_ivf_filtered_only_qualifying(tiny_table):
+    t = tiny_table
+    idx = ivf.build(t.vectors[0], 16)
+    pred = Predicates.from_conditions(t.schema.n_scalar, {0: (3.0, 3.0)})
+    q = jnp.asarray(np.asarray(t.vectors[0][3]))
+    ids, _, _, _ = ivf.search(idx, t.vectors[0], t.scalars, pred, q,
+                              nprobe=16, max_scan=t.n_rows, k=10)
+    scal = np.asarray(t.scalars)
+    for i in np.asarray(ids):
+        if i >= 0:
+            assert scal[i, 0] == 3.0
+
+
+def test_ivf_extend_finds_new_rows(tiny_table):
+    t = tiny_table
+    idx = ivf.build(t.vectors[0], 16)
+    rng = np.random.default_rng(3)
+    new_vecs = np.asarray(t.vectors[0][:5]) + 1e-4
+    idx2 = ivf.extend(idx, jnp.asarray(new_vecs), t.n_rows)
+    assert idx2.sorted_rows.shape[0] == t.n_rows + 5
+    t2 = t.append([new_vecs] + [np.asarray(v[:5]) for v in t.vectors[1:]],
+                  np.asarray(t.scalars[:5]))
+    pred = Predicates.none(t.schema.n_scalar)
+    ids, _, _, _ = ivf.search(idx2, t2.vectors[0], t2.scalars, pred,
+                              jnp.asarray(new_vecs[0]), nprobe=16,
+                              max_scan=t2.n_rows, k=3)
+    assert int(np.asarray(ids)[0]) in (t.n_rows, 0)  # the clone or original
+
+
+def test_filter_first_matches_masked_scan(tiny_table):
+    t = tiny_table
+    pred = Predicates.from_conditions(t.schema.n_scalar, {3: (200.0, 800.0)})
+    qs = tuple(jnp.asarray(np.asarray(v[11])) for v in t.vectors)
+    w = jnp.asarray([0.6, 0.4])
+    a_ids, a_s, _, _ = flat.filter_first(
+        tuple(t.vectors), t.scalars, pred, qs, w, k=10,
+        max_candidates=t.n_rows, n_vec=t.schema.n_vec)
+    b_ids, b_s, _, _ = flat.masked_scan(
+        tuple(t.vectors), t.scalars, pred, qs, w, k=10, n_vec=t.schema.n_vec)
+    assert np.allclose(np.sort(np.asarray(a_s)), np.sort(np.asarray(b_s)),
+                       atol=1e-4)
+
+
+def test_weighted_score_definition(tiny_table):
+    t = tiny_table
+    qs = [jnp.asarray(np.asarray(v[0])) for v in t.vectors]
+    w = jnp.asarray([0.3, 0.7])
+    s = weighted_score(t, qs, w)
+    manual = 0.3 * np.asarray(t.vectors[0]) @ np.asarray(qs[0]) \
+        + 0.7 * np.asarray(t.vectors[1]) @ np.asarray(qs[1])
+    assert np.allclose(np.asarray(s), manual, atol=1e-4)
