@@ -15,7 +15,7 @@ import time
 
 from benchmarks import (
     ablation, common, cross_engine, data_updates, datasets_table,
-    kernels_bench, multi_vector, roofline, single_vector, weight_skew,
+    kernels_bench, multi_vector, roofline, serving, single_vector, weight_skew,
 )
 
 BENCHES = {
@@ -28,6 +28,7 @@ BENCHES = {
     "fig7": ablation.run,
     "kernels": kernels_bench.run,
     "roofline": roofline.run,
+    "serving": serving.run,
 }
 
 NO_SIZES = ("table1", "kernels", "roofline")

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point: install dev deps, run the test suite.
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements-dev.txt
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -1,0 +1,23 @@
+"""jax version compatibility shims.
+
+The repo targets the modern public APIs (``jax.shard_map``,
+``jax.sharding.AxisType``) but must also run on jax 0.4.x, where shard_map
+still lives in ``jax.experimental`` (with ``check_rep`` instead of
+``check_vma``) and mesh axis types don't exist yet.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` with fallback to the 0.4.x experimental API."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kwargs)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kwargs)

@@ -114,10 +114,16 @@ class BoomHQ:
             jnp.asarray(q.recall_target, jnp.float32))
         return np.asarray(x)
 
-    def _build_fused_features(self):
+    def _build_fused_features(self, scored: bool = False):
         """One jitted function assembling X_in exactly like
         QueryFeatures.x_in(): [ε_recon; rates; probe_scores; σ, log1p(1/σ);
-        weights; log k, E_rec; S_enc]."""
+        weights; log k, E_rec; S_enc].
+
+        ``scored=True`` builds the batched variant: it takes one extra
+        ``row_scores`` arg (a per-column tuple of (n,) similarities,
+        precomputed by a whole-batch GEMM) and pre-probes by gathering f32
+        scores instead of vectors — the vmapped vector gather is the
+        dominant batched-optimizer cost on CPU."""
         from functools import partial
 
         from repro.core.query_encoder import S_ENC_BINS  # noqa: F401
@@ -132,7 +138,7 @@ class BoomHQ:
 
         @partial(jax.jit, static_argnums=())
         def fused(de_args, senc_edges, hists, indexes, vectors, scalars,
-                  qs, pred, weights, logk, rec):
+                  qs, pred, weights, logk, rec, row_scores=()):
             de_params, de_edges = de_args
             if use_de:
                 es = _soft(pred, de_edges).reshape(-1)
@@ -147,8 +153,14 @@ class BoomHQ:
             if cfg.use_lnp:
                 rates, scores = [], []
                 for i in range(n_vec):
-                    r, s = _ivf.preprobe(indexes[i], vectors[i], scalars, pred,
-                                         qs[i], nprobe=probe_np, probe_k=probe_k)
+                    if scored:
+                        r, s = _ivf.preprobe_scored(
+                            indexes[i], row_scores[i], scalars, pred, qs[i],
+                            nprobe=probe_np, probe_k=probe_k)
+                    else:
+                        r, s = _ivf.preprobe(
+                            indexes[i], vectors[i], scalars, pred, qs[i],
+                            nprobe=probe_np, probe_k=probe_k)
                     rates.append(r)
                     scores.append(s)
                 rates, scores = jnp.stack(rates), jnp.stack(scores)
@@ -197,7 +209,9 @@ class BoomHQ:
             jnp.asarray(q.weights, jnp.float32),
             jnp.asarray(float(np.log(q.k)), jnp.float32),
             jnp.asarray(q.recall_target, jnp.float32)))
-        plan = self.rewriter.plan_from_codes(codes)
+        return self._apply_skew_guard(self.rewriter.plan_from_codes(codes), q)
+
+    def _apply_skew_guard(self, plan: ExecutionPlan, q: MHQ) -> ExecutionPlan:
         if plan.strategy == "single_index":
             wmax = float(np.max(q.weights))
             if wmax >= self.SINGLE_INDEX_MIN_SKEW:
@@ -205,6 +219,44 @@ class BoomHQ:
             else:  # guard: not skewed enough — fall back to per-column scans
                 plan = dataclasses.replace(plan, strategy="index_scan")
         return plan
+
+    def optimize_batch(self, qs: list[MHQ], *,
+                       scores_b: Optional[tuple] = None) -> list[ExecutionPlan]:
+        """Plan a whole batch with ONE fused jit call and ONE host sync:
+        the per-query feature + head pipeline vmapped over the query axis
+        (batch padded to a power-of-two bucket so the jit cache stays
+        bounded). ``scores_b`` — per-column (B_bucket, n) dense similarity
+        matrices from ``compute_batch_scores`` — feeds the pre-probe
+        features; pass the same tuple to the batched executor so the GEMMs
+        run once per batch."""
+        if not qs:
+            return []
+        if not self._fitted:
+            return [default_plan(q.n_vec) for q in qs]
+        if getattr(self, "_plan_batch_jit", None) is None:
+            self._build_plan_batch_jit()
+        from repro.serve.batch import compute_batch_scores, next_bucket
+        if scores_b is None:
+            scores_b = compute_batch_scores(self.table, qs)
+        b = len(qs)
+        qpad = list(qs) + [qs[0]] * (next_bucket(b) - b)
+        de = self.data_encoder
+        de_args = (de.params, de.edges) if (self.cfg.use_de and de is not None) \
+            else (None, None)
+        from repro.vectordb import predicates
+        pred_b = predicates.stack([q.predicates for q in qpad])
+        qv_b = tuple(jnp.stack([q.query_vectors[i] for q in qpad])
+                     for i in range(self.table.schema.n_vec))
+        codes = np.asarray(self._plan_batch_jit(
+            self.rewriter.params, de_args, self.qenc._edges, self.hists,
+            tuple(self.indexes), tuple(self.table.vectors), self.table.scalars,
+            qv_b, pred_b,
+            jnp.asarray([q.weights for q in qpad], jnp.float32),
+            jnp.asarray([float(np.log(q.k)) for q in qpad], jnp.float32),
+            jnp.asarray([q.recall_target for q in qpad], jnp.float32),
+            scores_b))
+        return [self._apply_skew_guard(self.rewriter.plan_from_codes(c), q)
+                for q, c in zip(qs, codes[:b])]
 
     def _build_plan_jit(self):
         fused = self._fused_x if getattr(self, "_fused_x", None) is not None \
@@ -221,6 +273,21 @@ class BoomHQ:
 
         self._plan_jit = plan_jit
 
+    def _build_plan_batch_jit(self):
+        fused = self._build_fused_features(scored=True)
+        rew = self.rewriter
+
+        def one(rw_params, de_args, senc_edges, hists, indexes, vectors,
+                scalars, qs, pred, weights, logk, rec, row_scores):
+            x = fused(de_args, senc_edges, hists, indexes, vectors, scalars,
+                      qs, pred, weights, logk, rec, row_scores)
+            return rew.plan_codes(rw_params, x)
+
+        self._plan_batch_jit = jax.jit(jax.vmap(
+            one,
+            in_axes=(None, None, None, None, None, None, None,
+                     0, 0, 0, 0, 0, 0)))
+
     def execute(self, q: MHQ):
         ids, scores = self.executor.execute(q, self.optimize(q))
         # underfill safeguard: if the plan found fewer than k qualifying rows
@@ -230,6 +297,53 @@ class BoomHQ:
             if int(np.sum(np.asarray(ids2) >= 0)) > int(np.sum(np.asarray(ids) >= 0)):
                 return ids2, scores2
         return ids, scores
+
+    def execute_batch(self, queries: list[MHQ]) -> list:
+        """Batched analogue of execute(): one fused optimizer dispatch for
+        the whole batch, grouped vmapped execution, then one batched
+        underfill-escalation pass. Returns [(ids, scores)] per query."""
+        if not queries:
+            return []
+        from repro.serve.batch import (
+            MAX_BATCH_KERNEL, SLOT_BUDGET, compute_batch_scores, pow2_at_most,
+        )
+        # bound the dense-score working set (batch · n_rows per column) the
+        # same way the executor chunks do — large tables get sub-batches
+        limit = pow2_at_most(max(1, min(
+            MAX_BATCH_KERNEL, SLOT_BUDGET // max(self.table.n_rows, 1))))
+        if len(queries) > limit:
+            out = []
+            for s in range(0, len(queries), limit):
+                out.extend(self.execute_batch(queries[s: s + limit]))
+            return out
+        scores_b = compute_batch_scores(self.table, queries)
+        plans = self.optimize_batch(queries, scores_b=scores_b)
+        bx = self._batched_executor()
+        results = bx.execute_batch(queries, plans, scores_b=scores_b)
+
+        def n_valid(ids) -> int:
+            return int(np.sum(np.asarray(ids) >= 0))
+
+        under = [j for j, (ids, _) in enumerate(results)
+                 if n_valid(ids) < queries[j].k]
+        if under:
+            sub = np.asarray(under)
+            retry = bx.execute_batch(
+                [queries[j] for j in under],
+                [default_plan(queries[j].n_vec) for j in under],
+                scores_b=tuple(s[sub] for s in scores_b))
+            for j, (ids2, s2) in zip(under, retry):
+                if n_valid(ids2) > n_valid(results[j][0]):
+                    results[j] = (ids2, s2)
+        return results
+
+    def _batched_executor(self):
+        from repro.serve.batch import BatchedHybridExecutor
+        if getattr(self, "_batched", None) is None \
+                or self._batched.table is not self.table:
+            self._batched = BatchedHybridExecutor(
+                self.table, self.indexes, self.engine)
+        return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):
         """(ids, scores, seconds) — optimizer overhead INCLUDED (the paper
@@ -255,6 +369,7 @@ class BoomHQ:
         ]
         self.hists = histogram.update(self.hists, jnp.asarray(scalars, jnp.float32))
         self.executor = HybridExecutor(self.table, self.indexes, self.engine)
+        self._batched = None  # rebind the batched executor to the new table
         out = {}
         if self.data_encoder is not None and finetune:
             new_rows = np.arange(first_new, self.table.n_rows)

@@ -51,19 +51,11 @@ OPENSEARCH = EngineCaps("opensearch", max_scan_tuples=False, iterative_scan=Fals
 ENGINES = {e.name: e for e in (PGVECTOR, MILVUS, OPENSEARCH)}
 
 
-@partial(jax.jit, static_argnames=("k", "n_vec", "metric", "total"))
-def _rerank(vectors, pred_mask_rows, rows, qs, w, *, k, n_vec, metric, total):
-    """Re-rank the union of candidate rows by the full weighted score.
-
-    rows: (total,) candidate ids, -1 = empty. Duplicates suppressed by
-    keeping only the first occurrence (sort-based)."""
-    n = vectors[0].shape[0]
-    rows_c = jnp.clip(rows, 0, n - 1)
-    score = jnp.zeros((total,), jnp.float32)
-    for i in range(n_vec):
-        score = score + w[i] * similarity(qs[i], vectors[i][rows_c], metric)
+def _dedup_topk(rows, score, *, k, total):
+    """Top-k over candidate scores with duplicate row ids suppressed by
+    keeping only the first occurrence (sort-based). rows: (total,), -1 =
+    empty slot."""
     valid = rows >= 0
-    # dedupe: sort by row id; mark first occurrence
     order = jnp.argsort(rows)
     sorted_rows = rows[order]
     first = jnp.concatenate([jnp.ones((1,), bool),
@@ -73,6 +65,36 @@ def _rerank(vectors, pred_mask_rows, rows, qs, w, *, k, n_vec, metric, total):
     top_s, top_i = jax.lax.top_k(masked, k)
     ids = jnp.where(top_s > NEG / 2, rows[top_i], -1)
     return ids, top_s
+
+
+@partial(jax.jit, static_argnames=("k", "n_vec", "metric", "total"))
+def _rerank(vectors, pred_mask_rows, rows, qs, w, *, k, n_vec, metric, total):
+    """Re-rank the union of candidate rows by the full weighted score.
+
+    rows: (total,) candidate ids, -1 = empty."""
+    n = vectors[0].shape[0]
+    rows_c = jnp.clip(rows, 0, n - 1)
+    score = jnp.zeros((total,), jnp.float32)
+    for i in range(n_vec):
+        score = score + w[i] * similarity(qs[i], vectors[i][rows_c], metric)
+    return _dedup_topk(rows, score, k=k, total=total)
+
+
+@partial(jax.jit, static_argnames=("k", "total"))
+def rerank_scored(row_scores, rows, *, k, total):
+    """``_rerank`` with the full weighted row scores precomputed (the
+    batched path's per-column GEMMs already hold every candidate's score)."""
+    n = row_scores.shape[0]
+    score = row_scores[jnp.clip(rows, 0, n - 1)]
+    return _dedup_topk(rows, score, k=k, total=total)
+
+
+def plan_columns(q: MHQ, plan: ExecutionPlan) -> tuple:
+    """Vector columns a plan actually searches (shared by the sequential and
+    batched executors so candidate generation can never drift)."""
+    if plan.strategy == "single_index":
+        return (plan.dominant,)
+    return tuple(i for i in range(q.n_vec) if q.weights[i] > 0.0)
 
 
 class HybridExecutor:
@@ -115,10 +137,7 @@ class HybridExecutor:
                 k=q.k, max_candidates=plan.max_candidates, n_vec=q.n_vec)
             return ids, scores
 
-        if plan.strategy == "single_index":
-            cols = [plan.dominant]
-        else:
-            cols = [i for i in range(q.n_vec) if q.weights[i] > 0.0]
+        cols = plan_columns(q, plan)
 
         cand = []
         for i in cols:

@@ -100,24 +100,15 @@ class MHQRewriter:
         return ExecutionPlan(strategy=STRATEGIES[s_idx], subqueries=subs)
 
     def predict(self, x: np.ndarray, *, k: int = 10) -> ExecutionPlan:
-        if not hasattr(self, "_heads_jit") or self._heads_jit is None:
-            self._heads_jit = jax.jit(self._heads)
-        strat, per_col = self._heads_jit(self.params, jnp.asarray(x))
-        s_idx = int(jnp.argmax(strat))
-        subs = []
-        pc = np.asarray(per_col)
-        for i in range(self.n_vec):
-            row = pc[i]
-            np_i = int(np.argmax(row[:N_NP]))
-            ms_i = int(np.argmax(row[N_NP:N_NP + N_MS]))
-            km_i = int(np.argmax(row[N_NP + N_MS:N_NP + N_MS + N_KM]))
-            it = bool(row[-1] > 0.0)
-            subs.append(SubqueryParams(
-                k_mult=KMULT_GRID[km_i], nprobe=NPROBE_GRID[np_i],
-                max_scan=MAX_SCAN_GRID[ms_i], iterative=it))
-        # dominant column for single_index: the largest-weight feature is
-        # embedded in x; we pick it at plan-build time by the caller instead.
-        return ExecutionPlan(strategy=STRATEGIES[s_idx], subqueries=tuple(subs))
+        """Single-query convenience wrapper over the canonical decode path
+        (plan_codes -> plan_from_codes), so the two can never drift.
+
+        Dominant column for single_index: the largest-weight feature is
+        embedded in x; the caller picks it at plan-build time."""
+        if not hasattr(self, "_codes_jit") or self._codes_jit is None:
+            self._codes_jit = jax.jit(self.plan_codes)
+        codes = np.asarray(self._codes_jit(self.params, jnp.asarray(x)))
+        return self.plan_from_codes(codes)
 
     # -- training --------------------------------------------------------------
 

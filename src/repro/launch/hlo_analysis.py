@@ -122,11 +122,17 @@ def analyze(text: str) -> dict:
             if opcode == "dot":
                 out_elems = sum(_shape_elems(s.group(2))
                                 for s in _SHAPE_RE.finditer(type_str))
-                lhs = re.search(r"dot\(%?([\w.\-]+)", line)
+                # lhs operand: either typed inline ("dot(f32[64,128]{1,0}
+                # %arg, ...)" — newer dumps) or a bare name whose type we
+                # look up from its defining instruction
+                lhs = re.search(
+                    r"dot\((?:(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)",
+                    line)
                 cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
                 contract = 1
-                if lhs and cd and lhs.group(1) in result_types:
-                    lhs_type = result_types[lhs.group(1)]
+                if lhs and cd:
+                    lhs_type = lhs.group(1) or \
+                        result_types.get(lhs.group(2), "")
                     sm = _SHAPE_RE.search(lhs_type)
                     if sm:
                         dims = [int(d) for d in sm.group(2).split(",") if d]

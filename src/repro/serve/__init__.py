@@ -1,3 +1,6 @@
 from repro.serve.engine import (  # noqa: F401
     make_prefill_step, make_decode_step, greedy_generate,
 )
+from repro.serve.batch import (  # noqa: F401
+    BatchedHybridExecutor, ServeReport, ServingEngine,
+)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import compat
+
 from repro.vectordb.predicates import Predicates, eval_mask
 from repro.vectordb.table import similarity
 
@@ -51,15 +53,13 @@ def sharded_masked_scan(mesh: Mesh, data_axes=("data",), *, k: int, n_vec: int,
         out_ids = jnp.where(ms > NEG / 2, g_all[mi], -1)
         return out_ids, ms
 
-    from jax.experimental.shard_map import shard_map
-
     vec_specs = tuple(P(axes, None) for _ in range(n_vec))
-    fn = shard_map(
+    fn = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(vec_specs, P(axes, None), P(), tuple(P() for _ in range(n_vec)), P(), P(axes)),
         out_specs=(P(), P()),
-        check_rep=False,
+        check_vma=False,
     )
 
     def run(vectors, scalars, pred, qs, w):
@@ -125,7 +125,7 @@ def sharded_masked_scan_batched(mesh: Mesh, data_axes=("data",), *, k: int,
 
     vec_specs = tuple(P(axes, None) for _ in range(n_vec))
     scale_specs = tuple(P(axes) for _ in range(n_vec)) if int8 else P()
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(vec_specs, scale_specs, P(axes, None), P(),

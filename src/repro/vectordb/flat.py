@@ -49,7 +49,33 @@ def filter_first(
     masked = jnp.where(valid, total, NEG)
     top_scores, top_idx = jax.lax.top_k(masked, k)
     ids = jnp.where(top_scores > NEG / 2, rows_c[top_idx], -1)
-    return ids, top_scores, jnp.sum(valid), jnp.sum(valid)
+    # n_scored is capped by the gather width; n_qualified is the true
+    # qualifying-row count (underfill/escalation logic reads it).
+    return ids, top_scores, jnp.sum(valid), jnp.sum(mask)
+
+
+@partial(jax.jit, static_argnames=("k", "max_candidates"))
+def filter_first_scored(
+    row_scores: jax.Array,  # (n,) precomputed weighted scores for ONE query
+    scalars: jax.Array,
+    pred: Predicates,
+    *,
+    k: int,
+    max_candidates: int,
+):
+    """``filter_first`` with the weighted row scores precomputed — the
+    batched serving path computes Σ_i w_i·(V_i @ q_i) for a whole batch via
+    per-column GEMMs and then runs this per query (matching ``filter_first``
+    up to float reduction order)."""
+    mask = eval_mask(pred, scalars)
+    n = scalars.shape[0]
+    rows = jnp.nonzero(mask, size=max_candidates, fill_value=n)[0]
+    valid = rows < n
+    rows_c = jnp.clip(rows, 0, n - 1)
+    masked = jnp.where(valid, row_scores[rows_c], NEG)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_scores > NEG / 2, rows_c[top_idx], -1)
+    return ids, top_scores, jnp.sum(valid), jnp.sum(mask)
 
 
 @partial(jax.jit, static_argnames=("k", "n_vec", "metric"))

@@ -102,14 +102,18 @@ def extend(index: IVFIndex, new_vectors: jax.Array, first_new_row: int) -> IVFIn
     old_rows = np.asarray(index.sorted_rows)
     old_off = np.asarray(index.offsets)
     C = index.n_clusters
-    buckets = [old_rows[old_off[c]: old_off[c + 1]] for c in range(C)]
-    for r, a in zip(rows, assign):
-        buckets[a] = np.append(buckets[a], r)
-    counts = np.array([len(b) for b in buckets])
+    # One vectorized regroup pass, O((n + inserts) log): a stable sort of
+    # [old assignments ‖ new assignments] keeps each cluster's existing rows
+    # in order and appends the new rows in insertion order behind them.
+    old_assign = np.repeat(np.arange(C), np.diff(old_off))
+    all_assign = np.concatenate([old_assign, assign])
+    all_rows = np.concatenate([old_rows, rows]).astype(np.int32)
+    order = np.argsort(all_assign, kind="stable")
+    counts = np.bincount(all_assign, minlength=C)
     offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
     return IVFIndex(
         centroids=index.centroids,
-        sorted_rows=jnp.asarray(np.concatenate(buckets).astype(np.int32)),
+        sorted_rows=jnp.asarray(all_rows[order]),
         offsets=jnp.asarray(offsets),
         metric=index.metric,
     )
@@ -166,6 +170,37 @@ def search(
     return ids, top_scores, jnp.sum(valid), jnp.sum(qual)
 
 
+@partial(jax.jit, static_argnames=("nprobe", "max_scan", "k"))
+def search_scored(
+    index: IVFIndex,
+    row_scores: jax.Array,  # (n,) this column's precomputed query similarities
+    scalars: jax.Array,
+    pred: Predicates,
+    q: jax.Array,
+    *,
+    nprobe: int,
+    max_scan: int,
+    k: int,
+):
+    """``search`` with the row similarities precomputed.
+
+    The batched serving path scores ALL rows for a whole query batch in one
+    multithreaded GEMM, then runs this cheap slot-select + score-gather per
+    query — gathering f32 scores instead of (max_scan, d) vectors. Results
+    match ``search`` up to float reduction order (GEMM vs gathered matvec).
+    Re-probing at a larger nprobe reuses the same ``row_scores``.
+    """
+    csim = similarity(q, index.centroids, index.metric)
+    _, probe_clusters = jax.lax.top_k(csim, nprobe)
+    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    scores = row_scores[rows]
+    qual = eval_mask(pred, scalars[rows]) & valid
+    masked = jnp.where(qual, scores, NEG)
+    top_scores, top_idx = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_scores > NEG / 2, rows[top_idx], -1)
+    return ids, top_scores, jnp.sum(valid), jnp.sum(qual)
+
+
 @partial(jax.jit, static_argnames=("nprobe", "probe_k"))
 def preprobe(
     index: IVFIndex,
@@ -189,6 +224,10 @@ def preprobe(
     max_scan = min(n, max(probe_k * 4, (nprobe * 4 * n) // max(1, index.n_clusters)))
     rows, valid = _candidate_slots(index, probe_clusters, max_scan)
     scores = jnp.where(valid, similarity(q, vectors[rows], index.metric), NEG)
+    return _probe_stats(scores, rows, scalars, pred, probe_k)
+
+
+def _probe_stats(scores, rows, scalars, pred, probe_k):
     top_scores, top_idx = jax.lax.top_k(scores, probe_k)
     neigh_rows = rows[top_idx]
     ok = eval_mask(pred, scalars[neigh_rows])
@@ -196,3 +235,27 @@ def preprobe(
     rate = jnp.sum(ok & found) / jnp.maximum(jnp.sum(found), 1)
     mean_s = jnp.sum(jnp.where(found, top_scores, 0.0)) / jnp.maximum(jnp.sum(found), 1)
     return rate, mean_s
+
+
+@partial(jax.jit, static_argnames=("nprobe", "probe_k"))
+def preprobe_scored(
+    index: IVFIndex,
+    row_scores: jax.Array,  # (n,) this column's precomputed similarities
+    scalars: jax.Array,
+    pred: Predicates,
+    q: jax.Array,
+    *,
+    nprobe: int = 1,
+    probe_k: int = 32,
+):
+    """``preprobe`` with the row similarities precomputed — the batched
+    optimizer path scores every row for the whole batch in one GEMM (shared
+    with the batched executor) and gathers f32 scores here instead of
+    materializing (batch, max_scan, d) vector tensors under vmap."""
+    csim = similarity(q, index.centroids, index.metric)
+    _, probe_clusters = jax.lax.top_k(csim, nprobe)
+    n = row_scores.shape[0]
+    max_scan = min(n, max(probe_k * 4, (nprobe * 4 * n) // max(1, index.n_clusters)))
+    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    scores = jnp.where(valid, row_scores[rows], NEG)
+    return _probe_stats(scores, rows, scalars, pred, probe_k)

@@ -49,6 +49,16 @@ class Predicates:
         return Predicates(jnp.asarray(active), jnp.asarray(lo), jnp.asarray(hi))
 
 
+def stack(preds: list["Predicates"]) -> "Predicates":
+    """Stack per-query predicate sets along a new leading batch axis — the
+    batched pytree fed to vmapped search kernels ((B, M) per field)."""
+    return Predicates(
+        active=jnp.stack([p.active for p in preds]),
+        lo=jnp.stack([p.lo for p in preds]),
+        hi=jnp.stack([p.hi for p in preds]),
+    )
+
+
 def eval_mask(pred: Predicates, scalars: jax.Array) -> jax.Array:
     """(n, M) scalars -> (n,) bool conjunction mask."""
     ok = (scalars >= pred.lo) & (scalars <= pred.hi)

@@ -1,0 +1,239 @@
+"""Batched serving subsystem + this PR's seed-bug regressions:
+sequential/batched parity, counter semantics, linear IVF inserts, and the
+single rewriter decode path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.data_encoder import DataEncoderConfig
+from repro.core.executor import HybridExecutor, plan_columns, recall_at_k
+from repro.core.query import ExecutionPlan, SubqueryParams, default_plan
+from repro.core.rewriter import MHQRewriter, RewriterConfig, candidate_plans
+from repro.serve.batch import (
+    BatchedHybridExecutor, ServingEngine, next_bucket, pow2_at_most,
+)
+from repro.vectordb import flat, ivf
+from repro.vectordb.predicates import Predicates
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_filter_first_qualified_count_uncapped(tiny_table):
+    """n_qualified must be the TRUE qualifying-row count, not min(count,
+    max_candidates) — escalation logic reads it."""
+    t = tiny_table
+    pred = Predicates.none(t.schema.n_scalar)  # everything qualifies
+    cap = 64
+    assert t.n_rows > cap
+    w = jnp.asarray([1.0] + [0.0] * (t.schema.n_vec - 1), jnp.float32)
+    _, _, n_scored, n_qual = flat.filter_first(
+        tuple(t.vectors), t.scalars, pred,
+        tuple(v[0] for v in t.vectors), w, t.schema.metric,
+        k=5, max_candidates=cap, n_vec=t.schema.n_vec)
+    assert int(n_scored) == cap  # scoring is capped by the gather width
+    assert int(n_qual) == t.n_rows  # the true count is not
+
+
+def _extend_reference(index, new_vectors, first_new_row):
+    """The seed's per-row append semantics (quadratic), kept as the oracle."""
+    d = (jnp.sum(index.centroids * index.centroids, axis=1)[None, :]
+         - 2.0 * (new_vectors @ index.centroids.T))
+    assign = np.asarray(jnp.argmin(d, axis=1))
+    rows = np.arange(first_new_row, first_new_row + new_vectors.shape[0],
+                     dtype=np.int32)
+    old_rows = np.asarray(index.sorted_rows)
+    old_off = np.asarray(index.offsets)
+    buckets = [old_rows[old_off[c]: old_off[c + 1]]
+               for c in range(index.n_clusters)]
+    for r, a in zip(rows, assign):
+        buckets[a] = np.append(buckets[a], r)
+    counts = np.array([len(b) for b in buckets])
+    offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    return np.concatenate(buckets).astype(np.int32), offsets
+
+
+def test_ivf_extend_matches_seed_semantics(rng):
+    vecs = jnp.asarray(rng.normal(size=(800, 16)), jnp.float32)
+    index = ivf.build(vecs, 12, seed=0)
+    new = jnp.asarray(rng.normal(size=(137, 16)), jnp.float32)
+    ref_rows, ref_off = _extend_reference(index, new, 800)
+    ext = ivf.extend(index, new, 800)
+    np.testing.assert_array_equal(np.asarray(ext.sorted_rows), ref_rows)
+    np.testing.assert_array_equal(np.asarray(ext.offsets), ref_off)
+
+
+def test_ivf_extend_empty_clusters(rng):
+    """Regroup must survive clusters that own zero rows."""
+    vecs = jnp.asarray(rng.normal(size=(30, 8)) + 5.0, jnp.float32)
+    index = ivf.build(vecs, 8, seed=1)
+    new = jnp.asarray(rng.normal(size=(4, 8)) + 5.0, jnp.float32)
+    ext = ivf.extend(index, new, 30)
+    ref_rows, ref_off = _extend_reference(index, new, 30)
+    np.testing.assert_array_equal(np.asarray(ext.sorted_rows), ref_rows)
+    np.testing.assert_array_equal(np.asarray(ext.offsets), ref_off)
+    assert sorted(np.asarray(ext.sorted_rows).tolist()) == list(range(34))
+
+
+def test_predict_delegates_to_plan_codes(rng):
+    """predict() and plan_codes->plan_from_codes are one decode path: both
+    must produce the same ExecutionPlan on random inputs."""
+    in_dim, n_vec = 24, 2
+    rew = MHQRewriter(in_dim, n_vec, RewriterConfig(seed=3))
+    for i in range(8):
+        x = rng.normal(size=(in_dim,)).astype(np.float32)
+        via_predict = rew.predict(x)
+        codes = np.asarray(rew.plan_codes(rew.params, jnp.asarray(x)))
+        via_codes = rew.plan_from_codes(codes)
+        assert via_predict == via_codes
+
+
+# ---------------------------------------------------------------------------
+# batched executor parity
+# ---------------------------------------------------------------------------
+
+def assert_results_match(ids_s, scores_s, ids_b, scores_b, *, atol=1e-4):
+    """Per-query parity up to float reduction order: scores must agree to
+    tolerance everywhere, and any position where the ids differ must be a
+    float-tie (both candidates' scores equal within atol) — the batched
+    path scores via GEMM, the sequential one via gathered matvec, so the
+    last ulp may order near-exact ties differently."""
+    ids_s, scores_s = np.asarray(ids_s), np.asarray(scores_s)
+    ids_b, scores_b = np.asarray(ids_b), np.asarray(scores_b)
+    np.testing.assert_allclose(scores_b, scores_s, atol=atol, rtol=1e-5)
+    diff = ids_s != ids_b
+    if np.any(diff):
+        np.testing.assert_allclose(scores_b[diff], scores_s[diff], atol=atol,
+                                   err_msg="ids differ on non-tied scores")
+
+
+def test_bucket_helpers():
+    assert [next_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert next_bucket(3, 16) == 16
+    assert [pow2_at_most(n) for n in (1, 2, 3, 7, 8, 100)] == [1, 2, 2, 4, 8, 64]
+
+
+@pytest.fixture(scope="module")
+def exec_setup(tiny_table):
+    t = tiny_table
+    idx = [ivf.build(v, 16, seed=i, metric=t.schema.metric)
+           for i, v in enumerate(t.vectors)]
+    return t, HybridExecutor(t, idx), BatchedHybridExecutor(t, idx)
+
+
+def test_batched_executor_parity_all_strategies(exec_setup):
+    """Same workload through the sequential loop and the batched path ->
+    identical ids and scores per query, across every strategy (incl. the
+    iterative re-expansion path) and mixed group sizes."""
+    t, seq, bx = exec_setup
+    wl = queries.gen_workload(t, 10, n_vec_used=2, seed=3) + \
+        queries.gen_workload(t, 5, n_vec_used=1, seed=4)
+    grid = candidate_plans(2, weights=(0.9, 0.1)) + [default_plan(2)]
+    plans = [grid[j % len(grid)] for j in range(len(wl))]
+    batched = bx.execute_batch(wl, plans)
+    for q, p, (ids_b, scores_b) in zip(wl, plans, batched):
+        ids_s, scores_s = seq.execute(q, p)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
+def test_batched_executor_filter_first_group(exec_setup):
+    t, seq, bx = exec_setup
+    wl = queries.gen_workload(t, 6, n_vec_used=2, seed=5)
+    plan = ExecutionPlan("filter_first",
+                         tuple(SubqueryParams() for _ in range(2)),
+                         max_candidates=512)
+    batched = bx.execute_batch(wl, [plan] * len(wl))
+    for q, (ids_b, scores_b) in zip(wl, batched):
+        ids_s, scores_s = seq.execute(q, plan)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
+def test_batched_executor_single_index_group(exec_setup):
+    t, seq, bx = exec_setup
+    wl = queries.gen_workload(t, 4, n_vec_used=2, seed=6)
+    plan = ExecutionPlan(
+        "single_index",
+        tuple(SubqueryParams(k_mult=4, nprobe=8) for _ in range(2)),
+        dominant=1)
+    assert plan_columns(wl[0], plan) == (1,)
+    batched = bx.execute_batch(wl, [plan] * len(wl))
+    for q, (ids_b, scores_b) in zip(wl, batched):
+        ids_s, scores_s = seq.execute(q, plan)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: batched optimizer + serving engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fitted():
+    table = datasets.make("part", rows=2000, seed=0)
+    wl = queries.gen_workload(table, 32, n_vec_used=2, seed=1)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=16,
+        encoder=DataEncoderConfig(frozen_steps=25, ae_steps=40, sample=512),
+        rewriter=RewriterConfig(steps=80, refine_columns=False)))
+    bq.fit(wl[:18])
+    return bq, wl[18:]
+
+
+def test_optimize_batch_matches_sequential(fitted):
+    bq, test = fitted
+    plans_seq = [bq.optimize(q) for q in test]
+    plans_bat = bq.optimize_batch(test)
+    assert plans_seq == plans_bat
+
+
+def test_execute_batch_parity_and_recall(fitted):
+    """Batched end-to-end serving returns the sequential path's exact ids
+    and scores — hence zero recall regression by construction."""
+    bq, test = fitted
+    batched = bq.execute_batch(test)
+    seq_recs, bat_recs = [], []
+    for q, (ids_b, scores_b) in zip(test, batched):
+        ids_s, scores_s = bq.execute(q)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+        gt, _ = flat.ground_truth(bq.table, list(q.query_vectors),
+                                  list(q.weights), q.predicates, q.k)
+        seq_recs.append(recall_at_k(ids_s, gt))
+        bat_recs.append(recall_at_k(ids_b, gt))
+    assert np.mean(bat_recs) >= np.mean(seq_recs) - 1e-3
+
+
+def test_serving_engine_reports(fitted):
+    bq, test = fitted
+    gts = [np.asarray(flat.ground_truth(bq.table, list(q.query_vectors),
+                                        list(q.weights), q.predicates,
+                                        q.k)[0]) for q in test]
+    engine = ServingEngine(bq, batch_size=4)
+    engine.warmup(test)
+    results, rep = engine.serve(test, gt_ids=gts)
+    assert len(results) == len(test)
+    assert rep.n_queries == len(test)
+    assert rep.n_batches == (len(test) + 3) // 4
+    assert rep.qps > 0
+    assert rep.mean_recall is not None and 0.0 <= rep.mean_recall <= 1.0
+    assert "QPS" in rep.describe()
+
+
+def test_unfitted_execute_batch_uses_default_plans():
+    table = datasets.make("part", rows=1200, seed=2)
+    wl = queries.gen_workload(table, 3, n_vec_used=2, seed=7)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=8, use_de=False,
+        rewriter=RewriterConfig(steps=10, refine_columns=False)))
+    plans = bq.optimize_batch(wl)
+    assert all(p == default_plan(q.n_vec) for p, q in zip(plans, wl))
+    results = bq.execute_batch(wl)
+    for q, (ids, scores) in zip(wl, results):
+        # parity with the sequential fallback (a query may legitimately
+        # qualify fewer than k rows — e.g. an empty-selectivity predicate)
+        ids_s, scores_s = bq.execute(q)
+        assert_results_match(ids_s, scores_s, ids, scores)

@@ -1,7 +1,8 @@
 """vectordb substrate: predicates, histograms, IVF, flat scans."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
