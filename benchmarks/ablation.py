@@ -5,7 +5,6 @@ w.o. QE-Stats, w.o. QE-GSE, w.o. QE-LNP.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 

@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
-from typing import Callable, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -20,9 +19,9 @@ from repro.bench import datasets, queries
 from repro.core.boomhq import BoomHQ, BoomHQConfig
 from repro.core.data_encoder import DataEncoderConfig
 from repro.core.executor import (
-    ENGINES, EngineCaps, HybridExecutor, PGVECTOR, recall_at_k,
+    EngineCaps, HybridExecutor, PGVECTOR, recall_at_k,
 )
-from repro.core.query import ExecutionPlan, MHQ, SubqueryParams
+from repro.core.query import ExecutionPlan, SubqueryParams
 from repro.core.rewriter import RewriterConfig
 from repro.vectordb import flat
 

@@ -7,7 +7,6 @@ Paper: +71–93% QPS on Milvus, +85–141% on OpenSearch.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core.executor import ENGINES

@@ -11,7 +11,6 @@ import dataclasses
 import numpy as np
 
 from benchmarks import common
-from repro.bench import datasets as bdatasets
 from repro.core.executor import recall_at_k
 from repro.vectordb import flat
 

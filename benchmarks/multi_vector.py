@@ -7,7 +7,6 @@ average QPS improvements, 2× average speedup at thr=0.8 on Part, >25× peak.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

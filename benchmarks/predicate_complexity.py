@@ -1,0 +1,137 @@
+"""Learned plans vs the static default plan on DNF predicate workloads.
+
+The predicate-algebra API (OR-of-ranges, IN-lists, NOTs — compiled to
+clause-grid DNF ``PredicateSet``s) opens the workload prior systems restrict:
+disjunctive predicates whose selectivity the single-conjunction features
+cannot see. This suite fits BoomHQ on a mixed-clause DNF workload and
+compares, per clause bucket:
+
+  * learned per-query plans (``BoomHQ.execute``, optimizer overhead
+    included) vs ``default_plan`` executed on the same engine;
+  * batched serving QPS of the learned path (``ServingEngine``), whose
+    group keys now include the clause bucket.
+
+  PYTHONPATH=src python -m benchmarks.predicate_complexity          # FAST
+  PYTHONPATH=src python -m benchmarks.predicate_complexity --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.data_encoder import DataEncoderConfig
+from repro.core.executor import recall_at_k
+from repro.core.query import default_plan
+from repro.core.rewriter import RewriterConfig
+from repro.serve.batch import ServingEngine
+from repro.vectordb import flat
+from repro.vectordb.predicates import clause_bucket
+
+SMOKE = dict(common.FAST, rows=4000, n_train=16, n_test=12, frozen_steps=25,
+             ae_steps=40, rw_steps=100, n_clusters=16)
+
+
+def _summ(recs, lats):
+    lats = np.asarray(lats)
+    return {"recall": round(float(np.mean(recs)), 3),
+            "lat_ms": round(float(lats.mean() * 1e3), 3),
+            "qps": round(float(1.0 / lats.mean()), 1)}
+
+
+def run(sizes=common.FAST, dataset: str = "part", *, seed: int = 0,
+        batch_size: int = 16) -> dict:
+    table = datasets.make(dataset, rows=sizes["rows"], seed=seed)
+    n = sizes["n_train"] + sizes["n_test"]
+    # mixed-complexity training: the rewriter must see conjunctions AND DNF
+    wl = queries.gen_dnf_workload(table, n, n_vec_used=2, seed=seed + 1,
+                                 clause_counts=(1, 2, 3, 4))
+    train, test = wl[: sizes["n_train"]], wl[sizes["n_train"]:]
+
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=sizes["n_clusters"],
+        encoder=DataEncoderConfig(frozen_steps=sizes["frozen_steps"],
+                                  ae_steps=sizes["ae_steps"], sample=4096),
+        rewriter=RewriterConfig(steps=sizes["rw_steps"])))
+    t0 = time.time()
+    bq.fit(train)
+    fit_s = time.time() - t0
+
+    gts = {id(q): np.asarray(flat.ground_truth(
+        table, list(q.query_vectors), list(q.weights), q.predicates, q.k)[0])
+        for q in test}
+
+    repeats = sizes.get("repeats", 2)
+    per_bucket: dict = {}
+    for q in test:
+        cb = clause_bucket(q.predicates)
+        dplan = default_plan(q.n_vec, bq.engine)
+        ids_l, _, dt_l = bq.execute_timed(q, repeats=repeats)
+        ids_d, _, dt_d = bq.executor.execute_timed(q, dplan, repeats=repeats)
+        slot = per_bucket.setdefault(cb, {"learned": ([], []),
+                                          "default": ([], [])})
+        slot["learned"][0].append(recall_at_k(ids_l, gts[id(q)]))
+        slot["learned"][1].append(dt_l)
+        slot["default"][0].append(recall_at_k(ids_d, gts[id(q)]))
+        slot["default"][1].append(dt_d)
+
+    buckets = {}
+    for cb in sorted(per_bucket):
+        slot = per_bucket[cb]
+        buckets[str(cb)] = {
+            "n_queries": len(slot["learned"][0]),
+            "learned": _summ(*slot["learned"]),
+            "default": _summ(*slot["default"]),
+        }
+
+    # batched serving of the full DNF test stream (mixed clause buckets)
+    engine = ServingEngine(bq, batch_size=batch_size)
+    engine.warmup(test)
+    _, rep = engine.serve(test, gt_ids=[gts[id(q)] for q in test])
+
+    all_l = ([r for s in per_bucket.values() for r in s["learned"][0]],
+             [t for s in per_bucket.values() for t in s["learned"][1]])
+    all_d = ([r for s in per_bucket.values() for r in s["default"][0]],
+             [t for s in per_bucket.values() for t in s["default"][1]])
+    out = {
+        "figure": "predicate_complexity_dnf",
+        "dataset": dataset, "rows": table.n_rows,
+        "n_train": len(train), "n_test": len(test),
+        "fit_seconds": round(fit_s, 1),
+        "per_clause_bucket": buckets,
+        "overall": {"learned": _summ(*all_l), "default": _summ(*all_d)},
+        "batched_learned_qps": round(rep.qps, 1),
+        "batched_learned_recall": round(rep.mean_recall, 3),
+    }
+    print(f"  predicate_complexity {dataset}: learned "
+          f"{out['overall']['learned']['qps']} QPS @ recall "
+          f"{out['overall']['learned']['recall']} vs default "
+          f"{out['overall']['default']['qps']} QPS @ recall "
+          f"{out['overall']['default']['recall']}; batched learned "
+          f"{out['batched_learned_qps']} QPS")
+    for cb, row in buckets.items():
+        print(f"    C<={cb}: learned {row['learned']} | default {row['default']}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="part")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    sizes = SMOKE if args.smoke else (common.FULL if args.full else common.FAST)
+    res = run(sizes, args.dataset)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

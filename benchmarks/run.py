@@ -15,7 +15,8 @@ import time
 
 from benchmarks import (
     ablation, common, cross_engine, data_updates, datasets_table,
-    kernels_bench, multi_vector, roofline, serving, single_vector, weight_skew,
+    kernels_bench, multi_vector, predicate_complexity, roofline, serving,
+    single_vector, weight_skew,
 )
 
 BENCHES = {
@@ -29,6 +30,7 @@ BENCHES = {
     "kernels": kernels_bench.run,
     "roofline": roofline.run,
     "serving": serving.run,
+    "predicate_complexity": predicate_complexity.run,
 }
 
 NO_SIZES = ("table1", "kernels", "roofline")

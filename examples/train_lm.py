@@ -5,14 +5,12 @@ fault-tolerance rig.
   PYTHONPATH=src python examples/train_lm.py [--steps 300]
 """
 import argparse
-import dataclasses
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import BatchSpec, make_source
-from repro.launch import train as train_cli
 
 
 def config_100m() -> ModelConfig:

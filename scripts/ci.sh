@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 CI entry point: install dev deps, run the test suite.
+# Tier-1 CI entry point: install dev deps, lint, run the test suite.
 #   bash scripts/ci.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -r requirements-dev.txt
+
+# lint (config in ruff.toml); tolerate offline images without ruff
+if python -m ruff --version >/dev/null 2>&1; then
+  python -m ruff check .
+else
+  echo "ruff unavailable; skipping lint"
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

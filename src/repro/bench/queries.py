@@ -7,6 +7,12 @@ SELECTIVITY of the predicate set stratified ~uniformly over [0, 1] by
 oversample-then-flatten (the paper regenerates queries when a selectivity
 sub-interval overfills), and (d) w₁ ~ U[0,1], w₂ = 1 − w₁ for two-vector
 MHQs.
+
+``gen_dnf_workload`` extends the generator past single conjunctions: it
+emits OR-of-ranges and IN-list predicates through the builder algebra
+(:mod:`repro.vectordb.algebra`) with a controllable DNF clause count, then
+applies the same selectivity stratification — the workload CHASE-style
+hybrid planners are stressed with.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.query import MHQ
+from repro.vectordb.algebra import col
 from repro.vectordb.predicates import Predicates, eval_mask
 from repro.vectordb.table import Table
 
@@ -26,8 +33,8 @@ def _random_predicates(table: Table, rng) -> Predicates:
     cols = rng.choice(m, size=n_active, replace=False)
     conds = {}
     for c in cols:
-        col = table.schema.scalar_cols[c]
-        if col.kind == "cat":
+        column = table.schema.scalar_cols[c]
+        if column.kind == "cat":
             v = float(rng.choice(scal[:, c]))
             conds[int(c)] = (v, v)  # equality
         else:
@@ -43,6 +50,55 @@ def _random_predicates(table: Table, rng) -> Predicates:
     return Predicates.from_conditions(m, conds)
 
 
+def _random_range(scal, c, rng):
+    lo, hi = scal[:, c].min(), scal[:, c].max()
+    a, b = sorted(rng.uniform(lo, hi, size=2))
+    return col(int(c)).between(float(a), float(b))
+
+
+def _random_dnf_expr(table: Table, rng, *, n_clauses: int):
+    """A random builder expression whose DNF has ~``n_clauses`` clauses.
+
+    Shapes drawn (mirroring the disjunctive/IN-list workloads of the
+    filtered-ANN literature):
+      * IN-list on a categorical column (one clause per member),
+      * OR of ``n_clauses`` numeric ranges (same or different columns),
+      * (IN-list ∧ range): the range merges into every clause,
+      * NOT of a range (complement → up to 2 clauses).
+    Each optionally AND-ed with one extra conjunctive range condition.
+    """
+    m = table.schema.n_scalar
+    scal = np.asarray(table.scalars)
+    cats = [i for i in range(m) if table.schema.scalar_cols[i].kind == "cat"]
+    nums = [i for i in range(m) if table.schema.scalar_cols[i].kind == "num"]
+
+    def in_list(size):
+        c = int(rng.choice(cats))
+        vals = np.unique(scal[:, c])
+        pick = rng.choice(vals, size=min(size, len(vals)), replace=False)
+        return col(c).isin([float(v) for v in pick])
+
+    shape = rng.integers(0, 4)
+    if shape == 0 and cats:  # plain IN-list
+        expr = in_list(n_clauses)
+    elif shape == 1 and nums:  # OR of ranges
+        parts = [_random_range(scal, int(rng.choice(nums)), rng)
+                 for _ in range(n_clauses)]
+        expr = parts[0]
+        for p in parts[1:]:
+            expr = expr | p
+    elif shape == 2 and cats and nums:  # IN-list ∧ range (clauses preserved)
+        expr = in_list(n_clauses) & _random_range(scal, int(rng.choice(nums)), rng)
+    else:  # NOT of a range (≤ 2 clauses), widened toward n_clauses by ORs
+        c = int(rng.choice(nums)) if nums else 0
+        expr = ~_random_range(scal, c, rng)
+        if n_clauses > 2 and nums:
+            expr = expr | _random_range(scal, int(rng.choice(nums)), rng)
+    if rng.random() < 0.5 and nums:  # extra conjunct: intersects every clause
+        expr = expr & _random_range(scal, int(rng.choice(nums)), rng)
+    return expr
+
+
 def _query_vectors(table: Table, rng) -> tuple:
     qs = []
     for i, vcol in enumerate(table.schema.vector_cols):
@@ -52,18 +108,9 @@ def _query_vectors(table: Table, rng) -> tuple:
     return tuple(qs)
 
 
-def gen_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
-                 k: int = 10, recall_target: float = 0.9, seed: int = 0,
-                 stratify_bins: int = 10, oversample: int = 6) -> list[MHQ]:
-    """Selectivity-stratified workload. ``n_vec_used`` ∈ {1, 2}."""
-    rng = np.random.default_rng(seed)
-    n_vec = table.schema.n_vec
-    pool = []
-    for _ in range(n_queries * oversample):
-        pred = _random_predicates(table, rng)
-        sel = float(jnp.mean(eval_mask(pred, table.scalars)))
-        pool.append((sel, pred))
-    # flatten the selectivity histogram (paper: uniform over sub-intervals)
+def _stratify(pool: list, n_queries: int, stratify_bins: int) -> list:
+    """Flatten the selectivity histogram of (sel, pred) pairs (paper:
+    uniform over sub-intervals), then round-robin fill from the rest."""
     bins = [[] for _ in range(stratify_bins)]
     for sel, pred in pool:
         b = min(int(sel * stratify_bins), stratify_bins - 1)
@@ -81,8 +128,12 @@ def gen_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
             if id(item) not in chosen_ids:
                 chosen.append(item)
                 chosen_ids.add(id(item))
-    chosen = chosen[:n_queries]
+    return chosen[:n_queries]
 
+
+def _attach_vectors(table: Table, chosen: list, rng, *, n_vec_used: int,
+                    k: int, recall_target: float) -> list[MHQ]:
+    n_vec = table.schema.n_vec
     out = []
     for sel, pred in chosen:
         qs = _query_vectors(table, rng)
@@ -94,6 +145,47 @@ def gen_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
         out.append(MHQ(query_vectors=qs, weights=weights, predicates=pred,
                        k=k, recall_target=recall_target))
     return out
+
+
+def gen_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
+                 k: int = 10, recall_target: float = 0.9, seed: int = 0,
+                 stratify_bins: int = 10, oversample: int = 6) -> list[MHQ]:
+    """Selectivity-stratified conjunctive workload. ``n_vec_used`` ∈ {1, 2}."""
+    rng = np.random.default_rng(seed)
+    pool = []
+    for _ in range(n_queries * oversample):
+        pred = _random_predicates(table, rng)
+        sel = float(jnp.mean(eval_mask(pred, table.scalars)))
+        pool.append((sel, pred))
+    chosen = _stratify(pool, n_queries, stratify_bins)
+    return _attach_vectors(table, chosen, rng, n_vec_used=n_vec_used, k=k,
+                           recall_target=recall_target)
+
+
+def gen_dnf_workload(table: Table, n_queries: int, *, n_vec_used: int = 1,
+                     k: int = 10, recall_target: float = 0.9, seed: int = 0,
+                     clause_counts=(2, 3, 4), stratify_bins: int = 10,
+                     oversample: int = 6) -> list[MHQ]:
+    """Selectivity-stratified DNF workload (OR-of-ranges, IN-lists, NOTs).
+
+    ``clause_counts``: target clause counts sampled per query (the compiled
+    count may land lower after intersection/dedup and is then padded onto
+    CLAUSE_GRID). Selectivity is measured exactly on the table and
+    stratified like :func:`gen_workload`."""
+    rng = np.random.default_rng(seed)
+    pool = []
+    while len(pool) < n_queries * oversample:
+        nc = int(rng.choice(clause_counts))
+        expr = _random_dnf_expr(table, rng, n_clauses=nc)
+        try:
+            pred = expr.compile(table.schema)
+        except ValueError:  # blew the clause grid — resample
+            continue
+        sel = float(jnp.mean(eval_mask(pred, table.scalars)))
+        pool.append((sel, pred))
+    chosen = _stratify(pool, n_queries, stratify_bins)
+    return _attach_vectors(table, chosen, rng, n_vec_used=n_vec_used, k=k,
+                           recall_target=recall_target)
 
 
 def workload_selectivities(table: Table, workload) -> np.ndarray:

@@ -12,7 +12,7 @@ decode_32k / long_500k) and which step each shape lowers (train vs serve).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 
 @dataclasses.dataclass(frozen=True)

@@ -24,9 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.data_encoder import DataEncoder, DataEncoderConfig
-from repro.core.executor import EngineCaps, HybridExecutor, PGVECTOR, recall_at_k
+from repro.core.executor import EngineCaps, HybridExecutor, PGVECTOR
 from repro.core.query import ExecutionPlan, MHQ, default_plan
-from repro.core.query_encoder import QueryEncoder, feature_dim
+from repro.core.query_encoder import QueryEncoder
 from repro.core.rewriter import MHQRewriter, RewriterConfig, generate_label
 from repro.vectordb import flat, histogram, ivf
 from repro.vectordb.table import Table
@@ -128,6 +128,7 @@ class BoomHQ:
 
         from repro.core.query_encoder import S_ENC_BINS  # noqa: F401
         from repro.vectordb import ivf as _ivf
+        from repro.vectordb.predicates import active_any as _active_any
         from repro.vectordb.predicates import soft_encode as _soft
 
         cfg = self.cfg
@@ -174,7 +175,8 @@ class BoomHQ:
                 sel = jnp.asarray(0.5)
             enc = _soft(pred, senc_edges)
             s_enc = jnp.concatenate(
-                [enc, pred.active.astype(jnp.float32)[:, None]], axis=1).reshape(-1)
+                [enc, _active_any(pred).astype(jnp.float32)[:, None]],
+                axis=1).reshape(-1)
             if not cfg.use_stats:
                 weights = jnp.full((n_vec,), 1.0 / n_vec)
                 logk = jnp.asarray(np.log(10.0), jnp.float32)
@@ -196,7 +198,7 @@ class BoomHQ:
         per query — the optimizer's serving overhead is dispatch-dominated
         on small tables, so everything lives in a single graph."""
         if not self._fitted:
-            return default_plan(q.n_vec)
+            return default_plan(q.n_vec, self.engine)
         if getattr(self, "_plan_jit", None) is None:
             self._build_plan_jit()
         de = self.data_encoder
@@ -232,7 +234,7 @@ class BoomHQ:
         if not qs:
             return []
         if not self._fitted:
-            return [default_plan(q.n_vec) for q in qs]
+            return [default_plan(q.n_vec, self.engine) for q in qs]
         if getattr(self, "_plan_batch_jit", None) is None:
             self._build_plan_batch_jit()
         from repro.serve.batch import compute_batch_scores, next_bucket
@@ -293,7 +295,8 @@ class BoomHQ:
         # underfill safeguard: if the plan found fewer than k qualifying rows
         # (severe mis-prediction), escalate once to the robust default plan
         if int(np.sum(np.asarray(ids) >= 0)) < q.k:
-            ids2, scores2 = self.executor.execute(q, default_plan(q.n_vec))
+            ids2, scores2 = self.executor.execute(
+                q, default_plan(q.n_vec, self.engine))
             if int(np.sum(np.asarray(ids2) >= 0)) > int(np.sum(np.asarray(ids) >= 0)):
                 return ids2, scores2
         return ids, scores
@@ -330,7 +333,7 @@ class BoomHQ:
             sub = np.asarray(under)
             retry = bx.execute_batch(
                 [queries[j] for j in under],
-                [default_plan(queries[j].n_vec) for j in under],
+                [default_plan(queries[j].n_vec, self.engine) for j in under],
                 scores_b=tuple(s[sub] for s in scores_b))
             for j, (ids2, s2) in zip(under, retry):
                 if n_valid(ids2) > n_valid(results[j][0]):

@@ -19,7 +19,6 @@ AE continues training; no full retraining pass.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -28,7 +27,7 @@ import numpy as np
 
 from repro.common import nn
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
-from repro.vectordb.predicates import Predicates, soft_encode, value_encode
+from repro.vectordb.predicates import PredicateLike, soft_encode, value_encode
 from repro.vectordb.table import Table
 
 
@@ -242,7 +241,7 @@ class DataEncoder:
 
     # -- query phase --------------------------------------------------------
 
-    def recon_errors(self, query_vectors: list[jax.Array], pred: Predicates) -> jax.Array:
+    def recon_errors(self, query_vectors: list[jax.Array], pred: PredicateLike) -> jax.Array:
         """ε_recon per vector column for a query (paper 'Query Phase')."""
         if not hasattr(self, "_recon_jit") or self._recon_jit is None:
             def _fn(params, edges, qs, pred):

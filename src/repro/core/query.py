@@ -12,13 +12,8 @@ classification tasks and the jit cache stays bounded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.vectordb.predicates import Predicates
+from repro.vectordb.predicates import PredicateLike
 
 STRATEGIES = ("filter_first", "index_scan", "single_index")
 
@@ -32,7 +27,7 @@ KMULT_GRID = (1, 2, 4, 8)  # k_i = mult · k
 class MHQ:
     query_vectors: tuple  # one (d_i,) jnp array per vector column
     weights: tuple  # one float per vector column
-    predicates: Predicates
+    predicates: PredicateLike  # conjunctive Predicates or DNF PredicateSet
     k: int = 10
     recall_target: float = 0.9
 
@@ -64,11 +59,25 @@ class ExecutionPlan:
         return f"{self.strategy}[{subs}]"
 
 
-def default_plan(n_vec: int, engine_caps: Optional[dict] = None) -> ExecutionPlan:
+def default_plan(n_vec: int, engine_caps=None) -> ExecutionPlan:
     """A robust one-size-fits-all plan (also the underfill-escalation
-    fallback): wide probes + a deep scan cap."""
+    fallback): wide probes + a deep scan cap.
+
+    ``engine_caps`` (an ``executor.EngineCaps``-shaped object, duck-typed to
+    avoid a circular import) clamps the knobs to what the engine
+    personality exposes: nprobe to ``nprobe_cap``, max_scan to the engine
+    default when ``max_scan_tuples`` is absent, and iterative_scan off when
+    unsupported."""
+    nprobe, max_scan, iterative = 16, 131072, True
+    if engine_caps is not None:
+        nprobe = min(nprobe, engine_caps.nprobe_cap)
+        if not engine_caps.max_scan_tuples:
+            max_scan = engine_caps.default_max_scan
+        iterative = iterative and engine_caps.iterative_scan
     return ExecutionPlan(
         strategy="index_scan",
-        subqueries=tuple(SubqueryParams(k_mult=4, nprobe=16, max_scan=131072,
-                                        iterative=True) for _ in range(n_vec)),
+        subqueries=tuple(SubqueryParams(k_mult=4, nprobe=nprobe,
+                                        max_scan=max_scan,
+                                        iterative=iterative)
+                         for _ in range(n_vec)),
     )

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.data_encoder import DataEncoder
 from repro.core.query import MHQ
 from repro.vectordb import histogram, ivf
-from repro.vectordb.predicates import soft_encode
+from repro.vectordb.predicates import active_any, soft_encode
 from repro.vectordb.table import Table
 
 S_ENC_BINS = 8  # compact predicate encoding for X_in
@@ -71,7 +71,6 @@ class QueryEncoder:
         self.data_encoder = data_encoder
         self.probe_k = probe_k
         self.probe_nprobe = probe_nprobe
-        m = table.schema.n_scalar
         # compact bin edges for S_enc
         scal = np.asarray(table.scalars)
         lo, hi = scal.min(axis=0), scal.max(axis=0)
@@ -118,7 +117,9 @@ class QueryEncoder:
         if not hasattr(self, "_senc_jit") or self._senc_jit is None:
             self._senc_jit = jax.jit(soft_encode)
         enc = np.asarray(self._senc_jit(q.predicates, self._edges), np.float32)
-        active = np.asarray(q.predicates.active, np.float32)[:, None]
+        # DNF predicates fold to the same (M, B) mass + a per-column
+        # any-clause activity flag, so the feature width is clause-free
+        active = np.asarray(active_any(q.predicates), np.float32)[:, None]
         s_enc = np.concatenate([enc, active], axis=1).reshape(-1)
         if use_stats:
             weights = np.asarray(q.weights, np.float32)

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,6 @@ from repro.core.query import (
     SubqueryParams,
 )
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
-from repro.vectordb import flat
 
 N_NP, N_MS, N_KM = len(NPROBE_GRID), len(MAX_SCAN_GRID), len(KMULT_GRID)
 PER_COL = N_NP + N_MS + N_KM + 1
@@ -185,7 +183,6 @@ def _grid_index(grid, value) -> int:
 
 
 def plan_to_label(plan: ExecutionPlan, latency: float, recall: float) -> PlanLabel:
-    n = len(plan.subqueries)
     return PlanLabel(
         strategy=STRATEGIES.index(plan.strategy),
         nprobe_idx=np.asarray([_grid_index(NPROBE_GRID, s.nprobe)

@@ -9,7 +9,6 @@ microbatch and ``ppermute``s activations to the next stage. Bubble fraction
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 NEG = -1e30

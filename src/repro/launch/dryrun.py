@@ -25,7 +25,6 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, get_config, shape_applicable
@@ -34,7 +33,7 @@ from repro.launch.mesh import data_axes, make_production_mesh
 from repro.launch.plans import (prefill_cfg_overrides, train_cfg_overrides,
                                 train_plan)
 from repro.models import lm, sharding
-from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.models.lm_serving import make_decode_step, make_prefill_step
 from repro.train.step import init_state, make_train_step
 
 # TPU v5e hardware constants (per chip)
@@ -83,7 +82,6 @@ def collective_bytes(hlo_text: str) -> dict:
         if not m:
             continue
         type_str, opcode = m.group(1), m.group(2)
-        base = opcode.rstrip("-start").rstrip(".")
         for coll in _COLLECTIVES:
             if opcode == coll or opcode == coll + "-start":
                 b = _type_bytes(type_str)

@@ -22,7 +22,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_analysis
 from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve.engine import greedy_generate
+from repro.models.lm_serving import greedy_generate
 
 
 def main(argv=None):

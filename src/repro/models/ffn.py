@@ -5,7 +5,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import nn
-from repro.configs.base import ModelConfig
 
 
 def ffn_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:

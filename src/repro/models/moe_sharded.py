@@ -26,7 +26,7 @@ from repro.common import compat
 from repro.common import nn
 from repro.configs.base import ModelConfig
 from repro.models.ffn import ffn_apply
-from repro.models.moe import aux_losses, group_capacity, router_topk
+from repro.models.moe import group_capacity, router_topk
 
 
 def moe_apply_sharded(p, cfg: ModelConfig, x: jax.Array, *, batch_axes,

@@ -16,7 +16,6 @@ by path pattern; stacked layer dims (leading L) are detected by rank.
 from __future__ import annotations
 
 import re
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P

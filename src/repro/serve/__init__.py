@@ -1,6 +1,9 @@
-from repro.serve.engine import (  # noqa: F401
-    make_prefill_step, make_decode_step, greedy_generate,
-)
+"""Hybrid-query serving: batched execution + the deployment front-end.
+
+(The LM prefill/decode helpers formerly re-exported here moved to
+``repro.models.lm_serving``; ``repro.serve.engine`` remains as a deprecated
+alias for one release.)
+"""
 from repro.serve.batch import (  # noqa: F401
     BatchedHybridExecutor, ServeReport, ServingEngine,
 )

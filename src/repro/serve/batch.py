@@ -156,10 +156,14 @@ class BatchedHybridExecutor:
         filter_first groups on (k, max_candidates); index groups on the
         active columns and their effective (k_i, nprobe, max_scan,
         iterative) — all grid-valued, so the number of groups (and thus
-        compiled kernels) stays small.
+        compiled kernels) stays small. The legalized DNF clause bucket
+        (CLAUSE_GRID) joins both keys: every query in a group then stacks
+        to one static (B, C, M) predicate shape, and mixed-complexity
+        batches split into at most len(CLAUSE_GRID) extra groups.
         """
+        cb = predicates.clause_bucket(q.predicates)
         if plan.strategy == "filter_first":
-            return ("ff", q.k, plan.max_candidates)
+            return ("ff", cb, q.k, plan.max_candidates)
         n = self.table.n_rows
         subs = []
         for i in plan_columns(q, plan):
@@ -168,7 +172,7 @@ class BatchedHybridExecutor:
                       self.engine.nprobe_cap)
             subs.append((i, min(sp.k_mult * q.k, n), np0,
                          min(sp.max_scan, n), sp.iterative))
-        return ("ix", q.k, tuple(subs))
+        return ("ix", cb, q.k, tuple(subs))
 
     # -- execution ---------------------------------------------------------
 
@@ -238,12 +242,12 @@ class BatchedHybridExecutor:
                 else jnp.zeros((bb, t.n_rows), jnp.float32)
 
         if key[0] == "ff":
-            _, k, mc = key
+            _, _, k, mc = key
             out_ids, out_scores, _, _ = _filter_first_batch(
                 weighted_scores(), t.scalars, pred_b,
                 k=k, max_candidates=mc)
         else:
-            _, k, subs = key
+            _, _, k, subs = key
             cand = [self._batched_subquery(col, col_scores(col), pred_b,
                                            qv_b[col], k_i, np0, ms, it)
                     for (col, k_i, np0, ms, it) in subs]
@@ -285,9 +289,7 @@ class BatchedHybridExecutor:
             sel = np.flatnonzero(~done)
             bb = next_bucket(len(sel))
             sel_p = np.concatenate([sel, np.full(bb - len(sel), sel[0])])
-            pred_sub = predicates.Predicates(
-                active=pred_b.active[sel_p], lo=pred_b.lo[sel_p],
-                hi=pred_b.hi[sel_p])
+            pred_sub = predicates.take(pred_b, sel_p)
             ids2, _, _, nq2 = _search_batch(
                 index, rs_b[sel_p], t.scalars, pred_sub, q_b[sel_p],
                 nprobe=nprobe, max_scan=max_scan, k=ks)

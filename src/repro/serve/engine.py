@@ -1,59 +1,24 @@
-"""Serving steps: prefill (prompt -> cache) and decode (one token/step).
+"""DEPRECATED alias — the LM prefill/decode serving helpers moved to
+:mod:`repro.models.lm_serving`.
 
-The decode step is the unit lowered by the ``decode_32k`` / ``long_500k``
-dry-run shapes: one new token for every sequence in the batch against a
-seq_len-deep cache. ``greedy_generate`` is the host-side loop used by the
-examples and integration tests (prefill once, then N decode steps).
+The ``repro.serve`` package hosts the hybrid-query serving stack
+(``ServingEngine``, ``BatchedHybridExecutor`` in ``serve.batch``); keeping
+the unrelated LM engine under the same roof made ``from repro.serve import
+engine`` a landmine. This shim re-exports the old names for one release and
+warns; import from ``repro.models.lm_serving`` instead.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro.models.lm_serving import (  # noqa: F401
+    greedy_generate, make_decode_step, make_prefill_step,
+)
 
-
-def make_prefill_step(cfg: ModelConfig, max_len: int):
-    def prefill_step(params, batch):
-        return lm.prefill(params, cfg, batch, max_len=max_len)
-
-    return prefill_step
-
-
-def make_decode_step(cfg: ModelConfig):
-    def decode_step(params, inputs, pos, cache):
-        return lm.decode_step(params, cfg, inputs, pos, cache)
-
-    return decode_step
-
-
-def greedy_generate(params, cfg: ModelConfig, batch: dict, *, steps: int,
-                    max_len: int):
-    """Prefill on ``batch`` then greedily decode ``steps`` tokens.
-
-    Returns (tokens (B, steps) i32). Works for text archs; audio archs
-    decode from embeddings so greedy id selection feeds the embed table stub.
-    """
-    prefill = jax.jit(make_prefill_step(cfg, max_len))
-    decode = jax.jit(make_decode_step(cfg))
-    logits, cache = prefill(params, batch)
-    if cfg.modality == "vlm":
-        prompt_len = batch["tokens"].shape[1] + cfg.n_prefix_embeds
-    elif cfg.inputs_are_embeds:
-        prompt_len = batch["embeds"].shape[1]
-    else:
-        prompt_len = batch["tokens"].shape[1]
-    outs = []
-    tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
-    for i in range(steps):
-        outs.append(tok)
-        pos = jnp.asarray(prompt_len + i, jnp.int32)
-        if cfg.inputs_are_embeds:
-            # audio stub: embed the sampled codec id through a fixed table
-            emb = jax.nn.one_hot(tok % cfg.d_model, cfg.d_model, dtype=jnp.float32)
-            logits, cache = decode(params, {"embed": emb}, pos, cache)
-        else:
-            logits, cache = decode(params, {"token": tok}, pos, cache)
-        tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
-    return jnp.stack(outs, axis=1)
+warnings.warn(
+    "repro.serve.engine is deprecated; import the LM prefill/decode helpers "
+    "from repro.models.lm_serving (the serve package now hosts the "
+    "hybrid-query ServingEngine)",
+    DeprecationWarning,
+    stacklevel=2,
+)

@@ -1,3 +1,7 @@
 from repro.vectordb.table import Table, TableSchema, ScalarCol, VectorCol, similarity, weighted_score  # noqa: F401
-from repro.vectordb.predicates import Predicates, eval_mask, soft_encode, value_encode  # noqa: F401
+from repro.vectordb.predicates import (  # noqa: F401
+    CLAUSE_GRID, PredicateLike, Predicates, PredicateSet, as_set,
+    clause_bucket, eval_mask, soft_encode, value_encode,
+)
+from repro.vectordb.algebra import col  # noqa: F401
 from repro.vectordb import histogram, ivf, flat  # noqa: F401

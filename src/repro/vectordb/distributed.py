@@ -11,15 +11,14 @@ Implemented with ``shard_map`` so the collective schedule is explicit.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.common import compat
 
-from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.predicates import eval_mask
 from repro.vectordb.table import similarity
 
 NEG = -1e30
@@ -109,10 +108,9 @@ def sharded_masked_scan_batched(mesh: Mesh, data_axes=("data",), *, k: int,
                     s = 2.0 * s - jnp.sum(v * v, axis=-1)[None] \
                         - jnp.sum(qs[i] * qs[i], axis=-1)[:, None]
             total = total + w[:, i][:, None] * s
-        # per-query predicate masks: preds fields stacked over Q
-        ok = (scalars[None] >= preds.lo[:, None]) & (scalars[None] <= preds.hi[:, None])
-        ok = ok | ~preds.active[:, None]
-        mask = jnp.all(ok, axis=-1)  # (Q, n_local)
+        # per-query DNF predicate masks: preds fields stacked over Q, the
+        # shared OR-over-clauses evaluator vmapped over the query axis
+        mask = jax.vmap(lambda p: eval_mask(p, scalars))(preds)  # (Q, n_local)
         masked = jnp.where(mask, total, NEG)
         kk = min(k, n_local)
         s_loc, idx = jax.lax.top_k(masked, kk)  # (Q, kk)

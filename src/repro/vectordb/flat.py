@@ -16,8 +16,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.vectordb.predicates import Predicates, eval_mask
-from repro.vectordb.table import Table, weighted_score
+from repro.vectordb.predicates import PredicateLike, eval_mask
+from repro.vectordb.table import Table
 
 NEG = -1e30
 
@@ -26,7 +26,7 @@ NEG = -1e30
 def filter_first(
     vectors: tuple,  # tuple of (n, d_i)
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     query_vectors: tuple,  # tuple of (d_i,)
     weights: jax.Array,
     metric: str = "dot",
@@ -58,7 +58,7 @@ def filter_first(
 def filter_first_scored(
     row_scores: jax.Array,  # (n,) precomputed weighted scores for ONE query
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     *,
     k: int,
     max_candidates: int,
@@ -82,7 +82,7 @@ def filter_first_scored(
 def masked_scan(
     vectors: tuple,
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     query_vectors: tuple,
     weights: jax.Array,
     metric: str = "dot",
@@ -104,7 +104,7 @@ def masked_scan(
     return ids, top_scores, jnp.asarray(n), jnp.sum(mask)
 
 
-def ground_truth(table: Table, query_vectors, weights, pred: Predicates, k: int):
+def ground_truth(table: Table, query_vectors, weights, pred: PredicateLike, k: int):
     ids, scores, _, _ = masked_scan(
         tuple(table.vectors),
         table.scalars,

@@ -4,6 +4,11 @@ Per scalar column we keep equi-width bin edges and a **prefix-sum** count
 array, exactly as the paper prescribes: a range predicate is answered by two
 interpolated prefix lookups; conjunctions multiply per-column selectivities
 under the independence assumption.
+
+DNF predicate sets estimate the clause *union*: exact inclusion–exclusion
+for C <= 2 (the pairwise clause intersection is itself a conjunction of
+intersected ranges, estimated under the same independence assumption), and
+the Bonferroni upper bound min(1, Σ_c σ_c) beyond.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.vectordb.predicates import Predicates
+from repro.vectordb.predicates import PredicateLike, as_set
 
 
 @jax.tree_util.register_pytree_node_class
@@ -74,21 +79,47 @@ def _prefix_at(edges_c: jax.Array, prefix_c: jax.Array, x: jax.Array) -> jax.Arr
     return below
 
 
-@jax.jit
-def estimate_selectivity(h: Histograms, pred: Predicates) -> jax.Array:
-    """σ_est ∈ [0, 1] for a conjunctive predicate set."""
+def _clause_selectivity(h: Histograms, lo, hi, active) -> jax.Array:
+    """Independence-product selectivity of ONE conjunctive clause.
+
+    lo/hi/active: (M,). An empty range (hi < lo — e.g. a vacuous pairwise
+    clause intersection) contributes selectivity 0."""
     def per_col(e, p, lo, hi, act):
         b = p.shape[0] - 1
         cnt = _prefix_at(e, p, hi) - _prefix_at(e, p, lo - 1e-9)
         # point predicates (equality): interpolation of discrete mass is ~0;
         # answer with the containing bin's full count instead.
-        binw = e[1] - e[0]
-        is_point = (hi - lo) <= 1e-12
+        is_point = ((hi - lo) <= 1e-12) & (hi >= lo)
         idx = jnp.clip(jnp.searchsorted(e, lo, side="right") - 1, 0, b - 1)
         bin_cnt = p[idx + 1] - p[idx]
         cnt = jnp.where(is_point, bin_cnt, cnt)
         sel = jnp.clip(cnt / jnp.maximum(p[-1], 1.0), 0.0, 1.0)
+        sel = jnp.where(hi < lo, 0.0, sel)
         return jnp.where(act, sel, 1.0)
 
-    sels = jax.vmap(per_col)(h.edges, h.prefix, pred.lo, pred.hi, pred.active)
-    return jnp.prod(sels)
+    return jnp.prod(jax.vmap(per_col)(h.edges, h.prefix, lo, hi, active))
+
+
+@jax.jit
+def estimate_selectivity(h: Histograms, pred: PredicateLike) -> jax.Array:
+    """σ_est ∈ [0, 1] for a predicate set (conjunctive or DNF).
+
+    C=1: the classic independence product. C=2: inclusion–exclusion, with
+    the clause intersection estimated as a conjunction of intersected
+    ranges. C>2: the Bonferroni upper bound min(1, Σ_c σ_c)."""
+    ps = as_set(pred)
+    sels = jax.vmap(lambda lo, hi, act: _clause_selectivity(h, lo, hi, act))(
+        ps.lo, ps.hi, ps.active)
+    sels = jnp.where(ps.clause_valid, sels, 0.0)  # padding clauses: no mass
+    c = ps.n_clauses  # static — picks the estimator at trace time
+    if c == 1:
+        return sels[0]
+    if c == 2:
+        inter = _clause_selectivity(
+            h,
+            jnp.maximum(ps.lo[0], ps.lo[1]),
+            jnp.minimum(ps.hi[0], ps.hi[1]),
+            ps.active[0] | ps.active[1],
+        ) * (ps.clause_valid[0] & ps.clause_valid[1])
+        return jnp.clip(sels[0] + sels[1] - inter, 0.0, 1.0)
+    return jnp.clip(jnp.sum(sels), 0.0, 1.0)

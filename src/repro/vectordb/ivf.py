@@ -19,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.vectordb.predicates import Predicates, eval_mask
-from repro.vectordb.table import Table, similarity
+from repro.vectordb.predicates import PredicateLike, eval_mask
+from repro.vectordb.table import similarity
 
 NEG = -1e30
 
@@ -145,7 +145,7 @@ def search(
     index: IVFIndex,
     vectors: jax.Array,  # (n, d) the indexed column
     scalars: jax.Array,  # (n, M)
-    pred: Predicates,
+    pred: PredicateLike,
     q: jax.Array,  # (d,)
     *,
     nprobe: int,
@@ -175,7 +175,7 @@ def search_scored(
     index: IVFIndex,
     row_scores: jax.Array,  # (n,) this column's precomputed query similarities
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     q: jax.Array,
     *,
     nprobe: int,
@@ -206,7 +206,7 @@ def preprobe(
     index: IVFIndex,
     vectors: jax.Array,
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     q: jax.Array,
     *,
     nprobe: int = 1,
@@ -242,7 +242,7 @@ def preprobe_scored(
     index: IVFIndex,
     row_scores: jax.Array,  # (n,) this column's precomputed similarities
     scalars: jax.Array,
-    pred: Predicates,
+    pred: PredicateLike,
     q: jax.Array,
     *,
     nprobe: int = 1,

@@ -1,10 +1,29 @@
-"""Scalar predicates: representation, evaluation and soft encodings.
+"""Scalar predicates: DNF representation, evaluation and soft encodings.
 
-A conjunctive predicate set Q_S is stored densely over all M scalar columns:
-``active`` marks which columns carry a condition; each condition is the
-closed range ``[lo, hi]`` (equality for categoricals is ``[code, code]``).
-Dense representation keeps the structure static under jit — an inactive
-column is simply the full range.
+Two dense, jit-friendly predicate types:
+
+``Predicates`` — the original single-conjunction form: ``active`` marks which
+of the M scalar columns carry a condition; each condition is the closed range
+``[lo, hi]`` (equality for categoricals is ``[code, code]``). Kept as the
+C=1 compatibility shim; every consumer accepts it unchanged.
+
+``PredicateSet`` — the general form: a disjunction of C conjunctive clauses
+(DNF), stored densely as ``(C, M)`` active/lo/hi fields plus a ``(C,)``
+``clause_valid`` mask (padding clauses are invalid and match nothing). C is
+legalized onto the small grid ``CLAUSE_GRID`` so the jit cache stays bounded:
+kernels specialize on the clause *bucket*, not the exact clause count.
+
+Build ``PredicateSet``s with the builder algebra in
+:mod:`repro.vectordb.algebra`::
+
+    from repro.vectordb.algebra import col
+    expr = col("price").between(10, 50) | (col("brand") == 3) \
+        & ~col("size").below(5)
+    pred = expr.compile(table.schema)
+
+Evaluation is OR-over-clauses of AND-over-columns; an inactive column always
+passes within its clause, an invalid (padding) clause never matches. With
+C=1 this degenerates to exactly the old conjunctive semantics.
 """
 from __future__ import annotations
 
@@ -14,10 +33,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Legal clause counts: compiled DNFs pad up to the nearest bucket so the
+# number of distinct kernel specializations stays bounded.
+CLAUSE_GRID = (1, 2, 4)
+MAX_CLAUSES = CLAUSE_GRID[-1]
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Predicates:
+    """Single conjunction over the M scalar columns (the C=1 compat shim)."""
+
     active: jax.Array  # (M,) bool
     lo: jax.Array  # (M,) f32
     hi: jax.Array  # (M,) f32
@@ -49,44 +75,229 @@ class Predicates:
         return Predicates(jnp.asarray(active), jnp.asarray(lo), jnp.asarray(hi))
 
 
-def stack(preds: list["Predicates"]) -> "Predicates":
-    """Stack per-query predicate sets along a new leading batch axis — the
-    batched pytree fed to vmapped search kernels ((B, M) per field)."""
-    return Predicates(
-        active=jnp.stack([p.active for p in preds]),
-        lo=jnp.stack([p.lo for p in preds]),
-        hi=jnp.stack([p.hi for p in preds]),
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PredicateSet:
+    """DNF predicate set: OR over C conjunctive clauses, fields ``(C, M)``.
+
+    ``clause_valid`` masks padding clauses (False = clause matches nothing);
+    real clauses that carry no active column match everything, exactly like
+    an empty conjunction.
+    """
+
+    active: jax.Array  # (..., C, M) bool
+    lo: jax.Array  # (..., C, M) f32
+    hi: jax.Array  # (..., C, M) f32
+    clause_valid: jax.Array  # (..., C) bool
+
+    def tree_flatten(self):
+        return (self.active, self.lo, self.hi, self.clause_valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_clauses(self) -> int:
+        return int(self.active.shape[-2])
+
+    @staticmethod
+    def none(m: int, clauses: int = 1) -> "PredicateSet":
+        """Matches every row (one valid clause with no conditions)."""
+        c = legalize_clause_count(clauses)
+        return PredicateSet(
+            active=jnp.zeros((c, m), bool),
+            lo=jnp.full((c, m), -jnp.inf),
+            hi=jnp.full((c, m), jnp.inf),
+            clause_valid=jnp.arange(c) < 1,
+        )
+
+    @staticmethod
+    def from_clauses(m: int, clauses: list[dict[int, tuple[float, float]]],
+                     *, n_clauses: int | None = None) -> "PredicateSet":
+        """Build from per-clause ``{col: (lo, hi)}`` dicts, padded onto the
+        clause grid. An empty ``clauses`` list matches nothing."""
+        c_real = len(clauses)
+        c = legalize_clause_count(max(c_real, 1) if n_clauses is None
+                                  else n_clauses)
+        if c_real > c:
+            raise ValueError(f"{c_real} clauses exceed requested bucket {c}")
+        active = np.zeros((c, m), bool)
+        lo = np.full((c, m), -np.inf, np.float32)
+        hi = np.full((c, m), np.inf, np.float32)
+        for ci, conds in enumerate(clauses):
+            for idx, (l, h) in conds.items():
+                active[ci, idx] = True
+                lo[ci, idx] = l
+                hi[ci, idx] = h
+        valid = np.arange(c) < c_real
+        return PredicateSet(jnp.asarray(active), jnp.asarray(lo),
+                            jnp.asarray(hi), jnp.asarray(valid))
+
+
+PredicateLike = Predicates | PredicateSet
+
+
+def legalize_clause_count(c: int) -> int:
+    """Smallest clause-grid bucket >= c."""
+    for b in CLAUSE_GRID:
+        if b >= c:
+            return b
+    raise ValueError(
+        f"{c} clauses exceed the clause grid cap {MAX_CLAUSES}; simplify the "
+        f"predicate or raise CLAUSE_GRID")
+
+
+def as_set(pred: PredicateLike) -> PredicateSet:
+    """Promote to the DNF form. ``Predicates`` lifts to one valid clause
+    (a new clause axis at -2); a ``PredicateSet`` passes through."""
+    if isinstance(pred, PredicateSet):
+        return pred
+    active = pred.active[..., None, :]
+    return PredicateSet(
+        active=active,
+        lo=pred.lo[..., None, :],
+        hi=pred.hi[..., None, :],
+        clause_valid=jnp.ones(active.shape[:-1], bool),
     )
 
 
-def eval_mask(pred: Predicates, scalars: jax.Array) -> jax.Array:
-    """(n, M) scalars -> (n,) bool conjunction mask."""
-    ok = (scalars >= pred.lo) & (scalars <= pred.hi)
-    ok = ok | ~pred.active  # inactive columns always pass
-    return jnp.all(ok, axis=-1)
+def n_clauses(pred: PredicateLike) -> int:
+    """Static clause count (1 for the conjunctive shim)."""
+    return pred.n_clauses if isinstance(pred, PredicateSet) else 1
 
 
-def soft_encode(
-    pred: Predicates, edges: jax.Array
-) -> jax.Array:
-    """Paper §3.2 'Scalar Encoding' generalized to predicates.
+def clause_bucket(pred: PredicateLike) -> int:
+    """The legalized clause bucket — part of batched group keys so every
+    query in a vmapped group shares one static clause shape."""
+    return legalize_clause_count(n_clauses(pred))
+
+
+def pad_clauses(ps: PredicateSet, c: int) -> PredicateSet:
+    """Pad the clause axis (-2) to ``c`` with invalid clauses."""
+    cur = ps.active.shape[-2]
+    if cur == c:
+        return ps
+    if cur > c:
+        raise ValueError(f"cannot shrink clause axis {cur} -> {c}")
+    extra = c - cur
+    pad2 = [(0, 0)] * (ps.active.ndim - 2) + [(0, extra), (0, 0)]
+    pad1 = [(0, 0)] * (ps.clause_valid.ndim - 1) + [(0, extra)]
+    return PredicateSet(
+        active=jnp.pad(ps.active, pad2, constant_values=False),
+        lo=jnp.pad(ps.lo, pad2, constant_values=-jnp.inf),
+        hi=jnp.pad(ps.hi, pad2, constant_values=jnp.inf),
+        clause_valid=jnp.pad(ps.clause_valid, pad1, constant_values=False),
+    )
+
+
+def active_any(pred: PredicateLike) -> jax.Array:
+    """(..., M) bool — columns constrained in ANY valid clause (the
+    clause-folded replacement for the old ``pred.active`` feature)."""
+    if isinstance(pred, PredicateSet):
+        return jnp.any(pred.active & pred.clause_valid[..., None], axis=-2)
+    return pred.active
+
+
+def stack(preds: list[PredicateLike]) -> PredicateLike:
+    """Stack per-query predicate sets along a new leading batch axis — the
+    batched pytree fed to vmapped search kernels.
+
+    All-conjunctive lists stack as ``Predicates`` ((B, M) per field, the
+    cheap C=1 path). If any entry is a ``PredicateSet``, every entry is
+    promoted and clause-padded to the list's common bucket, giving
+    ``(B, C, M)`` fields + ``(B, C)`` validity."""
+    if all(isinstance(p, Predicates) for p in preds):
+        return Predicates(
+            active=jnp.stack([p.active for p in preds]),
+            lo=jnp.stack([p.lo for p in preds]),
+            hi=jnp.stack([p.hi for p in preds]),
+        )
+    c = legalize_clause_count(max(n_clauses(p) for p in preds))
+    sets = [pad_clauses(as_set(p), c) for p in preds]
+    return PredicateSet(
+        active=jnp.stack([p.active for p in sets]),
+        lo=jnp.stack([p.lo for p in sets]),
+        hi=jnp.stack([p.hi for p in sets]),
+        clause_valid=jnp.stack([p.clause_valid for p in sets]),
+    )
+
+
+def take(pred: PredicateLike, idx) -> PredicateLike:
+    """Gather along the leading (batch) axis of a stacked predicate pytree."""
+    return jax.tree_util.tree_map(lambda x: x[idx], pred)
+
+
+def eval_mask(pred: PredicateLike, scalars: jax.Array) -> jax.Array:
+    """(n, M) scalars -> (n,) bool DNF mask: OR over clauses of the AND over
+    that clause's active columns. C=1 reproduces the old conjunction."""
+    ps = as_set(pred)
+    s = scalars[..., None, :]  # (n, 1, M) against (C, M) fields
+    ok = (s >= ps.lo) & (s <= ps.hi)
+    ok = ok | ~ps.active  # inactive columns always pass within a clause
+    clause = jnp.all(ok, axis=-1) & ps.clause_valid  # (n, C)
+    return jnp.any(clause, axis=-1)
+
+
+def _encode_clause(active, lo, hi, edges):
+    """Per-clause scalar encoding — the paper's §3.2 rule on one conjunction.
 
     ``edges``: (M, B+1) per-column bin edges. A point value one-hots into its
     bin; a range spreads unit mass over the bins it overlaps; an inactive
-    column is maximum-entropy (uniform). Returns (M, B).
-    """
-    lo = jnp.maximum(pred.lo[:, None], edges[:, :-1])
-    hi = jnp.minimum(pred.hi[:, None], edges[:, 1:])
+    column is maximum-entropy (uniform). Returns (M, B)."""
+    clo = jnp.maximum(lo[:, None], edges[:, :-1])
+    chi = jnp.minimum(hi[:, None], edges[:, 1:])
     width = jnp.maximum(edges[:, 1:] - edges[:, :-1], 1e-12)
-    overlap = jnp.clip(hi - lo, 0.0, None) / width
+    overlap = jnp.clip(chi - clo, 0.0, None) / width
     # point predicates (lo == hi) get an indicator on the containing bin
-    point = (pred.lo >= edges[:, :-1].T).T & (pred.lo <= edges[:, 1:].T).T
-    is_point = (pred.hi - pred.lo)[:, None] <= 1e-12
-    mass = jnp.where(is_point, point.astype(jnp.float32), overlap)
+    point = (lo >= edges[:, :-1].T).T & (lo <= edges[:, 1:].T).T
+    is_point = ((hi - lo) <= 1e-12) & (hi >= lo)
+    mass = jnp.where(is_point[:, None], point.astype(jnp.float32), overlap)
     mass_sum = jnp.sum(mass, axis=-1, keepdims=True)
     uniform = jnp.full_like(mass, 1.0 / mass.shape[-1])
     enc = jnp.where(mass_sum > 0, mass / jnp.maximum(mass_sum, 1e-12), uniform)
-    return jnp.where(pred.active[:, None], enc, uniform)
+    return jnp.where(active[:, None], enc, uniform)
+
+
+def clause_weights(ps: PredicateSet, edges: jax.Array) -> jax.Array:
+    """(C,) normalized per-clause masses under the bin-uniform measure.
+
+    A clause's mass is the product over its active columns of the fraction
+    of the column's edge span the clause's range covers (a point condition
+    counts one bin). Invalid clauses weigh zero; if every clause has zero
+    mass the weights fall back to uniform over the valid clauses."""
+    span = jnp.maximum(edges[:, -1] - edges[:, 0], 1e-12)  # (M,)
+    b = edges.shape[1] - 1
+
+    def one(active, lo, hi):
+        cov_lo = jnp.maximum(lo, edges[:, 0])
+        cov_hi = jnp.minimum(hi, edges[:, -1])
+        cov = jnp.clip(cov_hi - cov_lo, 0.0, None) / span
+        is_point = ((hi - lo) <= 1e-12) & (hi >= lo)
+        cov = jnp.where(is_point, 1.0 / b, cov)
+        cov = jnp.where(active, cov, 1.0)
+        return jnp.prod(cov)
+
+    mass = jax.vmap(one)(ps.active, ps.lo, ps.hi)  # (C,)
+    mass = jnp.where(ps.clause_valid, mass, 0.0)
+    total = jnp.sum(mass)
+    uniform = ps.clause_valid / jnp.maximum(jnp.sum(ps.clause_valid), 1)
+    return jnp.where(total > 0, mass / jnp.maximum(total, 1e-12), uniform)
+
+
+def soft_encode(pred: PredicateLike, edges: jax.Array) -> jax.Array:
+    """Paper §3.2 'Scalar Encoding' generalized to DNF predicate sets.
+
+    Each clause is encoded with the conjunctive rule (:func:`_encode_clause`)
+    and the per-clause (M, B) masses are folded with the normalized clause
+    weights — so the output keeps the (M, B) shape every consumer (S_enc,
+    data-encoder input) already expects, and C=1 reproduces the old
+    encoding exactly."""
+    ps = as_set(pred)
+    enc_c = jax.vmap(lambda a, l, h: _encode_clause(a, l, h, edges))(
+        ps.active, ps.lo, ps.hi)  # (C, M, B)
+    w = clause_weights(ps, edges)  # (C,)
+    return jnp.einsum("c,cmb->mb", w, enc_c)
 
 
 def value_encode(values: jax.Array, edges: jax.Array) -> jax.Array:

@@ -4,7 +4,6 @@ subprocesses (tests/test_distributed.py)."""
 import numpy as np
 import pytest
 
-import jax
 
 
 @pytest.fixture(scope="session")

@@ -1,7 +1,6 @@
 """Batched serving subsystem + this PR's seed-bug regressions:
 sequential/batched parity, counter semantics, linear IVF inserts, and the
 single rewriter decode path."""
-import dataclasses
 
 import numpy as np
 import pytest
@@ -18,7 +17,7 @@ from repro.serve.batch import (
     BatchedHybridExecutor, ServingEngine, next_bucket, pow2_at_most,
 )
 from repro.vectordb import flat, ivf
-from repro.vectordb.predicates import Predicates
+from repro.vectordb.predicates import Predicates, clause_bucket, n_clauses
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +153,24 @@ def test_batched_executor_filter_first_group(exec_setup):
         assert_results_match(ids_s, scores_s, ids_b, scores_b)
 
 
+def test_batched_executor_parity_mixed_clause_counts(exec_setup):
+    """Satellite: batched vs sequential on a batch mixing conjunctive (C=1)
+    and DNF (C∈{2,4}) predicates — groups split per clause bucket, every
+    query's result must still match the sequential executor."""
+    t, seq, bx = exec_setup
+    wl = queries.gen_dnf_workload(t, 8, n_vec_used=2, seed=11,
+                                  clause_counts=(2, 3, 4)) + \
+        queries.gen_workload(t, 4, n_vec_used=2, seed=12)
+    buckets = {clause_bucket(q.predicates) for q in wl}
+    assert len(buckets) >= 2  # genuinely mixed complexity
+    grid = candidate_plans(2, weights=(0.7, 0.3)) + [default_plan(2)]
+    plans = [grid[j % len(grid)] for j in range(len(wl))]
+    batched = bx.execute_batch(wl, plans)
+    for q, p, (ids_b, scores_b) in zip(wl, plans, batched):
+        ids_s, scores_s = seq.execute(q, p)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
 def test_batched_executor_single_index_group(exec_setup):
     t, seq, bx = exec_setup
     wl = queries.gen_workload(t, 4, n_vec_used=2, seed=6)
@@ -174,8 +191,15 @@ def test_batched_executor_single_index_group(exec_setup):
 
 @pytest.fixture(scope="module")
 def fitted():
+    """Fit on a MIXED workload — conjunctive and DNF predicates — so the
+    whole fit/optimize/execute(+batch) pipeline runs the clause algebra
+    end-to-end (acceptance: DNF with >=2 clauses and IN-lists)."""
     table = datasets.make("part", rows=2000, seed=0)
-    wl = queries.gen_workload(table, 32, n_vec_used=2, seed=1)
+    conj = queries.gen_workload(table, 22, n_vec_used=2, seed=1)
+    dnf = queries.gen_dnf_workload(table, 10, n_vec_used=2, seed=2,
+                                   clause_counts=(2, 3, 4))
+    assert max(n_clauses(q.predicates) for q in dnf) >= 2
+    wl = conj[:12] + dnf[:6] + conj[12:] + dnf[6:]
     bq = BoomHQ(table, BoomHQConfig(
         n_clusters=16,
         encoder=DataEncoderConfig(frozen_steps=25, ae_steps=40, sample=512),

@@ -1,6 +1,5 @@
 """Benchmark construction (§4): correlation properties + stratification."""
 import numpy as np
-import pytest
 
 import jax.numpy as jnp
 
@@ -82,5 +81,22 @@ def test_workload_predicates_valid(tiny_table):
     wl = queries.gen_workload(tiny_table, 10, seed=3)
     for q in wl:
         assert bool(q.predicates.active.any())
+        mask = eval_mask(q.predicates, tiny_table.scalars)
+        assert mask.dtype == jnp.bool_
+
+
+def test_gen_dnf_workload_properties(tiny_table):
+    from repro.vectordb.predicates import PredicateSet, n_clauses
+
+    wl = queries.gen_dnf_workload(tiny_table, 16, n_vec_used=2, seed=5,
+                                  clause_counts=(2, 3, 4))
+    assert len(wl) == 16
+    assert all(isinstance(q.predicates, PredicateSet) for q in wl)
+    assert max(n_clauses(q.predicates) for q in wl) >= 2
+    sels = queries.workload_selectivities(tiny_table, wl)
+    # stratification must cover selective and permissive regimes
+    assert (sels < 0.4).sum() >= 3
+    assert (sels > 0.5).sum() >= 3
+    for q in wl:
         mask = eval_mask(q.predicates, tiny_table.scalars)
         assert mask.dtype == jnp.bool_

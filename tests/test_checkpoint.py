@@ -1,6 +1,5 @@
 """Checkpointing: atomic commit, checksums, resume, elastic restore."""
 import os
-import shutil
 
 import numpy as np
 import pytest
@@ -70,7 +69,6 @@ def test_resume_reproduces_training(tmp_path):
     """Train 6 steps straight vs 3 + checkpoint/restore + 3: identical loss."""
     from repro.launch import train as train_cli
 
-    d1 = str(tmp_path / "a")
     losses_full = train_cli.main([
         "--arch", "mamba2-370m", "--smoke", "--steps", "6",
         "--global-batch", "2", "--seq-len", "16", "--log-every", "100"])

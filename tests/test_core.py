@@ -10,12 +10,10 @@ import jax.numpy as jnp
 from repro.bench import datasets, queries
 from repro.core.boomhq import BoomHQ, BoomHQConfig
 from repro.core.data_encoder import DataEncoder, DataEncoderConfig
-from repro.core.executor import (
-    ENGINES, HybridExecutor, MILVUS, PGVECTOR, recall_at_k,
-)
-from repro.core.query import ExecutionPlan, MHQ, SubqueryParams, default_plan
+from repro.core.executor import HybridExecutor, MILVUS, PGVECTOR, recall_at_k
+from repro.core.query import ExecutionPlan, MHQ, SubqueryParams
 from repro.core.query_encoder import QueryEncoder
-from repro.core.rewriter import MHQRewriter, RewriterConfig, candidate_plans
+from repro.core.rewriter import RewriterConfig, candidate_plans
 from repro.vectordb import flat, histogram, ivf
 from repro.vectordb.predicates import Predicates
 
@@ -145,7 +143,6 @@ def test_boomhq_insert_keeps_working(small_setup):
     bq = BoomHQ(table, _fast_cfg())
     bq.fit(wl[:10])
     n0 = bq.table.n_rows
-    rng = np.random.default_rng(9)
     vecs = [np.asarray(v[:100]) + 0.01 for v in table.vectors]
     scal = np.asarray(table.scalars[:100])
     bq.insert(vecs, scal, finetune=True)

@@ -11,7 +11,6 @@ import textwrap
 import time
 
 import numpy as np
-import pytest
 
 from repro.distributed.fault_tolerance import (
     Heartbeat, PreemptionGuard, StepWatchdog, run_resilient,

@@ -1,6 +1,4 @@
 """The scan-aware HLO analyzer: trip-count multiplication and dot flops."""
-import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

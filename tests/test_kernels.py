@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles — hypothesis sweeps over shapes/dtypes."""
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 

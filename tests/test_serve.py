@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import lm
-from repro.serve.engine import greedy_generate
+from repro.models.lm_serving import greedy_generate
 
 
 @pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-370m", "zamba2-2.7b",

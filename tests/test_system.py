@@ -1,12 +1,9 @@
 """End-to-end behaviour: the paper's pipeline on a small table, plus the
 input-spec deliverable and engine personalities."""
-import dataclasses
 
 import numpy as np
-import pytest
 
 import jax
-import jax.numpy as jnp
 
 from repro.bench import datasets, queries
 from repro.core.boomhq import BoomHQ, BoomHQConfig

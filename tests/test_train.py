@@ -1,12 +1,11 @@
 """Optimizers, schedules, gradient compression, data pipeline determinism."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.data.pipeline import BatchSpec, SyntheticLM, PackedCorpus
-from repro.train.grad_compress import compress, compress_tree, decompress
+from repro.train.grad_compress import compress_tree, decompress
 from repro.train.optimizer import (
     AdafactorConfig, AdamWConfig, adafactor_init, adafactor_update,
     adamw_init, adamw_update, cosine_schedule,

@@ -1,14 +1,13 @@
 """vectordb substrate: predicates, histograms, IVF, flat scans."""
 import numpy as np
-import pytest
 
 from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
 from repro.vectordb import flat, histogram, ivf
-from repro.vectordb.predicates import Predicates, eval_mask, soft_encode
-from repro.vectordb.table import Table, similarity, weighted_score
+from repro.vectordb.predicates import Predicates, eval_mask
+from repro.vectordb.table import weighted_score
 
 
 def test_eval_mask_conjunction(tiny_table):
@@ -85,7 +84,6 @@ def test_ivf_filtered_only_qualifying(tiny_table):
 def test_ivf_extend_finds_new_rows(tiny_table):
     t = tiny_table
     idx = ivf.build(t.vectors[0], 16)
-    rng = np.random.default_rng(3)
     new_vecs = np.asarray(t.vectors[0][:5]) + 1e-4
     idx2 = ivf.extend(idx, jnp.asarray(new_vecs), t.n_rows)
     assert idx2.sorted_rows.shape[0] == t.n_rows + 5
