@@ -1,46 +1,69 @@
-"""Batched vs sequential MHQ serving throughput (QPS at equal recall).
+"""MHQ serving throughput: batched vs sequential, and async over shards.
 
-The sequential baseline is the per-query loop every layer used before the
-batched subsystem existed: optimize + execute + host sync, one query at a
-time. The batched path is ``ServingEngine`` -> ``BoomHQ.execute_batch``:
-one fused vmapped optimizer dispatch per batch plus grouped vmapped
-execution. Per-query results match up to float reduction order
-(tests/test_batch.py asserts tie-tolerant parity), so the recall columns
-must match and the QPS column is pure dispatch/batching win.
+Two measurements on one fitted suite:
+
+  * ``run_sync_compare`` — the original figure: the sequential per-query
+    loop vs ``ServingEngine`` -> ``BoomHQ.execute_batch`` (one fused
+    optimizer dispatch + grouped vmapped execution per batch). Per-query
+    results match up to float reduction order, so the recall columns must
+    match and the QPS column is pure dispatch/batching win.
+  * ``run_async_shards`` — the live-traffic figure: Poisson (open-loop)
+    arrivals into the deadline-aware ``AsyncServingEngine``, served over
+    1 / 2 / 4 table shards. The single-shard row is the plan-driven batched
+    path; multi-shard rows fan every formed batch out across the shards
+    (per-shard mask + local top-k on the dense score matrices, one
+    O(shards·k) merge). Reports QPS, p50/p99 latency, timed-out count
+    (zero at the default deadline) and oracle recall per shard count.
 
   PYTHONPATH=src python -m benchmarks.serving            # FAST suite
   PYTHONPATH=src python -m benchmarks.serving --smoke    # tiny, seconds
+
+Run as a script the process forces 4 host devices, so the 2/4-shard rows
+execute under shard_map on a real device mesh; under ``benchmarks.run``
+(single-device process) they use logical shards with identical semantics.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
+import os
 import time
 
-import numpy as np
-
-from benchmarks import common
-from repro.bench import queries
-from repro.core.executor import recall_at_k
-from repro.serve.batch import ServingEngine
-
-SMOKE = dict(common.FAST, rows=4000, n_train=16, n_test=8, frozen_steps=25,
-             ae_steps=40, rw_steps=100, n_clusters=16)
+DEFAULT_SHARDS = (1, 2, 4)
+DEFAULT_DEADLINE = 5.0  # seconds — generous; the report must show 0 timeouts
+DEFAULT_RATE = 100.0  # Poisson arrivals per second
 
 
-def run(sizes=common.FAST, dataset: str = "part", *, n_stream: int = 64,
-        batch_size: int = 32, seed: int = 0) -> dict:
-    suite = common.build_suite(dataset, n_vec_used=2, seed=seed, sizes=sizes)
-    bq = suite.bq
+def _smoke_sizes():
+    from benchmarks import common
 
-    # a serving stream larger than the test split, same generator settings
+    return dict(common.FAST, rows=4000, n_train=16, n_test=8, frozen_steps=25,
+                ae_steps=40, rw_steps=100, n_clusters=16)
+
+
+def _stream_and_gts(suite, n_stream: int, seed: int):
+    import numpy as np
+
+    from benchmarks import common
+    from repro.bench import queries
+
     stream = queries.gen_workload(suite.table, n_stream, n_vec_used=2,
                                   seed=seed + 100)
-    gts = [common.flat.ground_truth(suite.table, list(q.query_vectors),
-                                    list(q.weights), q.predicates, q.k)[0]
-           for q in stream]
-    gts = [np.asarray(g) for g in gts]
+    gts = [np.asarray(common.flat.ground_truth(
+        suite.table, list(q.query_vectors), list(q.weights), q.predicates,
+        q.k)[0]) for q in stream]
+    return stream, gts
 
+
+def run_sync_compare(suite, stream, gts, *, batch_size: int = 32) -> dict:
+    """Sequential per-query loop vs the batched ServingEngine."""
+    import numpy as np
+
+    from repro.core.executor import recall_at_k
+    from repro.serve.batch import ServingEngine
+
+    bq = suite.bq
     engine = ServingEngine(bq, batch_size=batch_size)
     # steady-state measurement: ONE untimed pass per path populates every
     # jit specialization (a long-running service reuses a bounded kernel
@@ -49,7 +72,6 @@ def run(sizes=common.FAST, dataset: str = "part", *, n_stream: int = 64,
     for q in stream:
         bq.execute(q)
 
-    # -- sequential per-query loop (the pre-batching serving path) ---------
     seq_recs = []
     t0 = time.perf_counter()
     for q, gt in zip(stream, gts):
@@ -58,23 +80,95 @@ def run(sizes=common.FAST, dataset: str = "part", *, n_stream: int = 64,
     seq_s = time.perf_counter() - t0
     seq_qps = len(stream) / seq_s
 
-    # -- batched ----------------------------------------------------------
     _, rep = engine.serve(stream, gt_ids=gts)
-
     speedup = rep.qps / seq_qps
-    out = {
-        "figure": "serving_batched_vs_sequential",
-        "dataset": dataset, "rows": suite.table.n_rows,
-        "n_stream": n_stream, "batch_size": batch_size,
+    print(f"  serving sync: sequential {seq_qps:.1f} QPS "
+          f"(recall {np.mean(seq_recs):.3f}) vs batched {rep.qps:.1f} QPS "
+          f"(recall {rep.mean_recall:.3f}) -> {speedup:.2f}x")
+    return {
         "sequential_qps": round(seq_qps, 1),
         "sequential_recall": round(float(np.mean(seq_recs)), 3),
         "batched_qps": round(rep.qps, 1),
         "batched_recall": round(rep.mean_recall, 3),
         "batched_speedup": round(speedup, 2),
     }
-    print(f"  serving {dataset}: sequential {seq_qps:.1f} QPS "
-          f"(recall {np.mean(seq_recs):.3f}) vs batched {rep.qps:.1f} QPS "
-          f"(recall {rep.mean_recall:.3f}) -> {speedup:.2f}x")
+
+
+def run_async_shards(suite, stream, gts, *, batch_size: int = 32,
+                     shards=DEFAULT_SHARDS, rate: float = DEFAULT_RATE,
+                     max_wait: float = 0.01,
+                     deadline: float = DEFAULT_DEADLINE, seed: int = 0
+                     ) -> list[dict]:
+    """Poisson open-loop arrivals into AsyncServingEngine per shard count."""
+    import numpy as np
+
+    import jax
+
+    from repro.serve.batch import warm_bucket_ladder
+    from repro.serve.queue import AsyncServingEngine, serve_stream
+
+    bq = suite.bq
+    rng = np.random.default_rng(seed + 7)
+    gaps = rng.exponential(1.0 / rate, len(stream) - 1).tolist()
+    rows = []
+    try:
+        for s in shards:
+            mesh = None
+            if s > 1:
+                if jax.device_count() >= s and suite.table.n_rows % s == 0:
+                    from jax.sharding import Mesh
+                    mesh = Mesh(np.array(jax.devices()[:s]), ("data",))
+                    bq.bind_shards(mesh=mesh)
+                else:
+                    bq.bind_shards(s)  # logical shards, same semantics
+            else:
+                bq.bind_shards()  # plan-driven single-shard baseline
+            warm_bucket_ladder(bq.execute_batch, stream, batch_size)
+            engine = AsyncServingEngine(bq, batch_size=batch_size,
+                                        max_wait=max_wait,
+                                        default_timeout=deadline)
+            reqs = asyncio.run(serve_stream(engine, stream,
+                                            arrival_gaps=gaps))
+            rep = engine.report(
+                gt_ids={r.seq: gts[i] for i, r in enumerate(reqs)})
+            row = {
+                "shards": s,
+                "mesh": mesh is not None,
+                "qps": round(rep.qps, 1),
+                "p50_ms": round(rep.p50_ms, 2),
+                "p99_ms": round(rep.p99_ms, 2),
+                "timed_out": rep.n_timed_out,
+                "recall": round(rep.mean_recall, 3),
+            }
+            rows.append(row)
+            print(f"  serving async shards={s}{' (mesh)' if row['mesh'] else ''}: "
+                  f"{row['qps']} QPS, p50 {row['p50_ms']}ms, "
+                  f"p99 {row['p99_ms']}ms, {row['timed_out']} timed out, "
+                  f"recall {row['recall']}")
+    finally:
+        bq.bind_shards()  # leave the suite single-shard
+    return rows
+
+
+def run(sizes=None, dataset: str = "part", *, n_stream: int = 64,
+        batch_size: int = 32, seed: int = 0, shards=DEFAULT_SHARDS,
+        rate: float = DEFAULT_RATE, deadline: float = DEFAULT_DEADLINE
+        ) -> dict:
+    from benchmarks import common
+
+    sizes = common.FAST if sizes is None else sizes
+    suite = common.build_suite(dataset, n_vec_used=2, seed=seed, sizes=sizes)
+    stream, gts = _stream_and_gts(suite, n_stream, seed)
+    out = {
+        "figure": "serving_batched_and_async_sharded",
+        "dataset": dataset, "rows": suite.table.n_rows,
+        "n_stream": n_stream, "batch_size": batch_size,
+        "poisson_rate": rate, "deadline_s": deadline,
+    }
+    out.update(run_sync_compare(suite, stream, gts, batch_size=batch_size))
+    out["async_shards"] = run_async_shards(
+        suite, stream, gts, batch_size=batch_size, shards=shards, rate=rate,
+        deadline=deadline, seed=seed)
     return out
 
 
@@ -83,14 +177,33 @@ def main():
     ap.add_argument("--dataset", default="part")
     ap.add_argument("--n-stream", type=int, default=64)
     ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=DEFAULT_RATE,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--deadline", type=float, default=DEFAULT_DEADLINE,
+                    help="per-request deadline (s)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny table for a seconds-long sanity run")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    sizes = SMOKE if args.smoke else (common.FULL if args.full else common.FAST)
+
+    # force a 4-device host platform BEFORE jax initializes so the 2/4-shard
+    # rows run under shard_map on a real mesh (imports below are lazy for
+    # exactly this reason; benchmarks.run imports this module with jax
+    # already single-device and gets logical shards instead)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count="
+            f"{max(DEFAULT_SHARDS)}").strip()
+
+    from benchmarks import common
+
+    sizes = _smoke_sizes() if args.smoke \
+        else (common.FULL if args.full else common.FAST)
     res = run(sizes, args.dataset, n_stream=args.n_stream,
-              batch_size=args.batch_size)
+              batch_size=args.batch_size, rate=args.rate,
+              deadline=args.deadline)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f, indent=2)

@@ -1,4 +1,4 @@
-"""End-to-end driver: a hybrid-query SERVICE with batched requests.
+"""End-to-end driver: a hybrid-query SERVICE with batched + async requests.
 
 Simulates the deployment the paper targets: a fitted BoomHQ instance serving
 a stream of mixed MHQ requests (different weights, predicates, k and recall
@@ -8,8 +8,15 @@ query — with running QPS/recall accounting and a mid-stream data insert
 (the paper's update scenario). The first batch is also served through the
 old per-query loop so the dispatch win is visible.
 
+The final stage switches to LIVE traffic: the table is sharded
+(``bind_shards``) and a Poisson request stream flows through the async
+deadline-aware engine — requests queue, batches cut when full or when the
+oldest request ages out, each batch fans out across the shards, and every
+request resolves with an ok/timed-out disposition plus its latency.
+
   PYTHONPATH=src python examples/hybrid_serving.py
 """
+import asyncio
 import time
 
 import numpy as np
@@ -19,7 +26,8 @@ from repro.core.boomhq import BoomHQ, BoomHQConfig
 from repro.core.data_encoder import DataEncoderConfig
 from repro.core.executor import recall_at_k
 from repro.core.rewriter import RewriterConfig
-from repro.serve.batch import ServingEngine
+from repro.serve.batch import ServingEngine, warm_bucket_ladder
+from repro.serve.queue import AsyncServingEngine, serve_stream
 from repro.vectordb import flat
 
 
@@ -72,6 +80,22 @@ def main():
     reqs2 = stream[24:]
     _, rep2 = engine.serve(reqs2, gt_ids=ground_truths(bq.table, reqs2))
     print(f"  [batch-2 (post-insert)] {rep2.describe()}")
+
+    # -- live traffic: async deadline-aware serving over a sharded table --
+    n_shards = 3  # 6600 post-insert rows -> three 2200-row shards
+    assert bq.table.n_rows % n_shards == 0
+    bq.bind_shards(n_shards)
+    live = queries.gen_workload(bq.table, 36, n_vec_used=2, seed=5)
+    warm_bucket_ladder(bq.execute_batch, live, batch_size=12)
+    rng = np.random.default_rng(6)
+    gaps = rng.exponential(1.0 / 150.0, len(live) - 1).tolist()  # Poisson
+    aeng = AsyncServingEngine(bq, batch_size=12, max_wait=0.02,
+                              default_timeout=2.0)
+    reqs = asyncio.run(serve_stream(aeng, live, arrival_gaps=gaps))
+    gts = {r.seq: g for r, g in zip(reqs, ground_truths(bq.table, live))}
+    rep3 = aeng.report(gt_ids=gts)
+    print(f"  [async, {n_shards} shards] {rep3.describe()}")
+    assert rep3.n_timed_out == 0, "deadline budget was generous"
 
 
 if __name__ == "__main__":

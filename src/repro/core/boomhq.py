@@ -25,11 +25,15 @@ import jax.numpy as jnp
 
 from repro.core.data_encoder import DataEncoder, DataEncoderConfig
 from repro.core.executor import EngineCaps, HybridExecutor, PGVECTOR
-from repro.core.query import ExecutionPlan, MHQ, default_plan
+from repro.core.query import ExecutionPlan, MHQ, SubqueryParams, default_plan
 from repro.core.query_encoder import QueryEncoder
 from repro.core.rewriter import MHQRewriter, RewriterConfig, generate_label
 from repro.vectordb import flat, histogram, ivf
 from repro.vectordb.table import Table
+
+
+def _n_valid(ids) -> int:
+    return int(np.sum(np.asarray(ids) >= 0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +70,8 @@ class BoomHQ:
         self.qenc: Optional[QueryEncoder] = None
         self.rewriter: Optional[MHQRewriter] = None
         self._fitted = False
+        self.n_shards = 1  # cross-shard serving config (bind_shards)
+        self.shard_mesh = None
 
     # -- offline -------------------------------------------------------------
 
@@ -301,10 +307,36 @@ class BoomHQ:
                 return ids2, scores2
         return ids, scores
 
+    def bind_shards(self, n_shards: int = 1, *, mesh=None,
+                    shard_axes=("data",)) -> "BoomHQ":
+        """Serve over a SHARDED table: subsequent ``execute_batch`` calls fan
+        each formed batch out over contiguous table shards (per-shard mask +
+        local top-k over the dense score matrices, one O(shards·k) merge —
+        ``serve.batch.BatchedHybridExecutor.execute_batch_sharded``). With a
+        ``mesh`` the fan-out runs under shard_map over its data axes;
+        without one, logical shards on the local device keep identical
+        semantics. ``bind_shards()`` (defaults) restores single-shard
+        serving."""
+        self.n_shards = max(1, int(n_shards))
+        self.shard_mesh = mesh
+        self.shard_axes = shard_axes
+        self._batched = None  # rebind the executor with the new shard config
+        return self
+
+    @property
+    def _sharded(self) -> bool:
+        return self.n_shards > 1 or self.shard_mesh is not None
+
     def execute_batch(self, queries: list[MHQ]) -> list:
         """Batched analogue of execute(): one fused optimizer dispatch for
         the whole batch, grouped vmapped execution, then one batched
-        underfill-escalation pass. Returns [(ids, scores)] per query."""
+        underfill-escalation pass. Returns [(ids, scores)] per query.
+
+        Over a sharded table (``bind_shards``) execution instead fans out
+        per clause-bucket group across the shards; the plans' probing knobs
+        are moot there (the dense GEMMs already scored every row, so each
+        shard's exact scan IS the optimal plan) and escalation degenerates
+        to the cross-check pass of ``_execute_batch_sharded``."""
         if not queries:
             return []
         from repro.serve.batch import (
@@ -320,15 +352,14 @@ class BoomHQ:
                 out.extend(self.execute_batch(queries[s: s + limit]))
             return out
         scores_b = compute_batch_scores(self.table, queries)
-        plans = self.optimize_batch(queries, scores_b=scores_b)
         bx = self._batched_executor()
+        if self._sharded:
+            return self._execute_batch_sharded(queries, bx, scores_b)
+        plans = self.optimize_batch(queries, scores_b=scores_b)
         results = bx.execute_batch(queries, plans, scores_b=scores_b)
 
-        def n_valid(ids) -> int:
-            return int(np.sum(np.asarray(ids) >= 0))
-
         under = [j for j, (ids, _) in enumerate(results)
-                 if n_valid(ids) < queries[j].k]
+                 if _n_valid(ids) < queries[j].k]
         if under:
             sub = np.asarray(under)
             retry = bx.execute_batch(
@@ -336,7 +367,35 @@ class BoomHQ:
                 [default_plan(queries[j].n_vec, self.engine) for j in under],
                 scores_b=tuple(s[sub] for s in scores_b))
             for j, (ids2, s2) in zip(under, retry):
-                if n_valid(ids2) > n_valid(results[j][0]):
+                if _n_valid(ids2) > _n_valid(results[j][0]):
+                    results[j] = (ids2, s2)
+        return results
+
+    def _execute_batch_sharded(self, queries: list[MHQ], bx,
+                               scores_b: tuple) -> list:
+        """Cross-shard execution + per-shard-group underfill escalation.
+
+        The sharded scan is exact over the dense scores, so a query that
+        underfills k can only have fewer than k qualifying rows. The
+        escalation pass cross-checks exactly that: the underfilled subset
+        re-runs through the single-shard exact filter-first (one extra
+        grouped pass over only that subset, reusing the same score rows)
+        and the better-filled result wins — a cheap guard against shard
+        padding/merge artifacts that otherwise would go unnoticed."""
+        results = bx.execute_batch_sharded(queries, scores_b=scores_b)
+        under = [j for j, (ids, _) in enumerate(results)
+                 if _n_valid(ids) < queries[j].k]
+        if under:
+            sub = np.asarray(under)
+            exact = [ExecutionPlan(
+                "filter_first",
+                tuple(SubqueryParams() for _ in range(queries[j].n_vec)),
+                max_candidates=self.table.n_rows) for j in under]
+            retry = bx.execute_batch(
+                [queries[j] for j in under], exact,
+                scores_b=tuple(s[sub] for s in scores_b))
+            for j, (ids2, s2) in zip(under, retry):
+                if _n_valid(ids2) > _n_valid(results[j][0]):
                     results[j] = (ids2, s2)
         return results
 
@@ -345,7 +404,9 @@ class BoomHQ:
         if getattr(self, "_batched", None) is None \
                 or self._batched.table is not self.table:
             self._batched = BatchedHybridExecutor(
-                self.table, self.indexes, self.engine)
+                self.table, self.indexes, self.engine,
+                n_shards=self.n_shards, mesh=self.shard_mesh,
+                shard_axes=getattr(self, "shard_axes", ("data",)))
         return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):

@@ -1,4 +1,21 @@
-"""Hybrid-query serving: batched execution + the deployment front-end.
+"""Hybrid-query serving: the full request pipeline, batched + async.
+
+    request queue → deadline-aware batch formation → shard fan-out → merge
+
+  * ``serve.queue`` — the live-traffic front half: ``BatchFormer`` cuts a
+    batch when full OR when the oldest request ages past ``max_wait``;
+    per-request deadlines expire queued requests with a ``timed_out``
+    disposition (never executed); ``AsyncServingEngine`` drives it under
+    asyncio with execution in a worker thread.
+  * ``serve.batch`` — the execution back half: ``BatchedHybridExecutor``
+    groups a formed batch by (strategy, legalized params, clause bucket, k)
+    and runs grouped vmapped kernels over shared dense score matrices; with
+    shards bound (``n_shards``/``mesh``) each clause-bucket group instead
+    fans out over contiguous table shards — per-shard mask + local top-k on
+    the shard's slice of the dense scores, one O(shards·k) merge
+    (``vectordb.distributed.sharded_batch_topk``). ``ServingEngine`` is the
+    synchronous batch-chopping wrapper; ``ServeReport`` carries QPS/recall
+    plus the async dispositions (``n_timed_out``, p50/p99 latency).
 
 (The LM prefill/decode helpers formerly re-exported here moved to
 ``repro.models.lm_serving``; ``repro.serve.engine`` remains as a deprecated
@@ -6,4 +23,7 @@ alias for one release.)
 """
 from repro.serve.batch import (  # noqa: F401
     BatchedHybridExecutor, ServeReport, ServingEngine,
+)
+from repro.serve.queue import (  # noqa: F401
+    AsyncServingEngine, BatchFormer, ServeRequest, serve_stream,
 )

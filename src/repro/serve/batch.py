@@ -50,6 +50,8 @@ from repro.core.executor import (
 )
 from repro.core.query import ExecutionPlan, MHQ
 from repro.vectordb import flat, ivf, predicates
+from repro.vectordb.distributed import sharded_batch_topk, sharded_topk_ref
+from repro.vectordb.predicates import eval_mask
 from repro.vectordb.table import Table
 
 # Dense-score budget: each chunk holds (batch, n_rows) f32 score matrices
@@ -72,6 +74,20 @@ def pow2_at_most(n: int) -> int:
     while b * 2 <= n:
         b <<= 1
     return b
+
+
+def warm_bucket_ladder(execute_batch, queries: list, batch_size: int) -> None:
+    """Warm the jit caches across the batch-bucket ladder.
+
+    Arrival-driven serving (serve/queue.py) cuts batches at many sizes and
+    each padded bucket is a distinct static shape; one untimed pass per
+    power-of-two bucket — through ``next_bucket(batch_size)``, so a
+    non-power-of-two batch_size still warms its top bucket — keeps cold
+    compiles out of measured (and deadline-bounded) serving."""
+    b = 1
+    while b <= next_bucket(batch_size) and queries:
+        execute_batch(queries[: min(b, len(queries))])
+        b <<= 1
 
 
 # ---------------------------------------------------------------------------
@@ -130,19 +146,49 @@ def _rerank_batch(w_scores_b, rows_b, *, k, total):
     return jax.vmap(one)(w_scores_b, rows_b)
 
 
+@jax.jit
+def _eval_mask_batch(pred_b, scalars):
+    """(B,) stacked predicates × (n, M) scalars -> (B, n) bool masks."""
+    return jax.vmap(lambda p: eval_mask(p, scalars))(pred_b)
+
+
 # ---------------------------------------------------------------------------
 # batched executor
 # ---------------------------------------------------------------------------
 
 class BatchedHybridExecutor:
     """Executes a list of (MHQ, ExecutionPlan) pairs with grouped vmapped
-    kernels. Produces per-query results identical to ``HybridExecutor``."""
+    kernels. Produces per-query results identical to ``HybridExecutor``.
+
+    With ``n_shards > 1`` (or a bound ``mesh``) the executor additionally
+    exposes the CROSS-SHARD path (:meth:`execute_batch_sharded`): formed
+    batches fan out over contiguous table shards — per clause-bucket group,
+    every shard masks + local-top-k's its slice of the dense score matrices
+    and one O(shards · k) merge produces the global result. A real mesh
+    runs it under ``shard_map`` (``vectordb.distributed.sharded_batch_topk``);
+    without one the logical-shard reference kernel keeps the identical
+    semantics on a single device.
+    """
 
     def __init__(self, table: Table, indexes: list,
-                 engine: EngineCaps = PGVECTOR):
+                 engine: EngineCaps = PGVECTOR, *, n_shards: int = 1,
+                 mesh=None, shard_axes=("data",)):
         self.table = table
         self.indexes = indexes
         self.engine = engine
+        self.mesh = mesh
+        self.shard_axes = shard_axes if isinstance(shard_axes, tuple) \
+            else (shard_axes,)
+        if mesh is not None:
+            n_shards = 1
+            for a in self.shard_axes:
+                n_shards *= mesh.shape[a]
+            if table.n_rows % n_shards:
+                raise ValueError(
+                    f"table rows {table.n_rows} not divisible over "
+                    f"{n_shards} mesh shards")
+        self.n_shards = max(1, int(n_shards))
+        self._shard_fns: dict = {}  # k -> jit'd shard_map kernel
         self._seq = HybridExecutor(table, indexes, engine)
 
     def legalize(self, plan: ExecutionPlan) -> ExecutionPlan:
@@ -200,6 +246,63 @@ class BatchedHybridExecutor:
                                 bucket_cap=chunk, scores_b=scores_b)
         return out
 
+    # -- cross-shard execution ---------------------------------------------
+
+    def execute_batch_sharded(self, queries: list[MHQ], *,
+                              scores_b: Optional[tuple] = None
+                              ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Cross-shard fan-out of a formed batch.
+
+        Queries are grouped by (legalized clause bucket, k) so every group
+        stacks to one static (B, C, M) predicate shape, then each group runs
+        as an EXACT sharded masked top-k: every shard masks + local-top-k's
+        its slice of the dense score matrices and one O(shards · k) merge
+        yields the global result. The dense GEMMs already scored every row
+        for the batch (``compute_batch_scores``), so the exact scan is the
+        optimal plan here — no probing knobs restrict it, and underfill can
+        only mean fewer than k rows genuinely qualify.
+        """
+        out: list = [None] * len(queries)
+        groups: dict = {}
+        for j, q in enumerate(queries):
+            groups.setdefault(
+                (predicates.clause_bucket(q.predicates), q.k), []).append(j)
+        chunk = pow2_at_most(max(1, min(
+            MAX_BATCH_KERNEL, SLOT_BUDGET // max(self.table.n_rows, 1))))
+        for (_, k), idxs in groups.items():
+            for s in range(0, len(idxs), chunk):
+                part = idxs[s: s + chunk]
+                self._run_chunk_sharded(
+                    [queries[j] for j in part], part, out, k=k,
+                    bucket_cap=chunk, scores_b=scores_b)
+        return out
+
+    def _shard_fn(self, k: int):
+        """shard_map kernel for this mesh, one jit per k."""
+        if k not in self._shard_fns:
+            self._shard_fns[k] = sharded_batch_topk(
+                self.mesh, self.shard_axes, k=k)
+        return self._shard_fns[k]
+
+    def _run_chunk_sharded(self, qs: list[MHQ], part: list[int], out: list,
+                           *, k: int, bucket_cap: int,
+                           scores_b: Optional[tuple] = None):
+        t = self.table
+        bb = min(next_bucket(len(qs)), bucket_cap)
+        pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
+        _, weighted_scores = self._chunk_scores(
+            qs, part, bb, qv_b, w_b, scores_b)
+        ws = weighted_scores()  # (bb, n) — reused, never re-scored
+        if self.mesh is not None:
+            out_ids, out_scores = self._shard_fn(k)(ws, t.scalars, pred_b)
+        else:
+            mask = _eval_mask_batch(pred_b, t.scalars)
+            out_ids, out_scores = sharded_topk_ref(
+                ws, mask, k=k, n_shards=self.n_shards)
+        ids_np, scores_np = np.asarray(out_ids), np.asarray(out_scores)
+        for pos, j in enumerate(part):
+            out[j] = (ids_np[pos], scores_np[pos])
+
     def _stack_inputs(self, qs: list[MHQ], bb: int):
         """Batch inputs padded (by repeating the first query) to bucket bb."""
         qpad = qs + [qs[0]] * (bb - len(qs))
@@ -209,14 +312,13 @@ class BatchedHybridExecutor:
         w_b = jnp.asarray([q.weights for q in qpad], jnp.float32)
         return pred_b, qv_b, w_b
 
-    def _run_chunk(self, key, qs: list[MHQ], part: list[int], out: list,
-                   *, bucket_cap: int, scores_b: Optional[tuple] = None):
+    def _chunk_scores(self, qs: list[MHQ], part: list[int], bb: int,
+                      qv_b: tuple, w_b, scores_b: Optional[tuple]):
+        """(col_scores, weighted_scores) closures for one chunk, gathering
+        rows of the whole-batch dense matrices when ``scores_b`` is given."""
         t = self.table
         n_vec = t.schema.n_vec
-        bb = min(next_bucket(len(qs)), bucket_cap)
-        pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
         w_np = np.asarray([q.weights for q in qs], np.float32)
-
         scores_cache: dict = {}
         rows_idx = jnp.asarray(
             part + [part[0]] * (bb - len(part))) if scores_b is not None \
@@ -240,6 +342,16 @@ class BatchedHybridExecutor:
                 ws = s if ws is None else ws + s
             return ws if ws is not None \
                 else jnp.zeros((bb, t.n_rows), jnp.float32)
+
+        return col_scores, weighted_scores
+
+    def _run_chunk(self, key, qs: list[MHQ], part: list[int], out: list,
+                   *, bucket_cap: int, scores_b: Optional[tuple] = None):
+        t = self.table
+        bb = min(next_bucket(len(qs)), bucket_cap)
+        pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
+        col_scores, weighted_scores = self._chunk_scores(
+            qs, part, bb, qv_b, w_b, scores_b)
 
         if key[0] == "ff":
             _, _, k, mc = key
@@ -310,12 +422,19 @@ class ServeReport:
     qps: float
     mean_recall: Optional[float] = None
     recalls: Optional[list] = None
+    # async deadline-aware serving (serve/queue.py) dispositions/latency
+    n_timed_out: int = 0
+    p50_ms: Optional[float] = None
+    p99_ms: Optional[float] = None
 
     def describe(self) -> str:
         rec = f", mean recall {self.mean_recall:.3f}" \
             if self.mean_recall is not None else ""
+        lat = f", p50 {self.p50_ms:.1f}ms / p99 {self.p99_ms:.1f}ms" \
+            if self.p50_ms is not None and self.p99_ms is not None else ""
+        to = f", {self.n_timed_out} timed out" if self.n_timed_out else ""
         return (f"{self.n_queries} queries in {self.seconds:.2f}s over "
-                f"{self.n_batches} batches ({self.qps:.1f} QPS{rec})")
+                f"{self.n_batches} batches ({self.qps:.1f} QPS{rec}{lat}{to})")
 
 
 class ServingEngine:

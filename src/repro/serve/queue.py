@@ -1,0 +1,360 @@
+"""Async deadline-aware MHQ serving: queue → batch formation → fan-out.
+
+The synchronous ``ServingEngine`` chops a PRE-COLLECTED query list into
+fixed batches — fine for benchmarks, wrong for live traffic, where requests
+arrive one at a time and each carries a latency budget. This module adds the
+missing front half of the serving pipeline:
+
+  request queue  →  deadline-aware batch formation  →  batched execution
+                                                        (shard fan-out + merge)
+
+  * ``BatchFormer`` is the pure-synchronous policy core (injectable clock,
+    so tests drive it under a fake clock): a batch CUTS when ``batch_size``
+    requests are pending (cut-on-full) OR when the oldest pending request
+    has aged past ``max_wait`` seconds (cut-on-age). Requests whose
+    per-request deadline passes while still queued are expired — reported
+    with a ``timed_out`` disposition and NEVER executed. FIFO arrival
+    order is preserved within every formed batch.
+  * ``AsyncServingEngine`` is the asyncio front-end: concurrent
+    ``submit()`` callers share formed batches; one drainer task cuts
+    batches and executes them through ``BoomHQ.execute_batch`` — which
+    fans each batch out over the table shards when the instance is
+    ``bind_shards``-bound — in a worker thread, so the event loop keeps
+    accepting arrivals mid-execution.
+
+Dispositions and latency percentiles land in the shared ``ServeReport``
+(``n_timed_out``, ``p50_ms``/``p99_ms``).
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.executor import recall_at_k
+from repro.core.query import MHQ
+from repro.serve.batch import ServeReport
+
+PENDING = "pending"
+OK = "ok"
+TIMED_OUT = "timed_out"
+FAILED = "failed"  # execution raised; the exception propagates to submit()
+
+_DEFAULT = object()  # sentinel: "use the engine's default timeout"
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One enqueued query: arrival instant, optional ABSOLUTE deadline, and
+    (once the engine resolves it) disposition + result."""
+
+    query: MHQ
+    seq: int
+    arrival: float
+    deadline: Optional[float] = None  # clock instant; None = no deadline
+    status: str = PENDING  # PENDING | OK | TIMED_OUT | FAILED
+    result: Optional[tuple] = None  # (ids, scores) when status == OK
+    done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        """Queue wait + execution for OK; time-to-expiry for TIMED_OUT."""
+        return self.done - self.arrival
+
+
+class BatchFormer:
+    """Deadline-aware batch formation over a FIFO request queue.
+
+    Synchronous policy core with an injectable ``clock`` — the async engine
+    drives it with wall time, tests with a fake clock. See the module
+    docstring for the cut/expire policy.
+    """
+
+    def __init__(self, *, batch_size: int = 32, max_wait: float = 0.05,
+                 clock: Callable[[], float] = time.monotonic):
+        assert batch_size >= 1 and max_wait >= 0.0
+        self.batch_size = batch_size
+        self.max_wait = max_wait
+        self.clock = clock
+        self._pending: list[ServeRequest] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, query: MHQ, *, timeout: Optional[float] = None,
+               now: Optional[float] = None) -> ServeRequest:
+        """Enqueue one request; ``timeout`` (seconds from now) sets its
+        absolute deadline."""
+        now = self.clock() if now is None else now
+        r = ServeRequest(
+            query=query, seq=self._seq, arrival=now,
+            deadline=None if timeout is None else now + timeout)
+        self._seq += 1
+        self._pending.append(r)
+        return r
+
+    def expire(self, now: Optional[float] = None) -> list[ServeRequest]:
+        """Remove (and mark ``timed_out``) every pending request whose
+        deadline has passed — they will never be executed."""
+        now = self.clock() if now is None else now
+        dead = [r for r in self._pending
+                if r.deadline is not None and now > r.deadline]
+        if dead:
+            gone = {r.seq for r in dead}
+            self._pending = [r for r in self._pending if r.seq not in gone]
+            for r in dead:
+                r.status = TIMED_OUT
+                r.done = now
+        return dead
+
+    def poll(self, now: Optional[float] = None, *, flush: bool = False
+             ) -> tuple[Optional[list[ServeRequest]], list[ServeRequest]]:
+        """-> (batch | None, expired).
+
+        Expiry runs first (expired requests never enter a batch); then a
+        batch of the OLDEST ≤ ``batch_size`` requests cuts when the queue
+        is full, the oldest request aged past ``max_wait``, or ``flush``
+        forces the remainder out."""
+        now = self.clock() if now is None else now
+        expired = self.expire(now)
+        batch = None
+        if self._pending and (
+                len(self._pending) >= self.batch_size
+                or now - self._pending[0].arrival >= self.max_wait
+                or flush):
+            batch = self._pending[: self.batch_size]
+            self._pending = self._pending[self.batch_size:]
+        return batch, expired
+
+    def drain(self) -> list[ServeRequest]:
+        """Remove and return every pending request (engine shutdown)."""
+        out, self._pending = self._pending, []
+        return out
+
+    def next_event(self, now: Optional[float] = None) -> Optional[float]:
+        """Earliest future instant a poll could act — the oldest request's
+        cut-on-age instant or the soonest deadline — or None when idle."""
+        if not self._pending:
+            return None
+        t = self._pending[0].arrival + self.max_wait
+        for r in self._pending:
+            if r.deadline is not None:
+                t = min(t, r.deadline)
+        return t
+
+
+class AsyncServingEngine:
+    """Asyncio deployment front-end over a fitted ``BoomHQ``.
+
+    ``submit()`` coroutines from any number of concurrent callers enqueue
+    into one ``BatchFormer``; a single drainer task cuts batches
+    (cut-on-full / cut-on-age) and executes each through
+    ``BoomHQ.execute_batch`` — one fused optimizer dispatch + grouped
+    (possibly cross-shard) execution per batch — inside a worker thread so
+    new arrivals keep landing while a batch runs. Expired requests resolve
+    with ``status == "timed_out"`` and are never executed.
+    """
+
+    def __init__(self, boomhq, *, batch_size: int = 32,
+                 max_wait: float = 0.05,
+                 default_timeout: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.bq = boomhq
+        self.former = BatchFormer(batch_size=batch_size, max_wait=max_wait,
+                                  clock=clock)
+        self.default_timeout = default_timeout
+        self.clock = clock
+        self._futures: dict[int, asyncio.Future] = {}
+        self._event: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._served: list[ServeRequest] = []
+        self._n_batches = 0
+        self._t0: Optional[float] = None
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    async def start(self) -> "AsyncServingEngine":
+        if self._task is None:
+            self._event = asyncio.Event()
+            # ONE worker thread: batches execute strictly in formation
+            # order, and a late stop() flush can never race the drainer
+            # into two concurrent execute_batch calls
+            self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            self._task = asyncio.get_running_loop().create_task(self._drain())
+        return self
+
+    async def stop(self, *, flush: bool = True) -> None:
+        """Serve (or expire) everything still queued, then stop the drainer
+        and tear down the worker thread."""
+        if self._task is None:
+            return
+        while flush and (len(self.former) or not self._all_resolved()):
+            self._event.set()
+            await asyncio.sleep(1e-3)
+            batch, expired = self.former.poll(flush=True)
+            self._resolve_expired(expired)
+            if batch:
+                await self._execute(batch)
+        self._task.cancel()
+        try:
+            await self._task
+        except asyncio.CancelledError:
+            pass
+        self._task = None
+        # flush=False: fail everything never formed into a batch (and any
+        # straggler future) so no submit() caller is left hanging — the
+        # in-flight batch's futures were already failed by _execute's
+        # cancellation branch
+        for r in self.former.drain():
+            r.status = FAILED
+            r.done = self.clock()
+            self._finish(r, exc=asyncio.CancelledError("engine stopped"))
+        for seq in list(self._futures):
+            fut = self._futures.pop(seq)
+            if not fut.done():
+                fut.set_exception(asyncio.CancelledError("engine stopped"))
+        # wait=False: do not block the event loop on a discarded batch
+        self._pool.shutdown(wait=False, cancel_futures=True)
+        self._pool = None
+
+    async def __aenter__(self) -> "AsyncServingEngine":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    def _all_resolved(self) -> bool:
+        return not self._futures
+
+    # -- request path ------------------------------------------------------
+
+    async def submit(self, query: MHQ, *, timeout=_DEFAULT) -> ServeRequest:
+        """Enqueue one query and await its disposition. Returns the resolved
+        ``ServeRequest`` (``status`` is ``"ok"`` with ``result`` set, or
+        ``"timed_out"`` with ``result`` None)."""
+        await self.start()
+        tmo = self.default_timeout if timeout is _DEFAULT else timeout
+        r = self.former.submit(query, timeout=tmo)
+        if self._t0 is None:
+            self._t0 = r.arrival
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[r.seq] = fut
+        self._event.set()
+        await fut
+        return r
+
+    async def _drain(self) -> None:
+        while True:
+            batch, expired = self.former.poll()
+            self._resolve_expired(expired)
+            if batch:
+                await self._execute(batch)
+                continue  # queue may already hold the next full batch
+            nxt = self.former.next_event()
+            try:
+                wait = None if nxt is None \
+                    else max(1e-4, nxt - self.clock())
+                await asyncio.wait_for(self._event.wait(), wait)
+            except asyncio.TimeoutError:
+                pass
+            self._event.clear()
+
+    async def _execute(self, batch: list[ServeRequest]) -> None:
+        loop = asyncio.get_running_loop()
+        exec_fut = loop.run_in_executor(
+            self._pool, self.bq.execute_batch, [r.query for r in batch])
+        try:
+            results = await asyncio.shield(exec_fut)
+        except asyncio.CancelledError:
+            # stop(flush=False) cancelled the drainer mid-batch: fail the
+            # in-flight batch's futures so no submit() caller is stranded,
+            # swallow the worker's eventual outcome, finish cancelling
+            exec_fut.add_done_callback(
+                lambda f: f.cancelled() or f.exception())
+            now = self.clock()
+            for r in batch:
+                r.status = FAILED
+                r.done = now
+                self._finish(r, exc=asyncio.CancelledError("engine stopped"))
+            raise
+        except Exception as exc:  # noqa: BLE001 — a failed batch must fail
+            # ITS requests (submit() re-raises), never kill the drainer:
+            # a dead drainer would strand every later future forever
+            now = self.clock()
+            self._n_batches += 1
+            for r in batch:
+                r.status = FAILED
+                r.done = now
+                self._finish(r, exc=exc)
+            return
+        now = self.clock()
+        self._n_batches += 1
+        for r, res in zip(batch, results):
+            r.status = OK
+            r.result = res
+            r.done = now
+            self._finish(r)
+
+    def _resolve_expired(self, expired: list[ServeRequest]) -> None:
+        for r in expired:
+            self._finish(r)
+
+    def _finish(self, r: ServeRequest, *, exc: Optional[Exception] = None
+                ) -> None:
+        self._served.append(r)
+        fut = self._futures.pop(r.seq, None)
+        if fut is not None and not fut.done():
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(r)
+
+    # -- accounting --------------------------------------------------------
+
+    def report(self, *, gt_ids: Optional[dict] = None) -> ServeReport:
+        """Aggregate dispositions/latency over everything served so far.
+        ``gt_ids``: optional ``{seq: ground-truth id array}`` for recall
+        accounting over the OK requests."""
+        served = sorted(self._served, key=lambda r: r.seq)
+        ok = [r for r in served if r.status == OK]
+        lats = np.asarray([r.latency for r in ok], np.float64)
+        t_end = max((r.done for r in served), default=0.0)
+        seconds = max(t_end - (self._t0 or 0.0), 1e-9) if served else 0.0
+        recalls = None
+        if gt_ids is not None:
+            recalls = [recall_at_k(r.result[0], gt_ids[r.seq])
+                       for r in ok if r.seq in gt_ids]
+        return ServeReport(
+            n_queries=len(served),
+            n_batches=self._n_batches,
+            seconds=seconds,
+            qps=len(ok) / seconds if served else 0.0,
+            mean_recall=float(np.mean(recalls)) if recalls else None,
+            recalls=recalls,
+            n_timed_out=sum(r.status == TIMED_OUT for r in served),
+            p50_ms=float(np.percentile(lats, 50) * 1e3) if len(lats) else None,
+            p99_ms=float(np.percentile(lats, 99) * 1e3) if len(lats) else None,
+        )
+
+
+async def serve_stream(engine: AsyncServingEngine, queries: list[MHQ], *,
+                       arrival_gaps: Optional[list[float]] = None,
+                       timeout=_DEFAULT) -> list[ServeRequest]:
+    """Submit a query stream with the given inter-arrival gaps (seconds;
+    None = all-at-once) and await every disposition. Returns the resolved
+    requests in submission order — the open-loop driver benchmarks and
+    examples use for Poisson traffic."""
+    async with engine:
+        tasks = []
+        for i, q in enumerate(queries):
+            if arrival_gaps is not None and i > 0:
+                await asyncio.sleep(arrival_gaps[i - 1])
+            tasks.append(asyncio.ensure_future(
+                engine.submit(q, timeout=timeout)))
+        return list(await asyncio.gather(*tasks))

@@ -11,6 +11,7 @@ Implemented with ``shard_map`` so the collective schedule is explicit.
 """
 from __future__ import annotations
 
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -141,5 +142,108 @@ def sharded_masked_scan_batched(mesh: Mesh, data_axes=("data",), *, k: int,
         row0 = jnp.arange(n_dev, dtype=jnp.int32) * (n // n_dev)
         scales = tuple(scales) if int8 else jnp.zeros(())
         return fn(tuple(vectors), scales, scalars, preds, tuple(qs), w, row0)
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# cross-shard batched serving entry point (serve/batch.py fans out here)
+# ---------------------------------------------------------------------------
+#
+# The batched serving layer already computes dense per-column score matrices
+# for the whole batch (serve.batch.compute_batch_scores); the cross-shard
+# path must not re-score. Both functions below therefore take the WEIGHTED
+# (Q, n) score matrix as input and only do per-shard mask + local top-k +
+# one O(shards · k) merge:
+#
+#   * ``sharded_batch_topk`` builds the shard_map version: rows (score
+#     columns + scalar rows) are sharded over the mesh's data axes, each
+#     device reads only its local (Q, n_local) block of the dense matrix,
+#     and the merge is one all-gather of O(shards · k) candidates.
+#   * ``sharded_topk_ref`` is the single-device logical-shard reference
+#     with IDENTICAL merge semantics (same local top-k widths, same shard
+#     concatenation order, same tie-breaking) — the executor uses it when
+#     no multi-device mesh is bound, and tests use it as the shard_map
+#     oracle.
+
+
+def _merge_shard_candidates(s_all, g_all, *, k):
+    """Top-k over the concatenated per-shard candidates (Q, S·kk); output
+    padded to width k with id -1 / score NEG when fewer candidates exist."""
+    kf = min(k, s_all.shape[1])
+    ms, mi = jax.lax.top_k(s_all, kf)
+    ids = jnp.where(ms > NEG / 2, jnp.take_along_axis(g_all, mi, 1), -1)
+    if kf < k:
+        pad = ((0, 0), (0, k - kf))
+        ids = jnp.pad(ids, pad, constant_values=-1)
+        ms = jnp.pad(ms, pad, constant_values=NEG)
+    return ids, ms
+
+
+@partial(jax.jit, static_argnames=("k", "n_shards"))
+def sharded_topk_ref(w_scores, mask, *, k, n_shards):
+    """Logical-shard filtered top-k over precomputed weighted scores.
+
+    ``w_scores``/``mask``: (Q, n). Rows split into ``n_shards`` contiguous
+    shards (right-padded with non-qualifying rows when n % n_shards != 0);
+    each shard keeps a local top-min(k, shard_len), then one merge over the
+    (Q, shards·kk) candidates. Runs on a single device — the semantics (and
+    tie-breaking) match ``sharded_batch_topk`` exactly.
+    """
+    q, n = w_scores.shape
+    per = -(-n // n_shards)  # ceil-div shard length
+    masked = jnp.where(mask, w_scores, NEG)
+    masked = jnp.pad(masked, ((0, 0), (0, per * n_shards - n)),
+                     constant_values=NEG)
+    local = masked.reshape(q, n_shards, per)
+    kk = min(k, per)
+    s_loc, idx = jax.lax.top_k(local, kk)  # (Q, S, kk)
+    gids = jnp.arange(n_shards, dtype=jnp.int32)[None, :, None] * per + idx
+    return _merge_shard_candidates(s_loc.reshape(q, n_shards * kk),
+                                   gids.reshape(q, n_shards * kk), k=k)
+
+
+def sharded_batch_topk(mesh: Mesh, data_axes=("data",), *, k: int):
+    """Build the jit'd cross-shard batched filtered top-k.
+
+    Returned fn signature:
+      fn(w_scores (Q, n), scalars (n, M), preds (stacked over Q))
+        -> (ids (Q, k), scores (Q, k))
+
+    ``w_scores`` is the whole-batch weighted score matrix assembled from the
+    serving layer's per-column GEMMs; the shard_map in_spec slices its row
+    axis so each device reads only its local (Q, n_local) block — the scan
+    reuses the dense matrices instead of re-scoring, and the collective is
+    one all-gather of O(shards · k) candidates per query.
+    """
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+
+    def local(w_scores, scalars, preds, row0):
+        n_local = scalars.shape[0]
+        mask = jax.vmap(lambda p: eval_mask(p, scalars))(preds)  # (Q, n_local)
+        masked = jnp.where(mask, w_scores, NEG)
+        kk = min(k, n_local)
+        s_loc, idx = jax.lax.top_k(masked, kk)  # (Q, kk)
+        gids = row0 + idx  # globalize
+        s_all = jax.lax.all_gather(s_loc, axes, axis=1, tiled=True)
+        g_all = jax.lax.all_gather(gids, axes, axis=1, tiled=True)
+        return _merge_shard_candidates(s_all, g_all, k=k)
+
+    fn = compat.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(None, axes), P(axes, None), P(), P(axes)),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    def run(w_scores, scalars, preds):
+        n = scalars.shape[0]
+        n_dev = 1
+        for a in axes:
+            n_dev *= mesh.shape[a]
+        assert n % n_dev == 0, (n, n_dev)
+        row0 = jnp.arange(n_dev, dtype=jnp.int32) * (n // n_dev)
+        return fn(w_scores, scalars, preds, row0)
 
     return jax.jit(run)

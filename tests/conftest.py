@@ -5,6 +5,12 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy end-to-end serving tests (lint job deselects with "
+        "-m 'not slow'; tier-1 runs them)")
+
 
 @pytest.fixture(scope="session")
 def rng():
@@ -16,3 +22,29 @@ def tiny_table():
     from repro.bench import datasets
 
     return datasets.make("part", rows=1500, seed=0)
+
+
+@pytest.fixture(scope="session")
+def fitted():
+    """Fitted BoomHQ on a MIXED workload — conjunctive and DNF predicates —
+    so the whole fit/optimize/execute(+batch) pipeline runs the clause
+    algebra end-to-end. Shared by the batched-parity, oracle recall-floor
+    and cross-shard suites (tests must leave the instance unsharded)."""
+    from repro.bench import datasets, queries
+    from repro.core.boomhq import BoomHQ, BoomHQConfig
+    from repro.core.data_encoder import DataEncoderConfig
+    from repro.core.rewriter import RewriterConfig
+    from repro.vectordb.predicates import n_clauses
+
+    table = datasets.make("part", rows=2000, seed=0)
+    conj = queries.gen_workload(table, 22, n_vec_used=2, seed=1)
+    dnf = queries.gen_dnf_workload(table, 10, n_vec_used=2, seed=2,
+                                   clause_counts=(2, 3, 4))
+    assert max(n_clauses(q.predicates) for q in dnf) >= 2
+    wl = conj[:12] + dnf[:6] + conj[12:] + dnf[6:]
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=16,
+        encoder=DataEncoderConfig(frozen_steps=25, ae_steps=40, sample=512),
+        rewriter=RewriterConfig(steps=80, refine_columns=False)))
+    bq.fit(wl[:18])
+    return bq, wl[18:]

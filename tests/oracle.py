@@ -1,0 +1,103 @@
+"""Pure-NumPy brute-force filtered top-k oracle.
+
+Ground truth INDEPENDENT of every repro kernel: the DNF predicate mask, the
+per-column similarities, the weighted combination and the top-k selection
+are all re-derived here with plain NumPy in float64 — nothing is imported
+from ``repro.vectordb`` or ``repro.serve``, so agreement between an
+execution path and this oracle is evidence of correctness, not of two
+kernels sharing a bug.
+
+``tie_aware_recall`` is the float-tie-tolerant metric every recall-floor
+assertion uses: a returned id counts as correct when its EXACT (float64)
+score reaches the oracle's k-th score minus a tolerance scaled to the score
+magnitude, so float32 reduction-order noise in the kernels cannot flip a
+correct result into a miss.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NEG = -1e30
+
+
+def eval_mask_np(pred, scalars: np.ndarray) -> np.ndarray:
+    """(n,) bool DNF mask from the predicate's dense fields.
+
+    Accepts the conjunctive ``Predicates`` shim ((M,) fields — lifted to one
+    always-valid clause) or a ``PredicateSet`` ((C, M) fields + (C,)
+    ``clause_valid``). OR over valid clauses of the AND over each clause's
+    active columns; an inactive column always passes within its clause."""
+    active = np.asarray(pred.active)
+    lo = np.asarray(pred.lo, np.float64)
+    hi = np.asarray(pred.hi, np.float64)
+    if active.ndim == 1:  # conjunctive shim -> one valid clause
+        active, lo, hi = active[None], lo[None], hi[None]
+        valid = np.ones((1,), bool)
+    else:
+        valid = np.asarray(pred.clause_valid)
+    s = np.asarray(scalars, np.float64)[:, None, :]  # (n, 1, M)
+    ok = ((s >= lo[None]) & (s <= hi[None])) | ~active[None]
+    return np.any(ok.all(axis=-1) & valid[None], axis=-1)
+
+
+def similarity_np(q: np.ndarray, vecs: np.ndarray, metric: str) -> np.ndarray:
+    """Row scores of ``vecs`` (n, d) against ``q`` (d,), float64. Matches
+    the repo's metric conventions (higher = closer; l2 is the expanded
+    negative squared distance)."""
+    q = np.asarray(q, np.float64)
+    vecs = np.asarray(vecs, np.float64)
+    if metric == "dot":
+        return vecs @ q
+    if metric == "l2":
+        return 2.0 * (vecs @ q) - np.sum(vecs * vecs, axis=-1) - float(q @ q)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def exact_scores(table, query_vectors, weights) -> np.ndarray:
+    """(n,) exact weighted similarity of every row, float64."""
+    total = np.zeros((int(table.scalars.shape[0]),), np.float64)
+    for i, q in enumerate(query_vectors):
+        w = float(weights[i])
+        if w != 0.0:
+            total += w * similarity_np(
+                np.asarray(q), np.asarray(table.vectors[i]),
+                table.schema.metric)
+    return total
+
+
+def brute_force_topk(table, query_vectors, weights, pred, k: int):
+    """Exact filtered top-k: (ids (k,), scores (k,), masked (n,)).
+
+    ``masked`` holds every row's exact score with non-qualifying rows at
+    NEG — the input ``tie_aware_recall`` needs. Unfilled result slots carry
+    id -1 / score NEG, mirroring the kernels' conventions."""
+    total = exact_scores(table, query_vectors, weights)
+    mask = eval_mask_np(pred, np.asarray(table.scalars))
+    masked = np.where(mask, total, NEG)
+    order = np.argsort(-masked, kind="stable")[:k]
+    found = masked[order] > NEG / 2
+    ids = np.where(found, order, -1)
+    scores = np.where(found, masked[order], NEG)
+    return ids, scores, masked
+
+
+def tie_tolerance(kth: float, atol: float = 1e-4, rtol: float = 1e-5) -> float:
+    return atol + rtol * abs(kth)
+
+
+def tie_aware_recall(ids, masked: np.ndarray, k: int, *,
+                     atol: float = 1e-4, rtol: float = 1e-5) -> float:
+    """Recall@k against the exact score landscape, tolerant of float ties.
+
+    The budget is min(k, #qualifying rows); a returned id is correct when
+    it qualifies and its exact score reaches the oracle's budget-th score
+    minus a magnitude-scaled tolerance. Duplicates never double-count."""
+    n_qual = int(np.sum(masked > NEG / 2))
+    budget = min(k, n_qual)
+    if budget == 0:
+        return 1.0
+    kth = np.sort(masked)[::-1][budget - 1]
+    tol = tie_tolerance(float(kth), atol, rtol)
+    got = {int(i) for i in np.asarray(ids).ravel() if i >= 0}
+    correct = sum(1 for i in got if masked[i] >= kth - tol)
+    return min(correct, budget) / budget

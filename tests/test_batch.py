@@ -1,15 +1,15 @@
-"""Batched serving subsystem + this PR's seed-bug regressions:
-sequential/batched parity, counter semantics, linear IVF inserts, and the
-single rewriter decode path."""
+"""Batched serving subsystem: sequential/batched/cross-shard parity, counter
+semantics, linear IVF inserts, and the single rewriter decode path."""
 
 import numpy as np
 import pytest
+
+from _hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
 from repro.bench import datasets, queries
 from repro.core.boomhq import BoomHQ, BoomHQConfig
-from repro.core.data_encoder import DataEncoderConfig
 from repro.core.executor import HybridExecutor, plan_columns, recall_at_k
 from repro.core.query import ExecutionPlan, SubqueryParams, default_plan
 from repro.core.rewriter import MHQRewriter, RewriterConfig, candidate_plans
@@ -17,7 +17,7 @@ from repro.serve.batch import (
     BatchedHybridExecutor, ServingEngine, next_bucket, pow2_at_most,
 )
 from repro.vectordb import flat, ivf
-from repro.vectordb.predicates import Predicates, clause_bucket, n_clauses
+from repro.vectordb.predicates import Predicates, clause_bucket
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +171,76 @@ def test_batched_executor_parity_mixed_clause_counts(exec_setup):
         assert_results_match(ids_s, scores_s, ids_b, scores_b)
 
 
+# ---------------------------------------------------------------------------
+# three-way parity: sequential vs batched vs cross-shard
+# ---------------------------------------------------------------------------
+
+def _assert_three_way(t, seq, bx, wl, *, shard_counts=(2, 5)):
+    """filter_first with an uncapped gather is the budget at which all three
+    paths (sequential, batched, cross-shard exact scan) compute the same
+    mathematical result — so parity is well-defined for ANY predicate."""
+    plans = [ExecutionPlan("filter_first",
+                           tuple(SubqueryParams() for _ in range(q.n_vec)),
+                           max_candidates=t.n_rows) for q in wl]
+    batched = bx.execute_batch(wl, plans)
+    sharded = {s: BatchedHybridExecutor(t, bx.indexes, bx.engine, n_shards=s)
+               .execute_batch_sharded(wl) for s in shard_counts}
+    for j, (q, p) in enumerate(zip(wl, plans)):
+        ids_s, scores_s = seq.execute(q, p)
+        ids_b, scores_b = batched[j]
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+        for s in shard_counts:
+            ids_x, scores_x = sharded[s][j]
+            assert_results_match(ids_s, scores_s, ids_x, scores_x)
+
+
+def _mixed_wl(t, seed):
+    return queries.gen_dnf_workload(t, 5, n_vec_used=2, seed=seed,
+                                    clause_counts=(2, 3, 4)) + \
+        queries.gen_workload(t, 3, n_vec_used=2, seed=seed + 1)
+
+
+def test_three_way_parity_seed_corpus(exec_setup):
+    """Deterministic sweep (always runs, hypothesis or not): sequential vs
+    execute_batch vs cross-shard execute_batch agree (float-tie tolerant)
+    on mixed clause-bucket batches, for a divisible (2) and a padded (7)
+    shard split of the 1500-row table."""
+    t, seq, bx = exec_setup
+    for seed in (101, 202):
+        wl = _mixed_wl(t, seed)
+        assert len({clause_bucket(q.predicates) for q in wl}) >= 2
+        _assert_three_way(t, seq, bx, wl, shard_counts=(2, 7))
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 50_000))
+def test_three_way_parity_property(exec_setup, seed):
+    """Hypothesis property sweep of the same three-way parity over random
+    mixed clause-bucket workloads."""
+    t, seq, bx = exec_setup
+    _assert_three_way(t, seq, bx, _mixed_wl(t, seed), shard_counts=(4,))
+
+
+def test_sharded_executor_mesh_wiring(exec_setup):
+    """A bound 1-device mesh routes through the shard_map kernel and must
+    reproduce the logical-shard reference bit-for-bit (the multi-device
+    equivalence runs in tests/test_distributed.py's subprocess)."""
+    import jax
+    from jax.sharding import Mesh
+
+    t, _, bx = exec_setup
+    wl = _mixed_wl(t, 77)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    bx_mesh = BatchedHybridExecutor(t, bx.indexes, bx.engine, mesh=mesh)
+    bx_log = BatchedHybridExecutor(t, bx.indexes, bx.engine, n_shards=1)
+    res_m = bx_mesh.execute_batch_sharded(wl)
+    res_l = bx_log.execute_batch_sharded(wl)
+    for (im, sm), (il, sl) in zip(res_m, res_l):
+        np.testing.assert_array_equal(im, il)
+        np.testing.assert_allclose(sm, sl, atol=1e-6)
+
+
 def test_batched_executor_single_index_group(exec_setup):
     t, seq, bx = exec_setup
     wl = queries.gen_workload(t, 4, n_vec_used=2, seed=6)
@@ -188,25 +258,6 @@ def test_batched_executor_single_index_group(exec_setup):
 # ---------------------------------------------------------------------------
 # end-to-end: batched optimizer + serving engine
 # ---------------------------------------------------------------------------
-
-@pytest.fixture(scope="module")
-def fitted():
-    """Fit on a MIXED workload — conjunctive and DNF predicates — so the
-    whole fit/optimize/execute(+batch) pipeline runs the clause algebra
-    end-to-end (acceptance: DNF with >=2 clauses and IN-lists)."""
-    table = datasets.make("part", rows=2000, seed=0)
-    conj = queries.gen_workload(table, 22, n_vec_used=2, seed=1)
-    dnf = queries.gen_dnf_workload(table, 10, n_vec_used=2, seed=2,
-                                   clause_counts=(2, 3, 4))
-    assert max(n_clauses(q.predicates) for q in dnf) >= 2
-    wl = conj[:12] + dnf[:6] + conj[12:] + dnf[6:]
-    bq = BoomHQ(table, BoomHQConfig(
-        n_clusters=16,
-        encoder=DataEncoderConfig(frozen_steps=25, ae_steps=40, sample=512),
-        rewriter=RewriterConfig(steps=80, refine_columns=False)))
-    bq.fit(wl[:18])
-    return bq, wl[18:]
-
 
 def test_optimize_batch_matches_sequential(fitted):
     bq, test = fitted
@@ -261,3 +312,25 @@ def test_unfitted_execute_batch_uses_default_plans():
         # qualify fewer than k rows — e.g. an empty-selectivity predicate)
         ids_s, scores_s = bq.execute(q)
         assert_results_match(ids_s, scores_s, ids, scores)
+
+
+def test_sharded_serving_engine_matches_ground_truth():
+    """ServingEngine over a bind_shards-bound BoomHQ: every served result
+    is the exact filtered top-k (the sharded scan path is exact), and
+    bind_shards() restores single-shard serving."""
+    table = datasets.make("part", rows=1200, seed=2)
+    wl = queries.gen_workload(table, 6, n_vec_used=2, seed=9)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=8, use_de=False,
+        rewriter=RewriterConfig(steps=10, refine_columns=False)))
+    bq.bind_shards(3)
+    assert bq._batched_executor().n_shards == 3
+    engine = ServingEngine(bq, batch_size=4)
+    results, rep = engine.serve(wl)
+    assert rep.n_queries == len(wl) and rep.n_batches == 2
+    for q, (ids, scores) in zip(wl, results):
+        gt_ids, gt_s = flat.ground_truth(table, list(q.query_vectors),
+                                         list(q.weights), q.predicates, q.k)
+        assert_results_match(gt_ids, gt_s, ids, scores)
+    bq.bind_shards()
+    assert bq._batched_executor().n_shards == 1

@@ -114,6 +114,24 @@ _SUBPROC = textwrap.dedent("""
     assert set(np.asarray(ids).tolist()) == set(np.asarray(ids2).tolist())
     print("sharded_scan OK")
 
+    # --- cross-shard batched entry point: shard_map == logical reference ---
+    from repro.vectordb import predicates as pred_mod
+    from repro.vectordb.distributed import sharded_batch_topk, sharded_topk_ref
+    from repro.vectordb.predicates import PredicateSet, eval_mask
+    qb, k2 = 4, 12
+    scores_q = jnp.asarray(rng.normal(size=(qb, n)), jnp.float32)
+    preds = pred_mod.stack(
+        [PredicateSet.from_clauses(m, [{0: (0.1, 0.6)}, {1: (0.5, 0.9)}])
+         for _ in range(qb)])
+    fnb = sharded_batch_topk(mesh, ("data",), k=k2)
+    with mesh:
+        ids_b, s_b = fnb(scores_q, scal, preds)
+    mask_q = jax.vmap(lambda p: eval_mask(p, scal))(preds)
+    ids_r, s_r = sharded_topk_ref(scores_q, mask_q, k=k2, n_shards=4)
+    assert np.array_equal(np.asarray(ids_b), np.asarray(ids_r)), (ids_b, ids_r)
+    assert np.allclose(np.asarray(s_b), np.asarray(s_r), atol=1e-5)
+    print("sharded_batch OK")
+
     # --- elastic replan onto a reshaped mesh ---
     from repro import configs
     from repro.distributed.elastic import replan
@@ -155,6 +173,7 @@ def test_multidevice_subprocess():
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     assert "sharded_scan OK" in out.stdout
+    assert "sharded_batch OK" in out.stdout
     assert "elastic OK" in out.stdout
     assert "pjit_train OK" in out.stdout
 

@@ -1,0 +1,234 @@
+"""Deadline-aware batch formation under an injected fake clock, plus the
+asyncio serving engine end-to-end (real clock, tiny table)."""
+import asyncio
+
+import numpy as np
+
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.rewriter import RewriterConfig
+import pytest
+
+from repro.serve.queue import (
+    FAILED, OK, TIMED_OUT, AsyncServingEngine, BatchFormer, serve_stream,
+)
+from repro.vectordb import flat
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += dt
+        return self.now
+
+
+def _former(**kw) -> tuple[BatchFormer, FakeClock]:
+    clock = FakeClock()
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("max_wait", 1.0)
+    return BatchFormer(clock=clock, **kw), clock
+
+
+def test_cut_on_full_preserves_fifo():
+    f, clock = _former()
+    reqs = [f.submit(f"q{i}") for i in range(5)]
+    batch, expired = f.poll()
+    assert expired == []
+    assert [r.seq for r in batch] == [0, 1, 2, 3]  # FIFO, oldest first
+    assert [r.query for r in batch] == ["q0", "q1", "q2", "q3"]
+    # the 5th request is not yet aged — no second cut at the same instant
+    batch2, _ = f.poll()
+    assert batch2 is None and len(f) == 1
+    assert reqs[4].status == "pending"
+
+
+def test_cut_on_age():
+    f, clock = _former(batch_size=8, max_wait=0.5)
+    f.submit("a")
+    clock.advance(0.2)
+    f.submit("b")
+    assert f.poll()[0] is None  # oldest age 0.2 < 0.5, queue not full
+    clock.advance(0.31)  # oldest now 0.51 >= max_wait
+    batch, _ = f.poll()
+    assert [r.query for r in batch] == ["a", "b"]  # underfull but aged out
+
+
+def test_expired_reported_and_never_executed():
+    f, clock = _former(batch_size=2, max_wait=10.0)
+    doomed = f.submit("doomed", timeout=0.5)
+    clock.advance(1.0)
+    ok = f.submit("ok")  # arrives after the deadline passed
+    batch, expired = f.poll()
+    assert expired == [doomed]
+    assert doomed.status == TIMED_OUT and doomed.result is None
+    assert doomed.done == clock.now and doomed.latency == 1.0
+    # the expired request freed its slot: no cut-on-full, no stale entry
+    assert batch is None and len(f) == 1
+    clock.advance(10.0)
+    batch, expired = f.poll()
+    assert expired == [] and [r.seq for r in batch] == [ok.seq]
+
+
+def test_expiry_wins_over_formation():
+    """A request whose deadline has passed never enters a batch, even when
+    the queue is full enough to cut at the same poll."""
+    f, clock = _former(batch_size=2, max_wait=10.0)
+    a = f.submit("a", timeout=0.1)
+    f.submit("b")
+    f.submit("c")
+    clock.advance(0.2)
+    batch, expired = f.poll()
+    assert expired == [a]
+    assert [r.query for r in batch] == ["b", "c"]
+
+
+def test_deadline_exactly_at_poll_still_serves():
+    """now == deadline is NOT expired (strict >): a budget of exactly the
+    queue wait still executes."""
+    f, clock = _former(batch_size=8, max_wait=0.5)
+    r = f.submit("edge", timeout=0.5)
+    clock.advance(0.5)
+    batch, expired = f.poll()
+    assert expired == [] and batch == [r]
+
+
+def test_next_event_schedules_earliest_of_age_and_deadline():
+    f, clock = _former(batch_size=8, max_wait=1.0)
+    assert f.next_event() is None
+    f.submit("a")  # cut-on-age instant: 1.0
+    assert f.next_event() == 1.0
+    f.submit("b", timeout=0.25)  # deadline 0.25 is sooner
+    assert f.next_event() == 0.25
+    clock.advance(2.0)
+    f.poll()
+    assert f.next_event() is None  # drained
+
+
+def test_flush_forces_underfull_unaged_batch():
+    f, clock = _former(batch_size=8, max_wait=100.0)
+    f.submit("a")
+    f.submit("b")
+    assert f.poll()[0] is None
+    batch, _ = f.poll(flush=True)
+    assert [r.query for r in batch] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# asyncio engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _tiny_bq():
+    table = datasets.make("part", rows=900, seed=4)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=8, use_de=False,
+        rewriter=RewriterConfig(steps=10, refine_columns=False)))
+    return table, bq
+
+
+def test_async_engine_serves_stream():
+    table, bq = _tiny_bq()
+    bq.bind_shards(3)
+    wl = queries.gen_workload(table, 8, n_vec_used=2, seed=11)
+
+    async def main():
+        eng = AsyncServingEngine(bq, batch_size=3, max_wait=0.01)
+        reqs = await serve_stream(eng, wl)
+        return eng, reqs
+
+    eng, reqs = asyncio.run(main())
+    assert [r.query for r in reqs] == wl  # submission order preserved
+    assert all(r.status == OK for r in reqs)
+    for r in reqs:
+        q = r.query
+        gt_ids, gt_s = flat.ground_truth(table, list(q.query_vectors),
+                                         list(q.weights), q.predicates, q.k)
+        ids, scores = r.result
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(gt_s),
+                                   atol=1e-4, rtol=1e-5)
+    rep = eng.report()
+    assert rep.n_queries == len(wl) and rep.n_timed_out == 0
+    assert rep.qps > 0 and rep.p50_ms is not None and rep.p99_ms >= rep.p50_ms
+    assert "p50" in rep.describe()
+
+
+def test_async_engine_survives_execution_failure():
+    """A raising execute_batch fails ITS requests (submit re-raises) but
+    must not kill the drainer — later requests still get served."""
+    table, bq = _tiny_bq()
+    wl = queries.gen_workload(table, 2, n_vec_used=2, seed=13)
+    state = {"calls": 0}
+
+    class Flaky:
+        def execute_batch(self, qs):
+            state["calls"] += 1
+            if state["calls"] == 1:
+                raise RuntimeError("boom")
+            return bq.execute_batch(qs)
+
+    async def main():
+        eng = AsyncServingEngine(Flaky(), batch_size=1, max_wait=0.0)
+        async with eng:
+            with pytest.raises(RuntimeError, match="boom"):
+                await eng.submit(wl[0])
+            ok = await eng.submit(wl[1])
+        return eng, ok
+
+    eng, ok = asyncio.run(main())
+    assert ok.status == OK and ok.result is not None
+    served = sorted(eng._served, key=lambda r: r.seq)
+    assert [r.status for r in served] == [FAILED, OK]
+    assert eng.report().n_timed_out == 0
+
+
+def test_async_engine_stop_noflush_fails_inflight():
+    """stop(flush=False) mid-execution must not strand the in-flight
+    batch's submit() callers — they resolve with a cancellation instead of
+    hanging forever."""
+    import time as _time
+
+    class Slow:
+        def execute_batch(self, qs):
+            _time.sleep(0.4)
+            return [(np.asarray([0]), np.asarray([0.0]))] * len(qs)
+
+    async def main():
+        eng = AsyncServingEngine(Slow(), batch_size=1, max_wait=0.0)
+        await eng.start()
+        task = asyncio.ensure_future(eng.submit("q"))
+        await asyncio.sleep(0.1)  # batch formed and executing in the worker
+        # a second request that never forms a batch (the drainer is busy
+        # and stop() won't flush) must also resolve, not hang
+        eng.former.batch_size = 99
+        queued = asyncio.ensure_future(eng.submit("q2"))
+        await asyncio.sleep(0)
+        await eng.stop(flush=False)
+        with pytest.raises(asyncio.CancelledError):
+            await asyncio.wait_for(task, timeout=2.0)
+        with pytest.raises(asyncio.CancelledError):
+            await asyncio.wait_for(queued, timeout=2.0)
+        return eng
+
+    eng = asyncio.run(main())
+    assert sorted(r.status for r in eng._served) == [FAILED, FAILED]
+
+
+def test_async_engine_timeout_disposition():
+    _, bq = _tiny_bq()
+
+    async def main():
+        eng = AsyncServingEngine(bq, batch_size=64, max_wait=0.2)
+        async with eng:
+            r = await eng.submit("never-executed-query", timeout=0.0)
+        return eng, r
+
+    eng, r = asyncio.run(main())
+    # a zero budget expires before any batch cuts — and is never executed,
+    # which is also why a non-MHQ placeholder query cannot crash the engine
+    assert r.status == TIMED_OUT and r.result is None
+    rep = eng.report()
+    assert rep.n_timed_out == 1 and rep.p50_ms is None
