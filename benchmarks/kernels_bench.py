@@ -1,9 +1,14 @@
-"""Kernel micro-benchmark: fused masked_topk / int8_scan vs the jnp oracle.
+"""Kernel micro-benchmarks: fused kernels vs oracles, dense-vs-local crossover.
 
 On this CPU container the Pallas kernels execute in interpret mode, so the
-meaningful numbers are (a) correctness parity with the oracle and (b) the
-HBM-byte model: the int8 scan reads 4× fewer DB bytes per query — the
-memory-roofline win on the full-scan path (EXPERIMENTS.md §Perf boomhq row).
+meaningful numbers are (a) correctness parity with the oracle, (b) the
+HBM-byte model (the int8 scan reads 4× fewer DB bytes per query), and
+(c) the dense-vs-candidate-local CROSSOVER sweep: one (B, n) GEMM + masked
+top-k over ALL rows versus the fused gather+score over only each query's
+``scan`` candidate rows (``kernels.gather_score``, executing its off-TPU
+reference path — the same code the serving dispatcher runs). The sweep
+calibrates ``serve.batch.CostModel.crossover``: candidate-local wins while
+``B·scan / n_rows`` stays below the reported measured ratio.
 """
 from __future__ import annotations
 
@@ -15,6 +20,96 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.kernels.gather_score import gather_score_topk
+
+NEG = -1e30
+
+
+def _timeit(f, reps=3):
+    jax.block_until_ready(f())  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+# sweep points as work ratios B·scan/n — scan widths scale with the table
+# so the sweep stays cheap on small benchmark runs and spans the same
+# decision space on large ones
+SWEEP_RATIOS = (0.07, 0.27, 1.1, 4.4, 17.5)
+
+
+def crossover_sweep(n: int = 60_000, d: int = 128, b: int = 32, m: int = 3,
+                    k: int = 10, scans=None) -> list[dict]:
+    """Dense batched scoring vs candidate-local fused gather+score.
+
+    Dense cost is scan-independent (every row is scored); candidate-local
+    scales with ``b·scan``. Each row reports both times, the work ratio
+    ``b·scan/n`` and the speedup — the largest ratio with speedup > 1 is
+    the measured crossover the ``CostModel`` default should sit under."""
+    if scans is None:
+        scans = tuple(max(64, int(r * n / b)) for r in SWEEP_RATIOS)
+    from repro.vectordb.predicates import Predicates, stack
+
+    rng = np.random.default_rng(0)
+    vecs = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    scal = jnp.asarray(rng.uniform(0, 10, (n, m)), jnp.float32)
+    q_b = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    w_b = jnp.ones((b, 1), jnp.float32)
+    pred_b = stack([Predicates.from_conditions(m, {0: (2.0, 8.0)})
+                    for _ in range(b)])
+
+    @jax.jit
+    def dense(qb, lo, hi):
+        ws = qb @ vecs.T  # (b, n) — one GEMM over ALL rows
+        ok = jnp.all((scal >= lo) & (scal <= hi)
+                     | ~jnp.asarray([True] + [False] * (m - 1)), axis=1)
+        masked = jnp.where(ok[None, :], ws, NEG)
+        return jax.lax.top_k(masked, k)
+
+    lo = jnp.asarray([2.0] + [-np.inf] * (m - 1), jnp.float32)
+    hi = jnp.asarray([8.0] + [np.inf] * (m - 1), jnp.float32)
+    ms_dense = _timeit(lambda: dense(q_b, lo, hi))
+
+    @jax.jit
+    def local_fn(c):
+        # jitted like the serving paths (gather_score_topk is traceable and
+        # always called inside the executor's jitted graphs)
+        return gather_score_topk(c, (vecs,), (q_b,), w_b, scal, pred_b,
+                                 k=k, metric="dot", use_kernel=False)
+
+    rows = []
+    for scan in scans:
+        cand = jnp.asarray(rng.integers(0, n, size=(b, scan)), jnp.int32)
+        ms_local = _timeit(lambda c=cand: local_fn(c))
+        ratio = b * scan / n
+        rows.append({
+            "n_rows": n, "batch": b, "scan": scan,
+            "work_ratio": round(ratio, 3),
+            "dense_ms": round(ms_dense, 2),
+            "local_ms": round(ms_local, 2),
+            "speedup": round(ms_dense / ms_local, 2),
+        })
+        print(f"  crossover n={n} B={b} scan={scan}: dense {ms_dense:.1f}ms "
+              f"vs local {ms_local:.1f}ms -> {rows[-1]['speedup']}x "
+              f"(B·scan/n = {ratio:.2f})")
+    return rows
+
+
+def measured_crossover(rows: list[dict]) -> float:
+    """Largest measured work ratio at which candidate-local still wins
+    (log-interpolated between the last winning and first losing sweep
+    point) — the value ``serve.batch.CostModel.crossover`` should sit at."""
+    wins = [r for r in rows if r["speedup"] >= 1.0]
+    if not wins:
+        return 0.0
+    hi = max(r["work_ratio"] for r in wins)
+    # losses BELOW hi are small-batch overhead artifacts, not the crossover
+    losses_above = [r["work_ratio"] for r in rows
+                    if r["speedup"] < 1.0 and r["work_ratio"] > hi]
+    if not losses_above:
+        return hi
+    return round(float(np.sqrt(hi * min(losses_above))), 3)
 
 
 def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
@@ -26,23 +121,17 @@ def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
     act = jnp.asarray([True] + [False] * (m - 1))
     q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
 
-    s_k, i_k = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k)
+    s_k, i_k, v_k = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k)
     s_r, i_r = ref.masked_topk_ref(q, vecs, scal, lo, hi, act, n, k=k)
-    parity = bool(np.allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4))
+    parity = bool(np.allclose(np.asarray(s_k), np.asarray(s_r), atol=1e-4)
+                  and np.array_equal(np.asarray(v_k), np.asarray(i_r) >= 0))
 
     qv, sc = ops.quantize_rows(vecs)
-    s_q, i_q = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k)
+    s_q, i_q, _ = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k)
     rec = len(set(map(int, np.asarray(i_q))) & set(map(int, np.asarray(i_r)))) / k
 
-    def t(f, reps=3):
-        f()
-        jax.block_until_ready(f())
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            jax.block_until_ready(f())
-        return (time.perf_counter() - t0) / reps * 1e3
-
-    ms_ref = t(lambda: ref.masked_topk_ref(q, vecs, scal, lo, hi, act, n, k=k))
+    ms_ref = _timeit(lambda: ref.masked_topk_ref(q, vecs, scal, lo, hi, act,
+                                                 n, k=k))
     fp32_bytes = n * d * 4
     int8_bytes = n * d * 1 + n * 4
     out = {
@@ -57,8 +146,13 @@ def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
     print(f"  kernels: parity={parity} int8_recall={rec:.2f} "
           f"HBM bytes/query {fp32_bytes/2**20:.1f}MiB -> "
           f"{int8_bytes/2**20:.1f}MiB ({out['hbm_reduction']}x)")
+    out["crossover"] = crossover_sweep(n=n, d=d, m=m, k=k)
+    out["measured_crossover"] = measured_crossover(out["crossover"])
+    print(f"  measured crossover B·scan/n = {out['measured_crossover']}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    # standalone run = the calibration figure: the 60k-row sweep the
+    # CostModel default is measured on (benchmarks.run keeps its smaller n)
+    run(n=60_000)

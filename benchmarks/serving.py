@@ -150,6 +150,86 @@ def run_async_shards(suite, stream, gts, *, batch_size: int = 32,
     return rows
 
 
+# dense-vs-candidate-local acceptance sweep: (dataset, rows, batch sizes).
+# part = 2×768-dim columns (the multi-vector MHQ shape); sift = 1×128-dim at
+# half a million rows (the scale where the dense GEMM becomes the wall).
+CROSSOVER_TABLES = (("part", 60_000, (8, 32)), ("sift", 500_000, (8, 32)))
+
+
+def run_crossover(tables=CROSSOVER_TABLES, *, n_stream: int = 64,
+                  max_scan: int = 2048, nprobe: int = 16, k_mult: int = 4,
+                  seed: int = 0) -> list[dict]:
+    """Dense vs candidate-local batched executor QPS at a fixed plan.
+
+    Both paths run the SAME legalized plan (index_scan, the smallest
+    ``MAX_SCAN_GRID`` budget — the regime learned plans put large tables
+    in), so they probe identical candidate slots and their oracle recall
+    must agree to float ties; the QPS difference is purely the scoring
+    path. The executor is driven directly (fixed plans, no optimizer) so
+    the table isolates scoring; ``auto_path`` reports what the calibrated
+    ``CostModel`` would pick for each group."""
+    import numpy as np
+
+    from repro.bench import datasets, queries
+    from repro.core.executor import recall_at_k
+    from repro.core.query import ExecutionPlan, SubqueryParams
+    from repro.serve.batch import (
+        BatchedHybridExecutor, CANDIDATE_LOCAL, DENSE, CostModel, next_bucket,
+    )
+    from repro.vectordb import flat, ivf
+
+    rows_out = []
+    for dataset, rows, batch_sizes in tables:
+        table = datasets.make(dataset, rows=rows, seed=seed)
+        n_vec = table.schema.n_vec
+        nc = max(64, min(512, table.n_rows // 2000))
+        idx = [ivf.build(v, nc, seed=i, metric=table.schema.metric)
+               for i, v in enumerate(table.vectors)]
+        stream = queries.gen_workload(table, n_stream,
+                                      n_vec_used=min(2, n_vec),
+                                      seed=seed + 100)
+        gts = [np.asarray(flat.ground_truth(
+            table, list(q.query_vectors), list(q.weights), q.predicates,
+            q.k)[0]) for q in stream]
+        plan = ExecutionPlan("index_scan", tuple(
+            SubqueryParams(k_mult=k_mult, nprobe=nprobe, max_scan=max_scan,
+                           iterative=True) for _ in range(n_vec)))
+        plans = [plan] * len(stream)
+        for bs in batch_sizes:
+            row = {"dataset": dataset, "rows": table.n_rows, "batch": bs,
+                   "max_scan": max_scan}
+            scan_budget = max_scan * len([w for w in stream[0].weights
+                                          if w > 0])
+            row["auto_path"] = CostModel().choose(
+                batch=next_bucket(bs), scan=scan_budget, n_rows=table.n_rows)
+            for label, force in (("dense", DENSE),
+                                 ("local", CANDIDATE_LOCAL)):
+                bx = BatchedHybridExecutor(
+                    table, idx, cost_model=CostModel(force=force))
+                bx.execute_batch(stream[:bs], plans[:bs])  # warm jit
+                t0 = time.perf_counter()
+                results = []
+                for s in range(0, len(stream), bs):
+                    results.extend(
+                        bx.execute_batch(stream[s: s + bs],
+                                         plans[s: s + bs]))
+                dt = time.perf_counter() - t0
+                row[f"{label}_qps"] = round(len(stream) / dt, 1)
+                row[f"{label}_recall"] = round(float(np.mean(
+                    [recall_at_k(ids, gt)
+                     for (ids, _), gt in zip(results, gts)])), 3)
+            row["speedup"] = round(row["local_qps"] / row["dense_qps"], 2)
+            row["recall_delta"] = round(
+                abs(row["local_recall"] - row["dense_recall"]), 4)
+            rows_out.append(row)
+            print(f"  crossover {dataset} rows={row['rows']} B={bs}: "
+                  f"dense {row['dense_qps']} QPS (recall "
+                  f"{row['dense_recall']}) vs candidate-local "
+                  f"{row['local_qps']} QPS (recall {row['local_recall']}) "
+                  f"-> {row['speedup']}x, auto={row['auto_path']}")
+    return rows_out
+
+
 def run(sizes=None, dataset: str = "part", *, n_stream: int = 64,
         batch_size: int = 32, seed: int = 0, shards=DEFAULT_SHARDS,
         rate: float = DEFAULT_RATE, deadline: float = DEFAULT_DEADLINE
@@ -184,8 +264,19 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="tiny table for a seconds-long sanity run")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--crossover", action="store_true",
+                    help="dense vs candidate-local acceptance sweep "
+                         "(60k and 500k-row tables) instead of the suite")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.crossover:
+        res = {"figure": "serving_scoring_crossover",
+               "table": run_crossover(n_stream=args.n_stream)}
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=2)
+        return
 
     # force a 4-device host platform BEFORE jax initializes so the 2/4-shard
     # rows run under shard_map on a real mesh (imports below are lazy for

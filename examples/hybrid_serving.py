@@ -78,8 +78,24 @@ def main():
     print(f"inserted {n_new} rows -> {bq.table.n_rows} total")
 
     reqs2 = stream[24:]
-    _, rep2 = engine.serve(reqs2, gt_ids=ground_truths(bq.table, reqs2))
+    gts2 = ground_truths(bq.table, reqs2)
+    _, rep2 = engine.serve(reqs2, gt_ids=gts2)
     print(f"  [batch-2 (post-insert)] {rep2.describe()}")
+
+    # -- the scoring-dispatch knob ----------------------------------------
+    # Each execution group picks its scoring path per batch: DENSE (one
+    # GEMM over all rows per vector column) or CANDIDATE_LOCAL (fused
+    # gather+score over only the plan's candidate budget). The default
+    # CostModel routes a group candidate-local when
+    # batch·scan <= crossover·n_rows (crossover calibrated by
+    # `python -m benchmarks.serving --crossover`); `bind_cost_model`
+    # overrides it — move the threshold, or pin every group to one path.
+    # ServeReport.path_counts / describe() show what served the traffic.
+    from repro.serve.batch import CANDIDATE_LOCAL, CostModel
+    bq.bind_cost_model(CostModel(force=CANDIDATE_LOCAL))
+    _, rep_local = engine.serve(reqs2, gt_ids=gts2)
+    print(f"  [candidate-local forced] {rep_local.describe()}")
+    bq.bind_cost_model()  # restore the calibrated crossover
 
     # -- live traffic: async deadline-aware serving over a sharded table --
     n_shards = 3  # 6600 post-insert rows -> three 2200-row shards

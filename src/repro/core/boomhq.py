@@ -72,6 +72,7 @@ class BoomHQ:
         self._fitted = False
         self.n_shards = 1  # cross-shard serving config (bind_shards)
         self.shard_mesh = None
+        self.cost_model = None  # scoring-dispatch override (bind_cost_model)
 
     # -- offline -------------------------------------------------------------
 
@@ -228,24 +229,59 @@ class BoomHQ:
                 plan = dataclasses.replace(plan, strategy="index_scan")
         return plan
 
+    def _plan_local(self, b: int) -> bool:
+        """Should batch planning skip the dense score GEMMs?
+
+        The batched optimizer's only dense-score consumer is the pre-probe
+        feature; its candidate budget is the probe scan (``probe_k·4`` or
+        ``nprobe·4·n/C`` rows per query per column). The same cost model
+        that dispatches execution groups weighs that budget against the
+        table: when candidate-local wins, planning runs the unscored
+        pre-probe (vector gathers on the small probe tiles) and the GEMMs
+        are never built unless an execution group later asks for them."""
+        from repro.serve.batch import CANDIDATE_LOCAL, CostModel, next_bucket
+        cm = self.cost_model if self.cost_model is not None else CostModel()
+        n = self.table.n_rows
+        scan = 0
+        for idx in self.indexes:
+            if self.qenc is not None:
+                scan += ivf.probe_scan_budget(
+                    idx.n_clusters, n, nprobe=self.qenc.probe_nprobe,
+                    probe_k=self.qenc.probe_k)
+            else:
+                scan += min(n, self.engine.default_max_scan)
+        return cm.choose(batch=next_bucket(max(1, b)), scan=max(1, scan),
+                         n_rows=n * max(1, len(self.indexes))) \
+            == CANDIDATE_LOCAL
+
     def optimize_batch(self, qs: list[MHQ], *,
-                       scores_b: Optional[tuple] = None) -> list[ExecutionPlan]:
+                       scores_b: Optional[tuple] = None,
+                       dense: Optional[bool] = None) -> list[ExecutionPlan]:
         """Plan a whole batch with ONE fused jit call and ONE host sync:
         the per-query feature + head pipeline vmapped over the query axis
         (batch padded to a power-of-two bucket so the jit cache stays
         bounded). ``scores_b`` — per-column (B_bucket, n) dense similarity
         matrices from ``compute_batch_scores`` — feeds the pre-probe
         features; pass the same tuple to the batched executor so the GEMMs
-        run once per batch."""
+        run once per batch. ``dense=None`` auto-picks: when the scoring
+        cost model says the table is past the dense crossover (and no
+        matrices were passed in), planning runs the UNSCORED pre-probe
+        pipeline instead and no (B, n) matrix is ever built."""
         if not qs:
             return []
         if not self._fitted:
             return [default_plan(q.n_vec, self.engine) for q in qs]
-        if getattr(self, "_plan_batch_jit", None) is None:
-            self._build_plan_batch_jit()
-        from repro.serve.batch import compute_batch_scores, next_bucket
-        if scores_b is None:
-            scores_b = compute_batch_scores(self.table, qs)
+        if dense is None:
+            dense = scores_b is not None or not self._plan_local(len(qs))
+        if dense:
+            if getattr(self, "_plan_batch_jit", None) is None:
+                self._build_plan_batch_jit()
+            from repro.serve.batch import compute_batch_scores
+            if scores_b is None:
+                scores_b = compute_batch_scores(self.table, qs)
+        elif getattr(self, "_plan_batch_local_jit", None) is None:
+            self._build_plan_batch_jit(scored=False)
+        from repro.serve.batch import next_bucket
         b = len(qs)
         qpad = list(qs) + [qs[0]] * (next_bucket(b) - b)
         de = self.data_encoder
@@ -255,14 +291,16 @@ class BoomHQ:
         pred_b = predicates.stack([q.predicates for q in qpad])
         qv_b = tuple(jnp.stack([q.query_vectors[i] for q in qpad])
                      for i in range(self.table.schema.n_vec))
-        codes = np.asarray(self._plan_batch_jit(
+        args = (
             self.rewriter.params, de_args, self.qenc._edges, self.hists,
             tuple(self.indexes), tuple(self.table.vectors), self.table.scalars,
             qv_b, pred_b,
             jnp.asarray([q.weights for q in qpad], jnp.float32),
             jnp.asarray([float(np.log(q.k)) for q in qpad], jnp.float32),
-            jnp.asarray([q.recall_target for q in qpad], jnp.float32),
-            scores_b))
+            jnp.asarray([q.recall_target for q in qpad], jnp.float32))
+        codes = np.asarray(
+            self._plan_batch_jit(*args, scores_b) if dense
+            else self._plan_batch_local_jit(*args))
         return [self._apply_skew_guard(self.rewriter.plan_from_codes(c), q)
                 for q, c in zip(qs, codes[:b])]
 
@@ -281,20 +319,32 @@ class BoomHQ:
 
         self._plan_jit = plan_jit
 
-    def _build_plan_batch_jit(self):
-        fused = self._build_fused_features(scored=True)
+    def _build_plan_batch_jit(self, scored: bool = True):
+        fused = self._build_fused_features(scored=scored)
         rew = self.rewriter
 
-        def one(rw_params, de_args, senc_edges, hists, indexes, vectors,
-                scalars, qs, pred, weights, logk, rec, row_scores):
-            x = fused(de_args, senc_edges, hists, indexes, vectors, scalars,
-                      qs, pred, weights, logk, rec, row_scores)
-            return rew.plan_codes(rw_params, x)
+        if scored:
+            def one(rw_params, de_args, senc_edges, hists, indexes, vectors,
+                    scalars, qs, pred, weights, logk, rec, row_scores):
+                x = fused(de_args, senc_edges, hists, indexes, vectors,
+                          scalars, qs, pred, weights, logk, rec, row_scores)
+                return rew.plan_codes(rw_params, x)
 
-        self._plan_batch_jit = jax.jit(jax.vmap(
-            one,
-            in_axes=(None, None, None, None, None, None, None,
-                     0, 0, 0, 0, 0, 0)))
+            self._plan_batch_jit = jax.jit(jax.vmap(
+                one,
+                in_axes=(None, None, None, None, None, None, None,
+                         0, 0, 0, 0, 0, 0)))
+        else:
+            def one(rw_params, de_args, senc_edges, hists, indexes, vectors,
+                    scalars, qs, pred, weights, logk, rec):
+                x = fused(de_args, senc_edges, hists, indexes, vectors,
+                          scalars, qs, pred, weights, logk, rec)
+                return rew.plan_codes(rw_params, x)
+
+            self._plan_batch_local_jit = jax.jit(jax.vmap(
+                one,
+                in_axes=(None, None, None, None, None, None, None,
+                         0, 0, 0, 0, 0)))
 
     def execute(self, q: MHQ):
         ids, scores = self.executor.execute(q, self.optimize(q))
@@ -321,6 +371,15 @@ class BoomHQ:
         self.shard_mesh = mesh
         self.shard_axes = shard_axes
         self._batched = None  # rebind the executor with the new shard config
+        return self
+
+    def bind_cost_model(self, cost_model=None) -> "BoomHQ":
+        """Override the scoring dispatcher's cost model (a
+        ``serve.batch.CostModel`` — crossover ratio and/or a forced path)
+        for subsequent batched execution. ``bind_cost_model()`` restores the
+        calibrated default."""
+        self.cost_model = cost_model
+        self._batched = None  # rebind the executor with the new model
         return self
 
     @property
@@ -351,11 +410,18 @@ class BoomHQ:
             for s in range(0, len(queries), limit):
                 out.extend(self.execute_batch(queries[s: s + limit]))
             return out
-        scores_b = compute_batch_scores(self.table, queries)
+        # past the dense crossover the (B, n) similarity matrices are never
+        # built: planning runs the unscored pre-probe pipeline and execution
+        # groups gather only their candidate budgets (per-group dispatch can
+        # still fall back to a per-chunk GEMM when a group wants dense)
+        plan_local = self._plan_local(len(queries))
+        scores_b = None if plan_local \
+            else compute_batch_scores(self.table, queries)
         bx = self._batched_executor()
         if self._sharded:
             return self._execute_batch_sharded(queries, bx, scores_b)
-        plans = self.optimize_batch(queries, scores_b=scores_b)
+        plans = self.optimize_batch(queries, scores_b=scores_b,
+                                    dense=not plan_local)
         results = bx.execute_batch(queries, plans, scores_b=scores_b)
 
         under = [j for j, (ids, _) in enumerate(results)
@@ -365,7 +431,8 @@ class BoomHQ:
             retry = bx.execute_batch(
                 [queries[j] for j in under],
                 [default_plan(queries[j].n_vec, self.engine) for j in under],
-                scores_b=tuple(s[sub] for s in scores_b))
+                scores_b=tuple(s[sub] for s in scores_b)
+                if scores_b is not None else None)
             for j, (ids2, s2) in zip(under, retry):
                 if _n_valid(ids2) > _n_valid(results[j][0]):
                     results[j] = (ids2, s2)
@@ -393,7 +460,8 @@ class BoomHQ:
                 max_candidates=self.table.n_rows) for j in under]
             retry = bx.execute_batch(
                 [queries[j] for j in under], exact,
-                scores_b=tuple(s[sub] for s in scores_b))
+                scores_b=tuple(s[sub] for s in scores_b)
+                if scores_b is not None else None)
             for j, (ids2, s2) in zip(under, retry):
                 if _n_valid(ids2) > _n_valid(results[j][0]):
                     results[j] = (ids2, s2)
@@ -406,7 +474,8 @@ class BoomHQ:
             self._batched = BatchedHybridExecutor(
                 self.table, self.indexes, self.engine,
                 n_shards=self.n_shards, mesh=self.shard_mesh,
-                shard_axes=getattr(self, "shard_axes", ("data",)))
+                shard_axes=getattr(self, "shard_axes", ("data",)),
+                cost_model=self.cost_model)
         return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):

@@ -107,7 +107,10 @@ class HybridExecutor:
     # -- plan legalization ---------------------------------------------------
 
     def legalize(self, plan: ExecutionPlan) -> ExecutionPlan:
-        """Clamp a plan to what the engine personality supports."""
+        """Clamp a plan to what the engine personality supports, and every
+        candidate budget to the table — the legalized ``max_scan`` /
+        ``max_candidates`` are what the batched executor's scoring
+        dispatcher weighs against ``n_rows``."""
         e = self.engine
         subs = []
         base = plan.subqueries[0]
@@ -120,7 +123,9 @@ class HybridExecutor:
                 s = dataclasses.replace(s, iterative=False)
             s = dataclasses.replace(s, nprobe=min(s.nprobe, e.nprobe_cap))
             subs.append(s)
-        return dataclasses.replace(plan, subqueries=tuple(subs))
+        return dataclasses.replace(
+            plan, subqueries=tuple(subs),
+            max_candidates=min(plan.max_candidates, self.table.n_rows))
 
     # -- execution -------------------------------------------------------------
 

@@ -1,0 +1,276 @@
+"""Fused candidate-local gather+score kernel: the executor hot path past the
+dense-GEMM crossover.
+
+The batched executor scores DENSELY — one GEMM over all rows per vector
+column per batch — which is optimal while ``B·max_scan / n_rows`` is large
+but becomes the wall past ~10⁵-row shards: the GEMM touches every row even
+though the learned plans only ever look at ``max_scan`` candidates per
+query. This kernel closes that gap. Given a ``(B, S)`` candidate-row matrix
+(padded with -1), each grid step (query b, candidate block j):
+
+  * gathers the block's candidate rows — vectors of every weighted column
+    plus the scalar row — into VMEM scratch tiles via per-row HBM→VMEM
+    async copies (the table refs stay in ``pl.ANY``/HBM, so table size is
+    bounded by HBM, not the ~16 MB VMEM; the rows are arbitrary, so there
+    is no contiguous BlockSpec for them);
+  * scores the tile with one MXU dot per column and combines with the
+    query's column weights (l2 keeps the -||v||² and -||q||² terms so score
+    VALUES match ``table.similarity``, not just the ranking);
+  * evaluates the DNF predicate on the gathered scalars (OR over valid
+    clauses of AND over active columns) and masks;
+  * selects the block-local top-k by k rounds of max+knockout, where the
+    knockout removes every slot carrying the winning ROW ID — duplicate
+    candidates (the rerank union) can never crowd distinct rows out of a
+    block's k slots.
+
+Per-block candidates merge in the caller (``merge_topk_unique``): one
+dedup-by-id pass plus a (-score, id) lexsort, so ties break by smaller row
+id — the same rule the pure-jnp reference (``ref.gather_score_ref``) and the
+NumPy test oracle use, which keeps kernel-vs-reference id parity exact on
+tie-free data.
+
+Off-TPU the public entry ``gather_score_topk`` runs the reference path by
+default (the interpreter would execute the Pallas kernel in Python, row by
+row); on a TPU backend the same call tiles through Mosaic. ``use_kernel``
+forces either path (tests pin kernel-vs-reference parity with
+``use_kernel=True, interpret=True``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+ID_SENTINEL = 2**30  # sorts padded slots after every real row id
+
+
+def _pred_fields(pred):
+    """Dense (B, C, M) lo/hi/active + (B, C) clause_valid f32 fields from a
+    batched PredicateLike (the conjunctive shim lifts to one valid clause)."""
+    from repro.vectordb.predicates import as_set
+
+    ps = as_set(pred)
+    return (ps.lo.astype(jnp.float32), ps.hi.astype(jnp.float32),
+            ps.active.astype(jnp.float32), ps.clause_valid.astype(jnp.float32))
+
+
+def merge_topk_unique(ids, scores, k: int):
+    """(B, P) candidate pools -> (B, k) top-k with duplicate row ids
+    suppressed and ties broken by smaller row id.
+
+    Padded slots carry id -1 / score NEG. Duplicate ids score identically
+    (same row, same per-row dot), so keeping the first occurrence is exact.
+    """
+
+    def one(cid, s):
+        order = jnp.argsort(cid)
+        sc = cid[order]
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+        keep = jnp.zeros_like(first).at[order].set(first) & (cid >= 0)
+        s2 = jnp.where(keep, s, NEG)
+        key = jnp.where(cid >= 0, cid, ID_SENTINEL)
+        sel = jnp.lexsort((key, -s2))[:k]
+        top = s2[sel]
+        out_ids = jnp.where(top > NEG / 2, cid[sel], -1)
+        return out_ids.astype(jnp.int32), top
+
+    return jax.vmap(one)(ids, scores)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(cand_ref, scal_ref, w_ref, lo_ref, hi_ref, act_ref, cval_ref,
+            *refs, k: int, block_s: int, n_vec: int, metric: str,
+            apply_pred: bool):
+    vec_refs = refs[:n_vec]  # pl.ANY (HBM) — full table columns
+    q_refs = refs[n_vec:2 * n_vec]
+    out_s_ref, out_i_ref, out_q_ref = refs[2 * n_vec: 2 * n_vec + 3]
+    scratch = refs[2 * n_vec + 3:]
+    vec_tiles = scratch[:n_vec]  # VMEM (BS, d_i) per column
+    scal_tile = scratch[n_vec]  # VMEM (BS, M)
+    sem = scratch[n_vec + 1]  # DMA completion semaphore
+
+    cid = cand_ref[...].reshape(block_s, 1)  # (BS, 1) i32, -1 = padding
+    n = scal_ref.shape[0]
+    idc = jnp.clip(cid[:, 0], 0, n - 1)  # clamp padding for safe gathers
+
+    def gather(src_ref, tile_ref):
+        # arbitrary-row gather: one HBM→VMEM async copy per candidate row
+        # into the block's scratch tile — the table itself never enters
+        # VMEM, so table size is bounded by HBM
+        def body(t, _):
+            dma = pltpu.make_async_copy(src_ref.at[pl.ds(idc[t], 1), :],
+                                        tile_ref.at[pl.ds(t, 1), :], sem)
+            dma.start()
+            dma.wait()
+            return 0
+
+        jax.lax.fori_loop(0, block_s, body, 0)
+
+    total = jnp.zeros((block_s, 1), jnp.float32)
+    for i in range(n_vec):
+        gather(vec_refs[i], vec_tiles[i])
+        tile = vec_tiles[i][...]  # (BS, d)
+        q = q_refs[i][...]  # (1, d)
+        s = jnp.dot(tile, q.T, preferred_element_type=jnp.float32)  # (BS, 1)
+        if metric == "l2":
+            s = (2.0 * s - jnp.sum(tile * tile, axis=1, keepdims=True)
+                 - jnp.sum(q * q))
+        total = total + w_ref[0, i] * s
+
+    if apply_pred:
+        gather(scal_ref, scal_tile)
+        st = scal_tile[...]  # (BS, M)
+        lo, hi, act = lo_ref[...][0], hi_ref[...][0], act_ref[...][0]  # (C, M)
+        ok_cm = ((st[:, None, :] >= lo) & (st[:, None, :] <= hi)) \
+            | (act < 0.5)  # (BS, C, M)
+        clause = jnp.all(ok_cm, axis=-1) & (cval_ref[...][0] > 0.5)  # (BS, C)
+        ok = jnp.any(clause, axis=-1)[:, None]
+    else:
+        ok = jnp.ones((block_s, 1), bool)
+    qual = ok & (cid >= 0)
+    out_q_ref[0, 0] = jnp.sum(qual.astype(jnp.int32))
+
+    s = jnp.where(qual, total, NEG)
+    for j in range(k):
+        m = jnp.max(s)
+        is_max = (s >= m) & (s > NEG / 2)
+        first = jnp.min(jnp.where(is_max, cid, jnp.int32(ID_SENTINEL)))
+        out_s_ref[0, 0, j] = m
+        out_i_ref[0, 0, j] = jnp.where(m > NEG / 2, first, -1)
+        # knock out every slot carrying this ROW ID, not just one slot —
+        # duplicates must not occupy multiple of the block's k slots
+        s = jnp.where(cid == first, NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_s", "metric",
+                                             "apply_pred", "interpret"))
+def gather_score_blocks(cand, vectors, qs, weights, scalars, lo, hi, active,
+                        clause_valid, *, k: int, block_s: int,
+                        metric: str = "dot", apply_pred: bool = True,
+                        interpret: bool = True):
+    """-> (block_scores (B, nb, k), block_ids (B, nb, k), block_qual (B, nb)).
+
+    ``cand`` (B, S) i32 candidate rows (-1 = padding), S a multiple of
+    ``block_s``; block ids are ROW ids (block-locally deduplicated)."""
+    b, s_tot = cand.shape
+    assert s_tot % block_s == 0, (s_tot, block_s)
+    nb = s_tot // block_s
+    n, m = scalars.shape
+    n_vec = len(vectors)
+    c = lo.shape[1]
+    kern = functools.partial(_kernel, k=k, block_s=block_s, n_vec=n_vec,
+                             metric=metric, apply_pred=apply_pred)
+    in_specs = [
+        pl.BlockSpec((1, block_s), lambda b_, j: (b_, j)),  # candidates
+        pl.BlockSpec(memory_space=pl.ANY),  # scalars — stay in HBM
+        pl.BlockSpec((1, n_vec), lambda b_, j: (b_, 0)),  # weights
+        pl.BlockSpec((1, c, m), lambda b_, j: (b_, 0, 0)),  # lo
+        pl.BlockSpec((1, c, m), lambda b_, j: (b_, 0, 0)),  # hi
+        pl.BlockSpec((1, c, m), lambda b_, j: (b_, 0, 0)),  # active
+        pl.BlockSpec((1, c), lambda b_, j: (b_, 0)),  # clause_valid
+    ]
+    for _ in vectors:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))  # columns — HBM
+    for v in vectors:
+        in_specs.append(
+            pl.BlockSpec((1, v.shape[1]), lambda b_, j: (b_, 0)))
+    scratch_shapes = [pltpu.VMEM((block_s, v.shape[1]), jnp.float32)
+                      for v in vectors]
+    scratch_shapes += [pltpu.VMEM((block_s, m), jnp.float32),
+                       pltpu.SemaphoreType.DMA(())]
+    out_s, out_i, out_q = pl.pallas_call(
+        kern,
+        grid=(b, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda b_, j: (b_, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda b_, j: (b_, j, 0)),
+            pl.BlockSpec((1, 1), lambda b_, j: (b_, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, nb), jnp.int32),
+        ],
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+    )(cand, scalars, weights, lo, hi, active, clause_valid,
+      *[v for v in vectors], *[q for q in qs])
+    return out_s, out_i, out_q
+
+
+# ---------------------------------------------------------------------------
+# public entry — kernel on TPU, pure-jnp reference elsewhere
+# ---------------------------------------------------------------------------
+
+def _default_use_kernel() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
+                      k: int, metric: str = "dot", block_s: int = 256,
+                      use_kernel: bool | None = None,
+                      interpret: bool | None = None):
+    """Fused candidate-local filtered top-k for a query batch.
+
+    cand:    (B, S) i32 candidate row ids, -1 = padded/empty slot (duplicates
+             allowed — they are deduplicated before selection).
+    vectors: tuple of (n, d_i) table columns; qs: tuple of (B, d_i) queries;
+    weights: (B, n_vec) per-column weights; scalars: (n, M).
+    pred:    batched PredicateLike (leading axis B) or None to skip masking
+             (candidates already qualified, e.g. the rerank union).
+
+    -> (ids (B, k), scores (B, k), n_qualified (B,)). Empty slots carry
+    id -1 / score NEG; ties break by smaller row id. Traceable — callers
+    jit it into their own graphs."""
+    if use_kernel is None:
+        use_kernel = _default_use_kernel()
+    b, s_tot = cand.shape
+    apply_pred = pred is not None
+    if apply_pred:
+        lo, hi, act, cval = _pred_fields(pred)
+    else:
+        m = scalars.shape[1]
+        lo = jnp.full((b, 1, m), -jnp.inf, jnp.float32)
+        hi = jnp.full((b, 1, m), jnp.inf, jnp.float32)
+        act = jnp.zeros((b, 1, m), jnp.float32)
+        cval = jnp.ones((b, 1), jnp.float32)
+
+    if not use_kernel:
+        from repro.kernels.ref import gather_score_ref
+
+        return gather_score_ref(cand, vectors, qs, weights, scalars,
+                                lo, hi, act, cval, k=k, metric=metric,
+                                apply_pred=apply_pred)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bs = min(block_s, _next_pow2(max(s_tot, k, 8)))
+    pad = (-s_tot) % bs
+    if s_tot + pad < k:  # the merge pool (nb·k) must hold at least k slots
+        pad += ((k - (s_tot + pad)) + bs - 1) // bs * bs
+    if pad:
+        cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+    out_s, out_i, out_q = gather_score_blocks(
+        cand, tuple(vectors), tuple(qs), weights, scalars, lo, hi, act, cval,
+        k=k, block_s=bs, metric=metric, apply_pred=apply_pred,
+        interpret=interpret)
+    nb = cand.shape[1] // bs
+    ids, scores = merge_topk_unique(
+        out_i.reshape(b, nb * k), out_s.reshape(b, nb * k), k)
+    return ids, scores, jnp.sum(out_q, axis=1)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p

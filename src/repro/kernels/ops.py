@@ -31,11 +31,20 @@ def _pad_rows(x, block_rows, value=0):
 
 
 def _merge(block_s, block_i, k):
+    """Cross-block merge of per-block top-k pools.
+
+    Underfilled blocks pad their pools with (NEG, -1) slots; those slots
+    flow through ``lax.top_k`` whenever fewer than k rows qualify overall,
+    so the merge must report which result slots are real — callers that
+    consume ids (or scores) without checking would otherwise see phantom
+    rows. -> (scores (k,), ids (k,), valid (k,) bool); invalid slots carry
+    score NEG / id -1."""
     flat_s = block_s.reshape(-1)
     flat_i = block_i.reshape(-1)
     top_s, pos = jax.lax.top_k(flat_s, k)
-    ids = jnp.where(top_s > NEG / 2, flat_i[pos], -1)
-    return top_s, ids
+    valid = (top_s > NEG / 2) & (flat_i[pos] >= 0)
+    ids = jnp.where(valid, flat_i[pos], -1)
+    return jnp.where(valid, top_s, NEG), ids, valid
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "metric",
@@ -43,7 +52,8 @@ def _merge(block_s, block_i, k):
 def masked_topk(q, vectors, scalars, lo, hi, active, *, k: int,
                 block_rows: int = 1024, metric: str = "dot",
                 interpret: bool | None = None):
-    """Fused filtered top-k over the whole table. -> (scores (k,), ids (k,))."""
+    """Fused filtered top-k over the whole table.
+    -> (scores (k,), ids (k,), valid (k,))."""
     if interpret is None:
         interpret = _default_interpret()
     n = vectors.shape[0]
@@ -59,7 +69,8 @@ def masked_topk(q, vectors, scalars, lo, hi, active, *, k: int,
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
 def int8_masked_topk(q, vec_i8, scales, scalars, lo, hi, active, *, k: int,
                      block_rows: int = 1024, interpret: bool | None = None):
-    """Quantized fused filtered top-k. -> (scores (k,), ids (k,))."""
+    """Quantized fused filtered top-k.
+    -> (scores (k,), ids (k,), valid (k,))."""
     if interpret is None:
         interpret = _default_interpret()
     n = vec_i8.shape[0]

@@ -30,3 +30,47 @@ def int8_topk_ref(q, vec_i8, scales, scalars, lo, hi, active, n_rows, *, k: int)
     deq = vec_i8.astype(jnp.float32) * scales[:, None]
     return masked_topk_ref(q, deq, scalars, lo, hi, active, n_rows, k=k,
                            metric="dot")
+
+
+def gather_score_ref(cand, vectors, qs, weights, scalars, lo, hi, active,
+                     clause_valid, *, k: int, metric: str = "dot",
+                     apply_pred: bool = True):
+    """Reference for the candidate-local gather+score kernel — and the
+    executor's actual scoring path off-TPU (``gather_score_topk`` routes
+    here unless a TPU backend is present).
+
+    Same contract as ``gather_score.gather_score_topk`` after predicate
+    normalization: cand (B, S) i32 rows (-1 = padding, duplicates allowed),
+    vectors/qs per-column tuples, weights (B, n_vec), DNF fields (B, C, M)
+    + (B, C). -> (ids (B, k), scores (B, k), n_qualified (B,)); duplicate
+    ids are suppressed and ties break by smaller row id."""
+    from repro.kernels.gather_score import merge_topk_unique
+
+    n = scalars.shape[0]
+    b, s_tot = cand.shape
+    if s_tot < k:  # selection needs at least k slots
+        cand = jnp.pad(cand, ((0, 0), (0, k - s_tot)), constant_values=-1)
+    cand = cand.astype(jnp.int32)
+    idc = jnp.clip(cand, 0, n - 1)
+    valid = cand >= 0
+    total = jnp.zeros(cand.shape, jnp.float32)
+    for i, (v, q) in enumerate(zip(vectors, qs)):
+        g = v[idc]  # (B, S, d)
+        s = jnp.einsum("bsd,bd->bs", g, q)
+        if metric == "l2":
+            s = (2.0 * s - jnp.sum(g * g, axis=-1)
+                 - jnp.sum(q * q, axis=-1)[:, None])
+        total = total + weights[:, i:i + 1] * s
+    if apply_pred:
+        st = scalars[idc]  # (B, S, M)
+        ok_cm = ((st[:, :, None, :] >= lo[:, None])
+                 & (st[:, :, None, :] <= hi[:, None])) \
+            | (active[:, None] < 0.5)  # (B, S, C, M)
+        clause = jnp.all(ok_cm, axis=-1) & (clause_valid[:, None, :] > 0.5)
+        ok = jnp.any(clause, axis=-1)
+    else:
+        ok = jnp.ones(cand.shape, bool)
+    qual = ok & valid
+    masked = jnp.where(qual, total, NEG)
+    ids, scores = merge_topk_unique(cand, masked, k)
+    return ids, scores, jnp.sum(qual, axis=1)

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from functools import partial
 from typing import Optional
 
@@ -49,6 +50,7 @@ from repro.core.executor import (
     rerank_scored,
 )
 from repro.core.query import ExecutionPlan, MHQ
+from repro.kernels.gather_score import gather_score_topk
 from repro.vectordb import flat, ivf, predicates
 from repro.vectordb.distributed import sharded_batch_topk, sharded_topk_ref
 from repro.vectordb.predicates import eval_mask
@@ -59,6 +61,88 @@ from repro.vectordb.table import Table
 # this many slots (32 MB/column at the cap).
 SLOT_BUDGET = 1 << 23
 MAX_BATCH_KERNEL = 64  # widest vmapped execution kernel
+
+# scoring paths the per-group dispatcher chooses between
+DENSE = "dense"
+CANDIDATE_LOCAL = "candidate_local"
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Dense-vs-candidate-local crossover model.
+
+    The dense path runs one GEMM over ALL rows per vector column and group
+    chunk — per-query cost ∝ ``n_rows``. The candidate-local path gathers
+    and scores only each query's legalized candidate budget — group cost
+    ∝ ``batch · scan``. Candidate-local wins when
+
+        batch · scan  ≤  crossover · n_rows
+
+    (the ROADMAP's ``B·max_scan / n_rows`` threshold). ``crossover`` is
+    calibrated by the sweep in ``benchmarks/kernels_bench.py`` /
+    ``benchmarks/serving.py --crossover``; the default is the measured
+    value on the CPU container — the random-row gather streams ~2× slower
+    than the GEMM's sequential table read, so candidate-local must touch
+    well under half the table's bytes to win; a TPU backend with the
+    Mosaic kernel should recalibrate upward. ``force`` pins every group to
+    one path (used by the benchmarks and the dispatcher tests)."""
+
+    crossover: float = 0.136
+    force: Optional[str] = None
+
+    def choose(self, *, batch: int, scan: int, n_rows: int) -> str:
+        if self.force is not None:
+            return self.force
+        return CANDIDATE_LOCAL if batch * scan <= self.crossover * n_rows \
+            else DENSE
+
+
+class ScoringDispatcher:
+    """Per-execution-group scoring-path dispatch + decision log.
+
+    Every group chunk asks :meth:`choose` before executing; the decision
+    (group label, batch, candidate budget, chosen path) is recorded so
+    serving reports can surface which path served the traffic
+    (``ServeReport.path_counts``) and tests can assert the crossover is
+    honored per group."""
+
+    # decision log ring size: long-running servers (AsyncServingEngine never
+    # drains the log) keep only the most recent window; counts stay exact
+    MAX_DECISIONS = 4096
+
+    def __init__(self, n_rows: int, cost_model: Optional[CostModel] = None):
+        self.n_rows = int(n_rows)
+        self.cost_model = cost_model if cost_model is not None else CostModel()
+        self.counts: dict = {}
+        self.decisions: deque = deque(maxlen=self.MAX_DECISIONS)
+
+    def pins_dense(self, prefer_dense: bool) -> bool:
+        """The paid-for-GEMM rule, held in ONE place: when a chunk's dense
+        score matrices were already computed (the planner wanted them),
+        gathering rows from them is strictly cheaper than re-scoring
+        candidates from raw vectors — pin the chunk dense unless the cost
+        model explicitly forces a path."""
+        return prefer_dense and self.cost_model.force is None
+
+    def choose(self, *, batch: int, scan: int, group=None,
+               force: Optional[str] = None,
+               prefer_dense: bool = False) -> str:
+        if force is None and self.pins_dense(prefer_dense):
+            force = DENSE
+        path = force if force is not None else self.cost_model.choose(
+            batch=batch, scan=scan, n_rows=self.n_rows)
+        self.decisions.append(
+            {"group": group, "batch": batch, "scan": scan, "path": path})
+        self.counts[path] = self.counts.get(path, 0) + 1
+        return path
+
+    def take(self) -> tuple[dict, list]:
+        """Return (counts, recent decisions) accumulated since the last
+        take, and reset both."""
+        counts, decisions = self.counts, list(self.decisions)
+        self.counts = {}
+        self.decisions.clear()
+        return counts, decisions
 
 
 def next_bucket(n: int, floor: int = 1) -> int:
@@ -152,6 +236,22 @@ def _eval_mask_batch(pred_b, scalars):
     return jax.vmap(lambda p: eval_mask(p, scalars))(pred_b)
 
 
+@partial(jax.jit, static_argnames=("k", "metric"))
+def _gather_rerank_batch(rows_b, vectors, q_b, w_b, scalars, *, k, metric):
+    """Candidate-local weighted re-rank: fused gather+score+dedup+top-k over
+    the candidate union — no (B, n) weighted score matrix."""
+    return gather_score_topk(rows_b, vectors, q_b, w_b, scalars, None,
+                             k=k, metric=metric)
+
+
+@partial(jax.jit, static_argnames=("size",))
+def _qualifying_rows_batch(mask_b, *, size):
+    """(B, n) bool masks -> (B, size) qualifying row ids, -1 padded."""
+    return jax.vmap(
+        lambda m: jnp.nonzero(m, size=size, fill_value=-1)[0]
+    )(mask_b).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # batched executor
 # ---------------------------------------------------------------------------
@@ -172,10 +272,12 @@ class BatchedHybridExecutor:
 
     def __init__(self, table: Table, indexes: list,
                  engine: EngineCaps = PGVECTOR, *, n_shards: int = 1,
-                 mesh=None, shard_axes=("data",)):
+                 mesh=None, shard_axes=("data",),
+                 cost_model: Optional[CostModel] = None):
         self.table = table
         self.indexes = indexes
         self.engine = engine
+        self.dispatcher = ScoringDispatcher(table.n_rows, cost_model)
         self.mesh = mesh
         self.shard_axes = shard_axes if isinstance(shard_axes, tuple) \
             else (shard_axes,)
@@ -219,6 +321,23 @@ class BatchedHybridExecutor:
             subs.append((i, min(sp.k_mult * q.k, n), np0,
                          min(sp.max_scan, n), sp.iterative))
         return ("ix", cb, q.k, tuple(subs))
+
+    def _group_scan(self, key) -> int:
+        """Per-query, per-active-column candidate budget of a group — the
+        ``scan`` the cost model weighs against ``n_rows``.
+
+        Both sides of the crossover scale with the group's active columns —
+        dense runs one (B, n) GEMM per active column, candidate-local
+        gathers each column's budget (and the rerank union gathers every
+        active column per row) — so the comparison must be per column:
+        filter_first's cap already is (every active column is gathered for
+        each of the ``max_candidates`` rows), and index groups divide the
+        summed per-column budgets by the column count. Legalization clamped
+        every term (max_scan/max_candidates capped at the table size)."""
+        if key[0] == "ff":
+            return int(key[3])
+        subs = key[3]
+        return max(1, sum(s[3] for s in subs) // max(1, len(subs)))
 
     # -- execution ---------------------------------------------------------
 
@@ -287,18 +406,50 @@ class BatchedHybridExecutor:
     def _run_chunk_sharded(self, qs: list[MHQ], part: list[int], out: list,
                            *, k: int, bucket_cap: int,
                            scores_b: Optional[tuple] = None):
+        """One sharded group chunk, dispatcher-routed.
+
+        The sharded scan is EXACT, so its candidate-local variant must be
+        too: the qualifying-row count per query (from the predicate masks,
+        which cost no GEMM) is the group's candidate budget — when
+        ``bb · max(n_qualified)`` clears the crossover, the chunk runs as an
+        exact fused gather+score over only the qualifying rows instead of
+        the dense (bb, n) weighted-score scan. A bound device mesh pins the
+        group to the dense shard_map kernel (the fan-out IS the point
+        there); the decision is still recorded."""
         t = self.table
         bb = min(next_bucket(len(qs)), bucket_cap)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
-        _, weighted_scores = self._chunk_scores(
-            qs, part, bb, qv_b, w_b, scores_b)
-        ws = weighted_scores()  # (bb, n) — reused, never re-scored
         if self.mesh is not None:
-            out_ids, out_scores = self._shard_fn(k)(ws, t.scalars, pred_b)
+            self.dispatcher.choose(batch=bb, scan=t.n_rows,
+                                   group=("sharded-mesh", k), force=DENSE)
+            _, weighted_scores = self._chunk_scores(
+                qs, part, bb, qv_b, w_b, scores_b)
+            out_ids, out_scores = self._shard_fn(k)(
+                weighted_scores(), t.scalars, pred_b)
         else:
             mask = _eval_mask_batch(pred_b, t.scalars)
-            out_ids, out_scores = sharded_topk_ref(
-                ws, mask, k=k, n_shards=self.n_shards)
+            prefer_dense = scores_b is not None
+            if self.dispatcher.pins_dense(prefer_dense):
+                mc = t.n_rows  # candidate-local impossible: skip the sync
+            else:
+                # one host sync per chunk sizes the candidate-local gather
+                n_qual = np.asarray(jnp.sum(mask, axis=1))
+                mc = min(next_bucket(max(int(n_qual.max()), k, 1)),
+                         next_bucket(t.n_rows))
+            path = self.dispatcher.choose(batch=bb, scan=mc,
+                                          group=("sharded", k),
+                                          prefer_dense=prefer_dense)
+            if path == CANDIDATE_LOCAL:
+                rows_b = _qualifying_rows_batch(mask, size=mc)
+                vecs, qsb, wsub = self._active_columns(qs, qv_b, w_b)
+                out_ids, out_scores, _ = _gather_rerank_batch(
+                    rows_b, vecs, qsb, wsub, t.scalars,
+                    k=k, metric=t.schema.metric)
+            else:
+                _, weighted_scores = self._chunk_scores(
+                    qs, part, bb, qv_b, w_b, scores_b)
+                out_ids, out_scores = sharded_topk_ref(
+                    weighted_scores(), mask, k=k, n_shards=self.n_shards)
         ids_np, scores_np = np.asarray(out_ids), np.asarray(out_scores)
         for pos, j in enumerate(part):
             out[j] = (ids_np[pos], scores_np[pos])
@@ -349,49 +500,112 @@ class BatchedHybridExecutor:
                    *, bucket_cap: int, scores_b: Optional[tuple] = None):
         t = self.table
         bb = min(next_bucket(len(qs)), bucket_cap)
+        path = self.dispatcher.choose(batch=bb, scan=self._group_scan(key),
+                                      group=key[:3],
+                                      prefer_dense=scores_b is not None)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
-        col_scores, weighted_scores = self._chunk_scores(
-            qs, part, bb, qv_b, w_b, scores_b)
 
-        if key[0] == "ff":
-            _, _, k, mc = key
-            out_ids, out_scores, _, _ = _filter_first_batch(
-                weighted_scores(), t.scalars, pred_b,
-                k=k, max_candidates=mc)
+        if path == CANDIDATE_LOCAL:
+            out_ids, out_scores = self._run_chunk_local(
+                key, qs, pred_b, qv_b, w_b)
         else:
-            _, _, k, subs = key
-            cand = [self._batched_subquery(col, col_scores(col), pred_b,
-                                           qv_b[col], k_i, np0, ms, it)
-                    for (col, k_i, np0, ms, it) in subs]
-            rows_b = jnp.concatenate(cand, axis=1)
-            total = next_bucket(rows_b.shape[1], 64)
-            if total > rows_b.shape[1]:
-                rows_b = jnp.pad(rows_b,
-                                 ((0, 0), (0, total - rows_b.shape[1])),
-                                 constant_values=-1)
-            out_ids, out_scores = _rerank_batch(weighted_scores(), rows_b,
-                                                k=k, total=total)
+            col_scores, weighted_scores = self._chunk_scores(
+                qs, part, bb, qv_b, w_b, scores_b)
+            if key[0] == "ff":
+                _, _, k, mc = key
+                out_ids, out_scores, _, _ = _filter_first_batch(
+                    weighted_scores(), t.scalars, pred_b,
+                    k=k, max_candidates=mc)
+            else:
+                _, _, k, subs = key
+                cand = [self._batched_subquery(col, col_scores(col), pred_b,
+                                               qv_b[col], k_i, np0, ms, it)
+                        for (col, k_i, np0, ms, it) in subs]
+                rows_b = self._pad_candidates(cand)
+                out_ids, out_scores = _rerank_batch(
+                    weighted_scores(), rows_b, k=k, total=rows_b.shape[1])
         ids_np, scores_np = np.asarray(out_ids), np.asarray(out_scores)
         for pos, j in enumerate(part):
             out[j] = (ids_np[pos], scores_np[pos])
 
+    def _run_chunk_local(self, key, qs: list[MHQ], pred_b, qv_b, w_b):
+        """Candidate-local execution of one group chunk: only the legalized
+        candidate budget is ever gathered/scored — no (bb, n) score matrix.
+        Subqueries run through ``ivf.search_local_batch`` and the re-rank /
+        filter-first through the fused gather+score kernel path."""
+        t = self.table
+        if key[0] == "ff":
+            _, _, k, mc = key
+            out_ids, out_scores, _, _ = flat.filter_first_local_batch(
+                tuple(t.vectors), t.scalars, pred_b, qv_b, w_b, k=k,
+                max_candidates=mc, n_vec=t.schema.n_vec,
+                metric=t.schema.metric)
+            return out_ids, out_scores
+        _, _, k, subs = key
+        cand = [self._batched_subquery(col, None, pred_b, qv_b[col], k_i,
+                                       np0, ms, it, local=True)
+                for (col, k_i, np0, ms, it) in subs]
+        rows_b = self._pad_candidates(cand)
+        vecs, qsb, wsub = self._active_columns(qs, qv_b, w_b)
+        out_ids, out_scores, _ = _gather_rerank_batch(
+            rows_b.astype(jnp.int32), vecs, qsb, wsub, t.scalars,
+            k=k, metric=t.schema.metric)
+        return out_ids, out_scores
+
+    def _active_columns(self, qs: list[MHQ], qv_b: tuple, w_b):
+        """Restrict (vectors, queries, weights) to columns some query in the
+        chunk actually weights — a zero weight contributes exactly 0, so the
+        candidate-local re-rank need not gather those columns at all."""
+        w_np = np.asarray([q.weights for q in qs], np.float32)
+        act = [i for i in range(self.table.schema.n_vec)
+               if np.any(np.abs(w_np[:, i]) > 0)]
+        vecs = tuple(self.table.vectors[i] for i in act)
+        qsb = tuple(qv_b[i] for i in act)
+        wsub = w_b[:, jnp.asarray(act, jnp.int32)] if act else w_b[:, :0]
+        return vecs, qsb, wsub
+
+    @staticmethod
+    def _pad_candidates(cand: list):
+        """Concat per-column candidate ids and pad the union to a
+        power-of-two bucket (-1 = empty slot)."""
+        rows_b = jnp.concatenate(cand, axis=1)
+        total = next_bucket(rows_b.shape[1], 64)
+        if total > rows_b.shape[1]:
+            rows_b = jnp.pad(rows_b, ((0, 0), (0, total - rows_b.shape[1])),
+                             constant_values=-1)
+        return rows_b
+
     def _batched_subquery(self, col: int, rs_b, pred_b, q_b, k_i: int,
-                          nprobe: int, max_scan: int, iterative: bool):
+                          nprobe: int, max_scan: int, iterative: bool,
+                          *, local: bool = False):
         """One column's filtered subquery for the whole chunk, with grouped
         iterative re-expansion. Returns candidate ids (bb, k_i).
 
-        ``rs_b`` (bb, n) holds the column's dense scores, so re-expansion
-        rounds never re-score vectors — only re-select slots. Each round
-        narrows to the still-underfilled SUBSET (padded to its own
-        power-of-two bucket), so — like the sequential doubling loop — the
-        extra probing work scales with how many queries underfill, not with
-        the group size."""
+        Dense mode (``local=False``): ``rs_b`` (bb, n) holds the column's
+        dense scores, so re-expansion rounds never re-score vectors — only
+        re-select slots. Candidate-local mode gathers and scores only the
+        probed slots (``ivf.search_local_batch``); re-expansion re-gathers
+        the underfilled subset at the doubled nprobe. Each round narrows to
+        the still-underfilled SUBSET (padded to its own power-of-two
+        bucket), so — like the sequential doubling loop — the extra probing
+        work scales with how many queries underfill, not with the group
+        size."""
         t, index = self.table, self.indexes[col]
         cap = min(index.n_clusters, self.engine.nprobe_cap)
         ks = min(next_bucket(k_i, 16), max_scan)
-        ids, _, _, n_qual = _search_batch(
-            index, rs_b, t.scalars, pred_b, q_b,
-            nprobe=nprobe, max_scan=max_scan, k=ks)
+
+        def probe(np_, pred, qb, rs):
+            if local:
+                ids_, _, _, nq = ivf.search_local_batch(
+                    index, t.vectors[col], t.scalars, pred, qb,
+                    nprobe=np_, max_scan=max_scan, k=ks)
+            else:
+                ids_, _, _, nq = _search_batch(
+                    index, rs, t.scalars, pred, qb,
+                    nprobe=np_, max_scan=max_scan, k=ks)
+            return ids_, nq
+
+        ids, n_qual = probe(nprobe, pred_b, q_b, rs_b)
         ids = ids[:, :k_i]
         if not iterative:
             return ids
@@ -402,9 +616,8 @@ class BatchedHybridExecutor:
             bb = next_bucket(len(sel))
             sel_p = np.concatenate([sel, np.full(bb - len(sel), sel[0])])
             pred_sub = predicates.take(pred_b, sel_p)
-            ids2, _, _, nq2 = _search_batch(
-                index, rs_b[sel_p], t.scalars, pred_sub, q_b[sel_p],
-                nprobe=nprobe, max_scan=max_scan, k=ks)
+            ids2, nq2 = probe(nprobe, pred_sub, q_b[sel_p],
+                              rs_b[sel_p] if rs_b is not None else None)
             ids = ids.at[jnp.asarray(sel)].set(ids2[: len(sel), :k_i])
             done[sel] = np.asarray(nq2)[: len(sel)] >= k_i
         return ids
@@ -426,6 +639,8 @@ class ServeReport:
     n_timed_out: int = 0
     p50_ms: Optional[float] = None
     p99_ms: Optional[float] = None
+    # per-group scoring-path dispatch counts ({"dense": .., "candidate_local": ..})
+    path_counts: Optional[dict] = None
 
     def describe(self) -> str:
         rec = f", mean recall {self.mean_recall:.3f}" \
@@ -433,8 +648,13 @@ class ServeReport:
         lat = f", p50 {self.p50_ms:.1f}ms / p99 {self.p99_ms:.1f}ms" \
             if self.p50_ms is not None and self.p99_ms is not None else ""
         to = f", {self.n_timed_out} timed out" if self.n_timed_out else ""
+        paths = ""
+        if self.path_counts:
+            paths = ", paths " + "/".join(
+                f"{name}×{cnt}" for name, cnt in sorted(self.path_counts.items()))
         return (f"{self.n_queries} queries in {self.seconds:.2f}s over "
-                f"{self.n_batches} batches ({self.qps:.1f} QPS{rec}{lat}{to})")
+                f"{self.n_batches} batches ({self.qps:.1f} QPS{rec}{lat}{to}"
+                f"{paths})")
 
 
 class ServingEngine:
@@ -458,6 +678,9 @@ class ServingEngine:
               ) -> tuple[list, ServeReport]:
         """Run the stream in batches. ``gt_ids`` (optional, one ground-truth
         id array per query) enables recall accounting."""
+        dispatcher = self._dispatcher()
+        if dispatcher is not None:
+            dispatcher.take()  # drop warmup decisions from the report
         results: list = []
         n_batches = 0
         t0 = time.perf_counter()
@@ -470,9 +693,13 @@ class ServingEngine:
         if gt_ids is not None:
             recalls = [recall_at_k(ids, gt)
                        for (ids, _), gt in zip(results, gt_ids)]
+        counts = dispatcher.take()[0] if dispatcher is not None else None
         report = ServeReport(
             n_queries=len(queries), n_batches=n_batches, seconds=seconds,
             qps=len(queries) / max(seconds, 1e-9),
             mean_recall=float(np.mean(recalls)) if recalls is not None else None,
-            recalls=recalls)
+            recalls=recalls, path_counts=counts or None)
         return results, report
+
+    def _dispatcher(self) -> Optional[ScoringDispatcher]:
+        return getattr(self.bq._batched_executor(), "dispatcher", None)

@@ -78,6 +78,43 @@ def filter_first_scored(
     return ids, top_scores, jnp.sum(valid), jnp.sum(mask)
 
 
+@partial(jax.jit, static_argnames=("k", "max_candidates", "n_vec", "metric",
+                                   "use_kernel", "interpret", "block_s"))
+def filter_first_local_batch(
+    vectors: tuple,  # tuple of (n, d_i)
+    scalars: jax.Array,
+    pred_b: PredicateLike,  # stacked, leading axis B
+    query_vectors_b: tuple,  # tuple of (B, d_i)
+    weights_b: jax.Array,  # (B, n_vec)
+    *,
+    k: int,
+    max_candidates: int,
+    n_vec: int,
+    metric: str = "dot",
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    block_s: int = 256,
+):
+    """Candidate-local batched ``filter_first``: evaluate the predicate over
+    all rows per query, then ONE fused gather+score+top-k
+    (``kernels.gather_score``) over only the ≤ ``max_candidates`` qualifying
+    rows — no dense (B, n) score matrix. Returns (ids (B, k), scores (B, k),
+    n_scored (B,), n_qualified (B,)); the candidates are pre-qualified, so
+    the fused kernel skips re-masking."""
+    from repro.kernels.gather_score import gather_score_topk
+
+    mask_b = jax.vmap(lambda p: eval_mask(p, scalars))(pred_b)  # (B, n)
+    rows_b = jax.vmap(
+        lambda m: jnp.nonzero(m, size=max_candidates, fill_value=-1)[0]
+    )(mask_b)
+    cand = rows_b.astype(jnp.int32)
+    ids, scores, _ = gather_score_topk(
+        cand, tuple(vectors[:n_vec]), tuple(query_vectors_b[:n_vec]),
+        weights_b, scalars, None, k=k, metric=metric, use_kernel=use_kernel,
+        interpret=interpret, block_s=block_s)
+    return ids, scores, jnp.sum(cand >= 0, axis=1), jnp.sum(mask_b, axis=1)
+
+
 @partial(jax.jit, static_argnames=("k", "n_vec", "metric"))
 def masked_scan(
     vectors: tuple,

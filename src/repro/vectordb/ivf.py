@@ -140,6 +140,26 @@ def _candidate_slots(index: IVFIndex, probe_clusters: jax.Array, max_scan: int):
     return index.sorted_rows[gather_pos], valid
 
 
+def probe_scan_budget(n_clusters: int, n_rows: int, *, nprobe: int,
+                      probe_k: int) -> int:
+    """Candidate budget of one neighborhood pre-probe: ``nprobe`` clusters
+    at ~4× the mean cluster size, floored at ``4·probe_k`` and capped at
+    the table. Shared by ``preprobe``/``preprobe_scored`` and the planner's
+    scan-cost estimate (``BoomHQ._plan_local``), so the dense-vs-local
+    planning decision can never drift from what the probe gathers."""
+    return min(n_rows,
+               max(probe_k * 4, (nprobe * 4 * n_rows) // max(1, n_clusters)))
+
+
+def probe_slots(index: IVFIndex, q: jax.Array, *, nprobe: int, max_scan: int):
+    """Probe the ``nprobe`` closest clusters and map their rows onto
+    ``max_scan`` static candidate slots. -> (rows (max_scan,), valid
+    (max_scan,)) — the shared slot selection of every search variant."""
+    csim = similarity(q, index.centroids, index.metric)
+    _, probe_clusters = jax.lax.top_k(csim, nprobe)
+    return _candidate_slots(index, probe_clusters, max_scan)
+
+
 @partial(jax.jit, static_argnames=("nprobe", "max_scan", "k"))
 def search(
     index: IVFIndex,
@@ -157,9 +177,7 @@ def search(
     Returns (ids (k,), scores (k,), n_scored (), n_qualified ()). Unfilled
     result slots carry id -1 / score NEG.
     """
-    csim = similarity(q, index.centroids, index.metric)
-    _, probe_clusters = jax.lax.top_k(csim, nprobe)
-    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    rows, valid = probe_slots(index, q, nprobe=nprobe, max_scan=max_scan)
     cand_vecs = vectors[rows]
     cand_scal = scalars[rows]
     scores = similarity(q, cand_vecs, index.metric)
@@ -190,9 +208,7 @@ def search_scored(
     match ``search`` up to float reduction order (GEMM vs gathered matvec).
     Re-probing at a larger nprobe reuses the same ``row_scores``.
     """
-    csim = similarity(q, index.centroids, index.metric)
-    _, probe_clusters = jax.lax.top_k(csim, nprobe)
-    rows, valid = _candidate_slots(index, probe_clusters, max_scan)
+    rows, valid = probe_slots(index, q, nprobe=nprobe, max_scan=max_scan)
     scores = row_scores[rows]
     qual = eval_mask(pred, scalars[rows]) & valid
     masked = jnp.where(qual, scores, NEG)
@@ -219,9 +235,9 @@ def preprobe(
     """
     csim = similarity(q, index.centroids, index.metric)
     _, probe_clusters = jax.lax.top_k(csim, nprobe)
-    # bound the probe scan: nprobe * expected cluster size * 4
     n = vectors.shape[0]
-    max_scan = min(n, max(probe_k * 4, (nprobe * 4 * n) // max(1, index.n_clusters)))
+    max_scan = probe_scan_budget(index.n_clusters, n, nprobe=nprobe,
+                                 probe_k=probe_k)
     rows, valid = _candidate_slots(index, probe_clusters, max_scan)
     scores = jnp.where(valid, similarity(q, vectors[rows], index.metric), NEG)
     return _probe_stats(scores, rows, scalars, pred, probe_k)
@@ -255,7 +271,49 @@ def preprobe_scored(
     csim = similarity(q, index.centroids, index.metric)
     _, probe_clusters = jax.lax.top_k(csim, nprobe)
     n = row_scores.shape[0]
-    max_scan = min(n, max(probe_k * 4, (nprobe * 4 * n) // max(1, index.n_clusters)))
+    max_scan = probe_scan_budget(index.n_clusters, n, nprobe=nprobe,
+                                 probe_k=probe_k)
     rows, valid = _candidate_slots(index, probe_clusters, max_scan)
     scores = jnp.where(valid, row_scores[rows], NEG)
     return _probe_stats(scores, rows, scalars, pred, probe_k)
+
+
+# ---------------------------------------------------------------------------
+# candidate-local batched search (no dense score matrix)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("nprobe", "max_scan", "k", "use_kernel",
+                                   "interpret", "block_s"))
+def search_local_batch(
+    index: IVFIndex,
+    vectors: jax.Array,  # (n, d) the indexed column
+    scalars: jax.Array,  # (n, M)
+    pred_b: PredicateLike,  # stacked, leading axis B
+    q_b: jax.Array,  # (B, d)
+    *,
+    nprobe: int,
+    max_scan: int,
+    k: int,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    block_s: int = 256,
+):
+    """Candidate-local batched variant of ``search_scored``: no dense (B, n)
+    score matrix is ever built. Candidate slots are selected per query (the
+    cheap part) and ONE fused gather+score+mask+top-k
+    (``kernels.gather_score``) touches only those ``B·max_scan`` rows —
+    the path the dispatcher picks once ``B·max_scan / n_rows`` drops below
+    the crossover. Returns (ids (B, k), scores (B, k), n_scored (B,),
+    n_qualified (B,)); ties break by smaller row id (``search`` breaks by
+    candidate-slot order, so near-exact ties may order differently)."""
+    from repro.kernels.gather_score import gather_score_topk
+
+    rows_b, valid_b = jax.vmap(
+        lambda q: probe_slots(index, q, nprobe=nprobe, max_scan=max_scan))(q_b)
+    cand = jnp.where(valid_b, rows_b, -1).astype(jnp.int32)
+    w = jnp.ones((q_b.shape[0], 1), jnp.float32)
+    ids, scores, n_qual = gather_score_topk(
+        cand, (vectors,), (q_b,), w, scalars, pred_b, k=k,
+        metric=index.metric, use_kernel=use_kernel, interpret=interpret,
+        block_s=block_s)
+    return ids, scores, jnp.sum(valid_b, axis=1), n_qual

@@ -225,15 +225,20 @@ def test_three_way_parity_property(exec_setup, seed):
 def test_sharded_executor_mesh_wiring(exec_setup):
     """A bound 1-device mesh routes through the shard_map kernel and must
     reproduce the logical-shard reference bit-for-bit (the multi-device
-    equivalence runs in tests/test_distributed.py's subprocess)."""
+    equivalence runs in tests/test_distributed.py's subprocess). The
+    logical executor pins the dense path — the mesh side is always dense,
+    and bit-parity is only defined against the same scoring path."""
     import jax
     from jax.sharding import Mesh
+
+    from repro.serve.batch import DENSE, CostModel
 
     t, _, bx = exec_setup
     wl = _mixed_wl(t, 77)
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     bx_mesh = BatchedHybridExecutor(t, bx.indexes, bx.engine, mesh=mesh)
-    bx_log = BatchedHybridExecutor(t, bx.indexes, bx.engine, n_shards=1)
+    bx_log = BatchedHybridExecutor(t, bx.indexes, bx.engine, n_shards=1,
+                                   cost_model=CostModel(force=DENSE))
     res_m = bx_mesh.execute_batch_sharded(wl)
     res_l = bx_log.execute_batch_sharded(wl)
     for (im, sm), (il, sl) in zip(res_m, res_l):
@@ -253,6 +258,129 @@ def test_batched_executor_single_index_group(exec_setup):
     for q, (ids_b, scores_b) in zip(wl, batched):
         ids_s, scores_s = seq.execute(q, plan)
         assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
+# ---------------------------------------------------------------------------
+# scoring dispatcher: cost-model routing, decision log, per-group crossover
+# ---------------------------------------------------------------------------
+
+def test_cost_model_choose():
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    cm = CostModel(crossover=1.0)
+    assert cm.choose(batch=4, scan=100, n_rows=1000) == CANDIDATE_LOCAL
+    assert cm.choose(batch=32, scan=100, n_rows=1000) == DENSE
+    assert CostModel(crossover=4.0).choose(
+        batch=32, scan=100, n_rows=1000) == CANDIDATE_LOCAL
+    for force in (DENSE, CANDIDATE_LOCAL):
+        assert CostModel(force=force).choose(
+            batch=1, scan=1, n_rows=10**9) == force
+
+
+def test_dispatcher_forced_paths_parity(exec_setup):
+    """The two scoring paths forced via a fake cost model must produce the
+    same results (float-tie tolerant) on the same workload, and every
+    recorded decision must carry the forced path."""
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    t, seq, bx = exec_setup
+    wl = queries.gen_workload(t, 8, n_vec_used=2, seed=91) + \
+        queries.gen_dnf_workload(t, 4, n_vec_used=2, seed=92,
+                                 clause_counts=(2, 4))
+    grid = candidate_plans(2, weights=(0.8, 0.2)) + [default_plan(2)]
+    plans = [grid[j % len(grid)] for j in range(len(wl))]
+    results = {}
+    for force in (DENSE, CANDIDATE_LOCAL):
+        bxf = BatchedHybridExecutor(t, bx.indexes, bx.engine,
+                                    cost_model=CostModel(force=force))
+        results[force] = bxf.execute_batch(wl, plans)
+        counts, decisions = bxf.dispatcher.take()
+        assert set(counts) == {force}
+        assert decisions and all(d["path"] == force for d in decisions)
+    for (ids_d, s_d), (ids_l, s_l) in zip(results[DENSE],
+                                          results[CANDIDATE_LOCAL]):
+        assert_results_match(ids_d, s_d, ids_l, s_l)
+
+
+def test_dispatcher_crossover_honored_per_group(exec_setup):
+    """One batch, two groups with different candidate budgets: the small
+    budget clears the crossover (candidate-local) while the full-table
+    filter_first group does not (dense) — in the SAME execute_batch call.
+    The threshold is per group, never batch-global."""
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    t, seq, bx = exec_setup
+    wl = queries.gen_workload(t, 8, n_vec_used=2, seed=93)
+    small = ExecutionPlan(
+        "index_scan",
+        tuple(SubqueryParams(k_mult=2, nprobe=8, max_scan=64,
+                             iterative=False) for _ in range(2)))
+    full = ExecutionPlan(
+        "filter_first", tuple(SubqueryParams() for _ in range(2)),
+        max_candidates=t.n_rows)
+    plans = [small, small, small, small, full, full, full, full]
+    cm = CostModel(crossover=1.0)
+    # ix group budget is per active column ((64+64)/2): 4·64 <= 1500 ->
+    # candidate-local; the full-table ff group: 4·1500 > 1500 -> dense
+    assert cm.choose(batch=4, scan=64, n_rows=t.n_rows) == CANDIDATE_LOCAL
+    assert cm.choose(batch=4, scan=t.n_rows, n_rows=t.n_rows) == DENSE
+    bxc = BatchedHybridExecutor(t, bx.indexes, bx.engine, cost_model=cm)
+    results = bxc.execute_batch(wl, plans)
+    counts, decisions = bxc.dispatcher.take()
+    by_group = {d["group"][0]: d["path"] for d in decisions}
+    assert by_group == {"ix": CANDIDATE_LOCAL, "ff": DENSE}
+    assert counts == {CANDIDATE_LOCAL: 1, DENSE: 1}
+    # every decision re-derives from the cost model inputs it logged
+    for d in decisions:
+        assert d["path"] == cm.choose(batch=d["batch"], scan=d["scan"],
+                                      n_rows=t.n_rows)
+    # and both groups' results still match the sequential executor
+    for q, p, (ids_b, scores_b) in zip(wl, plans, results):
+        ids_s, scores_s = seq.execute(q, p)
+        assert_results_match(ids_s, scores_s, ids_b, scores_b)
+
+
+def test_dispatcher_sharded_chunks_route_and_match(exec_setup):
+    """execute_batch_sharded routes through the dispatcher too: forcing
+    each path must leave the decision log with that path and produce the
+    same (exact) results."""
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    t, _, bx = exec_setup
+    wl = _mixed_wl(t, 95)
+    results = {}
+    for force in (DENSE, CANDIDATE_LOCAL):
+        bxf = BatchedHybridExecutor(t, bx.indexes, bx.engine, n_shards=3,
+                                    cost_model=CostModel(force=force))
+        results[force] = bxf.execute_batch_sharded(wl)
+        counts, decisions = bxf.dispatcher.take()
+        assert set(counts) == {force}
+        assert all(d["group"][0] == "sharded" for d in decisions)
+    for (ids_d, s_d), (ids_l, s_l) in zip(results[DENSE],
+                                          results[CANDIDATE_LOCAL]):
+        assert_results_match(ids_d, s_d, ids_l, s_l)
+
+
+def test_serve_report_records_path_counts():
+    """ServeReport surfaces the dispatcher's per-group path counts and
+    describe() renders them; bind_cost_model forces the path end-to-end."""
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    table = datasets.make("part", rows=1200, seed=2)
+    wl = queries.gen_workload(table, 8, n_vec_used=2, seed=21)
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=8, use_de=False,
+        rewriter=RewriterConfig(steps=10, refine_columns=False)))
+    try:
+        for force in (CANDIDATE_LOCAL, DENSE):
+            bq.bind_cost_model(CostModel(force=force))
+            engine = ServingEngine(bq, batch_size=4)
+            engine.warmup(wl)
+            _, rep = engine.serve(wl)
+            assert rep.path_counts and set(rep.path_counts) == {force}
+            assert f"paths {force}" in rep.describe()
+    finally:
+        bq.bind_cost_model()
 
 
 # ---------------------------------------------------------------------------

@@ -29,13 +29,14 @@ def _case(n, d, m, seed, sel):
        sel=st.floats(0.05, 1.0), seed=st.integers(0, 10_000))
 def test_masked_topk_matches_oracle(n, d, m, k, block, metric, sel, seed):
     q, vecs, scal, lo, hi, act = _case(n, d, m, seed, sel)
-    s1, i1 = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k,
-                             block_rows=block, metric=metric)
+    s1, i1, v1 = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k,
+                                 block_rows=block, metric=metric)
     s2, i2 = ref.masked_topk_ref(q, vecs, scal, lo, hi, act, n, k=k,
                                  metric=metric)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                atol=1e-3, rtol=1e-4)
     assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    assert np.array_equal(np.asarray(v1), np.asarray(i2) >= 0)
 
 
 @settings(max_examples=8, deadline=None)
@@ -45,8 +46,8 @@ def test_masked_topk_matches_oracle(n, d, m, k, block, metric, sel, seed):
 def test_int8_scan_matches_oracle(n, d, k, block, seed):
     q, vecs, scal, lo, hi, act = _case(n, d, 2, seed, 0.5)
     qv, sc = ops.quantize_rows(vecs)
-    s1, i1 = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k,
-                                  block_rows=block)
+    s1, i1, _ = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k,
+                                     block_rows=block)
     s2, i2 = ref.int8_topk_ref(q, qv, sc, scal, lo, hi, act, n, k=k)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
                                atol=1e-3, rtol=1e-4)
@@ -65,7 +66,7 @@ def test_int8_quantization_recall():
     for s in range(5):
         q = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
         qv, sc = ops.quantize_rows(vecs)
-        _, i_q = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=10)
+        _, i_q, _ = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=10)
         _, i_f = ref.masked_topk_ref(q, vecs, scal, lo, hi, act, 5000, k=10)
         recs.append(len(set(map(int, np.asarray(i_q)))
                         & set(map(int, np.asarray(i_f)))) / 10)
@@ -77,5 +78,37 @@ def test_empty_result_when_nothing_qualifies():
     lo = jnp.asarray([100.0, -np.inf], jnp.float32)  # impossible range
     hi = jnp.asarray([200.0, np.inf], jnp.float32)
     act = jnp.asarray([True, False])
-    s, i = ops.masked_topk(q, vecs, scal, lo, hi, act, k=5)
+    s, i, v = ops.masked_topk(q, vecs, scal, lo, hi, act, k=5)
     assert (np.asarray(i) == -1).all()
+    assert not np.asarray(v).any()
+
+
+def test_underfilled_blocks_no_phantom_ids():
+    """Fewer than k qualifying rows across MANY blocks: the cross-block
+    merge sees (nb·k) pool slots of which only a handful are real, and its
+    ``lax.top_k`` pulls NEG-score padding slots into the result. Those must
+    surface as valid=False / id -1 / score NEG — never as phantom rows —
+    and the real rows must all be present and flagged valid."""
+    rng = np.random.default_rng(7)
+    n, d, k = 400, 16, 8
+    vecs = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    scal = jnp.asarray(rng.uniform(0, 10, (n, 1)), jnp.float32)
+    # exactly 3 qualifying rows, spread across different 64-row blocks
+    qual_rows = [5, 130, 333]
+    scal = scal.at[jnp.asarray(qual_rows), 0].set(50.0)
+    lo = jnp.asarray([49.0], jnp.float32)
+    hi = jnp.asarray([51.0], jnp.float32)
+    act = jnp.asarray([True])
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    s, i, v = ops.masked_topk(q, vecs, scal, lo, hi, act, k=k, block_rows=64)
+    s, i, v = np.asarray(s), np.asarray(i), np.asarray(v)
+    assert v.sum() == len(qual_rows)
+    assert set(i[v].tolist()) == set(qual_rows)
+    assert (i[~v] == -1).all()
+    assert (s[~v] <= ops.NEG / 2).all()
+    # same contract on the quantized path
+    qv, sc = ops.quantize_rows(vecs)
+    s8, i8, v8 = ops.int8_masked_topk(q, qv, sc, scal, lo, hi, act, k=k,
+                                      block_rows=64)
+    assert np.asarray(v8).sum() == len(qual_rows)
+    assert set(np.asarray(i8)[np.asarray(v8)].tolist()) == set(qual_rows)

@@ -149,6 +149,48 @@ def test_cross_shard_executor_oracle_exactness(tiny_table):
             assert _oracle_recall(t, q, ids) == 1.0
 
 
+@pytest.mark.slow
+def test_both_scoring_paths_recall_floor(fitted):
+    """Acceptance: BOTH dispatcher scoring paths — dense GEMM and the
+    candidate-local fused gather+score — clear the oracle recall floor on
+    the fitted fixture end-to-end (learned plans + escalation), and the
+    candidate-local mean tracks the dense mean."""
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
+
+    bq, test = fitted
+    means = {}
+    try:
+        for force in (DENSE, CANDIDATE_LOCAL):
+            bq.bind_cost_model(CostModel(force=force))
+            results = bq.execute_batch(test)
+            recs = [_oracle_recall(bq.table, q, ids)
+                    for q, (ids, _) in zip(test, results)]
+            assert float(np.mean(recs)) >= FLOOR, (force, recs)
+            means[force] = float(np.mean(recs))
+    finally:
+        bq.bind_cost_model()  # restore the shared fixture
+    assert abs(means[CANDIDATE_LOCAL] - means[DENSE]) <= 0.02, means
+
+
+def test_candidate_local_generous_budget_is_exact(tiny_table):
+    """Candidate-local filter_first with an uncapped gather is the exact
+    filtered top-k according to the independent oracle — the same bar the
+    dense escalation plan is held to."""
+    from repro.serve.batch import CANDIDATE_LOCAL, CostModel
+    from repro.serve.batch import BatchedHybridExecutor as BX
+
+    t = tiny_table
+    idx = [ivf.build(v, 16, seed=i, metric=t.schema.metric)
+           for i, v in enumerate(t.vectors)]
+    bx = BX(t, idx, cost_model=CostModel(force=CANDIDATE_LOCAL))
+    wl = _mixed_workload(t, n_conj=3, n_dnf=3, seed=59)
+    plans = [ExecutionPlan(
+        "filter_first", tuple(SubqueryParams() for _ in range(q.n_vec)),
+        max_candidates=t.n_rows) for q in wl]
+    for q, (ids, _) in zip(wl, bx.execute_batch(wl, plans)):
+        assert _oracle_recall(t, q, ids) == 1.0
+
+
 def test_escalation_plan_is_exact(tiny_table):
     """The sharded underfill-escalation cross-check (filter_first with an
     uncapped gather) must itself be oracle-exact."""
