@@ -96,6 +96,91 @@ def crossover_sweep(n: int = 60_000, d: int = 128, b: int = 32, m: int = 3,
     return rows
 
 
+def measured_overhead_rows(rows: list[dict], *, scan: int, n_rows: int,
+                           crossover: float = 0.136) -> float:
+    """``CostModel.overhead`` from an affine fit of the candidate-local
+    per-batch times: ``t(B) = OH_ms + slope·B`` (slope = per-gathered-row
+    cost × scan). Dividing the fixed intercept by the per-row cost converts
+    it to the gathered-row units the decision inequality
+    ``B·scan + overhead <= crossover·n`` uses. The fit is then clamped so
+    every MEASURED winner keeps winning under the final constants — near
+    the boundary the decisions, not the noisy intercept, are the ground
+    truth."""
+    bs = np.asarray([r["batch"] for r in rows], np.float64)
+    ts = np.asarray([r["local_ms"] for r in rows], np.float64)
+    slope, oh_ms = np.polyfit(bs, ts, 1)
+    per_row_ms = max(slope, 1e-9) / scan
+    oh = float(max(0.0, oh_ms) / per_row_ms)
+    wins = [crossover * n_rows - r["batch"] * r["scan"]
+            for r in rows if r["local_wins"]]
+    if wins:
+        oh = min(oh, max(0.0, min(wins)))
+    return round(oh)
+
+
+def overhead_sweep(n: int = 500_000, k: int = 10, scan: int = 2048,
+                   nprobe: int = 16, k_mult: int = 4,
+                   batches=(4, 8, 16, 32), dataset: str = "sift",
+                   seed: int = 0) -> dict:
+    """Calibrate the candidate-local path's FIXED per-batch overhead
+    END-TO-END: drive the real batched executor (fixed legalized plan,
+    each scoring path forced) across batch sizes.
+
+    The fixed costs the model must capture — per-query probe slot
+    selection, group dispatch, iterative re-expansion host syncs — live in
+    the serving path, NOT in the fused kernel alone, so the calibration
+    times whole executor batches per batch size, fits the affine
+    ``t(B) = OH + slope·B`` and converts the intercept to gathered-row
+    units:
+
+        candidate-local wins  iff  B·scan + overhead <= crossover·n
+
+    This is the term that closes the ROADMAP's small-batch mispredict:
+    without it ``B·scan`` shrinks with the batch while the fixed cost does
+    not, so the model sent every near-boundary tiny batch candidate-local.
+    The dense column is measured alongside as the ground truth the
+    calibrated decisions are checked against."""
+    from repro.bench import datasets, queries
+    from repro.core.query import ExecutionPlan, SubqueryParams
+    from repro.serve.batch import (
+        BatchedHybridExecutor, CANDIDATE_LOCAL, DENSE, CostModel,
+    )
+    from repro.vectordb import ivf as _ivf
+
+    table = datasets.make(dataset, rows=n, seed=seed)
+    n_vec = table.schema.n_vec
+    nc = max(64, min(512, table.n_rows // 2000))
+    idx = [_ivf.build(v, nc, seed=i, metric=table.schema.metric)
+           for i, v in enumerate(table.vectors)]
+    plan = ExecutionPlan("index_scan", tuple(
+        SubqueryParams(k_mult=k_mult, nprobe=nprobe, max_scan=scan,
+                       iterative=True) for _ in range(n_vec)))
+    rows = []
+    for b in batches:
+        wl = queries.gen_workload(table, b, n_vec_used=min(2, n_vec),
+                                  seed=seed + 100)
+        plans = [plan] * len(wl)
+        row = {"batch": b, "scan": scan}
+        for label, force in (("dense", DENSE), ("local", CANDIDATE_LOCAL)):
+            bx = BatchedHybridExecutor(table, idx,
+                                       cost_model=CostModel(force=force))
+            bx.execute_batch(wl, plans)  # warm the jit caches
+            reps = 3
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                bx.execute_batch(wl, plans)
+            row[f"{label}_ms"] = round(
+                (time.perf_counter() - t0) / reps * 1e3, 1)
+        row["local_wins"] = row["local_ms"] < row["dense_ms"]
+        rows.append(row)
+        print(f"  overhead sweep B={b} scan={scan}: dense {row['dense_ms']}ms"
+              f" vs local {row['local_ms']}ms -> "
+              f"{'local' if row['local_wins'] else 'dense'}")
+    oh = measured_overhead_rows(rows, scan=scan, n_rows=table.n_rows)
+    print(f"  calibrated CostModel.overhead ≈ {oh:.0f} gathered rows")
+    return {"n_rows": table.n_rows, "table": rows, "overhead_rows": oh}
+
+
 def measured_crossover(rows: list[dict]) -> float:
     """Largest measured work ratio at which candidate-local still wins
     (log-interpolated between the last winning and first losing sweep
@@ -153,6 +238,10 @@ def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
 
 
 if __name__ == "__main__":
-    # standalone run = the calibration figure: the 60k-row sweep the
-    # CostModel default is measured on (benchmarks.run keeps its smaller n)
+    # standalone run = the calibration figures: the 60k-row crossover sweep
+    # plus the 500k-row end-to-end per-batch overhead boundary the
+    # CostModel defaults are measured on (benchmarks.run keeps its smaller
+    # n and skips the overhead sweep — it needs the big table to be
+    # meaningful)
     run(n=60_000)
+    overhead_sweep(n=500_000)

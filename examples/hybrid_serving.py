@@ -91,16 +91,22 @@ def main():
     # `python -m benchmarks.serving --crossover`); `bind_cost_model`
     # overrides it — move the threshold, or pin every group to one path.
     # ServeReport.path_counts / describe() show what served the traffic.
-    from repro.serve.batch import CANDIDATE_LOCAL, CostModel
+    from repro.serve.batch import CANDIDATE_LOCAL, DENSE, CostModel
     bq.bind_cost_model(CostModel(force=CANDIDATE_LOCAL))
     _, rep_local = engine.serve(reqs2, gt_ids=gts2)
     print(f"  [candidate-local forced] {rep_local.describe()}")
     bq.bind_cost_model()  # restore the calibrated crossover
 
     # -- live traffic: async deadline-aware serving over a sharded table --
+    # Deadline-critical serving pins the EXACT sharded scan: one kernel
+    # shape per (clause bucket, k) keeps mid-stream jit compiles out of
+    # the latency budget. (The default cost model would plan each batch
+    # and route per group — richer, but its plan-keyed group shapes can
+    # cold-compile mid-stream; the learned sharded route is demonstrated
+    # on the batch engine below, where no deadline is at stake.)
     n_shards = 3  # 6600 post-insert rows -> three 2200-row shards
     assert bq.table.n_rows % n_shards == 0
-    bq.bind_shards(n_shards)
+    bq.bind_shards(n_shards).bind_cost_model(CostModel(force=DENSE))
     live = queries.gen_workload(bq.table, 36, n_vec_used=2, seed=5)
     warm_bucket_ladder(bq.execute_batch, live, batch_size=12)
     rng = np.random.default_rng(6)
@@ -112,6 +118,27 @@ def main():
     rep3 = aeng.report(gt_ids=gts)
     print(f"  [async, {n_shards} shards] {rep3.describe()}")
     assert rep3.n_timed_out == 0, "deadline budget was generous"
+
+    # -- the sharded-IVF LEARNED path -------------------------------------
+    # With shards bound, index-strategy groups are cost-model routed three
+    # ways: plan-driven per-shard IVF probing (each shard probes its OWN
+    # index with the learned plan's shard-legalized nprobe/max_scan and
+    # reranks candidate-locally inside the shard — the learned knobs stay
+    # operative at the scale where the dense GEMM becomes the wall), the
+    # exact per-shard dense scan, or single-device when shards are too
+    # small to amortize the O(shards·k) merge. This table IS that small,
+    # so the default model routes single-device; forcing SHARDED_LOCAL
+    # demonstrates the probing fan-out (per-shard underfill escalation
+    # keeps the recall contract). ServeReport.path_counts shows the route.
+    from repro.serve.batch import SHARDED_LOCAL
+    gt_live = ground_truths(bq.table, live)
+    bq.bind_cost_model(CostModel(force=SHARDED_LOCAL))
+    seng = ServingEngine(bq, batch_size=12)
+    seng.warmup(live)
+    _, rep4 = seng.serve(live, gt_ids=gt_live)
+    print(f"  [sharded-IVF learned, {n_shards} shards] {rep4.describe()}")
+    assert rep4.path_counts and "sharded_local" in rep4.path_counts
+    bq.bind_cost_model()  # restore the calibrated three-way routing
 
 
 if __name__ == "__main__":

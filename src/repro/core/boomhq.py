@@ -359,10 +359,17 @@ class BoomHQ:
 
     def bind_shards(self, n_shards: int = 1, *, mesh=None,
                     shard_axes=("data",)) -> "BoomHQ":
-        """Serve over a SHARDED table: subsequent ``execute_batch`` calls fan
-        each formed batch out over contiguous table shards (per-shard mask +
-        local top-k over the dense score matrices, one O(shards·k) merge —
-        ``serve.batch.BatchedHybridExecutor.execute_batch_sharded``). With a
+        """Serve over a SHARDED table: subsequent ``execute_batch`` calls
+        plan the batch with the learned optimizer and fan each execution
+        group out over contiguous table shards
+        (``serve.batch.BatchedHybridExecutor.execute_batch_sharded``).
+        Index-strategy groups are cost-model routed three ways: plan-driven
+        per-shard IVF probing (each shard probes its own ``ShardedIVF``
+        with the group's shard-legalized knobs and reranks candidate-
+        locally inside the shard — the learned nprobe/max_scan finally
+        operative at shard scale), the exact per-shard dense scan, or the
+        plain single-device path when shards are too small to amortize the
+        fan-out; filter_first groups keep the exact sharded scan. With a
         ``mesh`` the fan-out runs under shard_map over its data axes;
         without one, logical shards on the local device keep identical
         semantics. ``bind_shards()`` (defaults) restores single-shard
@@ -391,11 +398,13 @@ class BoomHQ:
         the whole batch, grouped vmapped execution, then one batched
         underfill-escalation pass. Returns [(ids, scores)] per query.
 
-        Over a sharded table (``bind_shards``) execution instead fans out
-        per clause-bucket group across the shards; the plans' probing knobs
-        are moot there (the dense GEMMs already scored every row, so each
-        shard's exact scan IS the optimal plan) and escalation degenerates
-        to the cross-check pass of ``_execute_batch_sharded``."""
+        Over a sharded table (``bind_shards``) execution instead fans the
+        learned plans out across the shards: each index-strategy group is
+        cost-model routed to per-shard IVF probing (the plans' knobs drive
+        each shard's own index), the exact per-shard dense scan, or the
+        single-device path, with per-shard underfill escalation inside the
+        probing route and the global cross-check of
+        ``_execute_batch_sharded`` on top."""
         if not queries:
             return []
         from repro.serve.batch import (
@@ -440,16 +449,21 @@ class BoomHQ:
 
     def _execute_batch_sharded(self, queries: list[MHQ], bx,
                                scores_b: tuple) -> list:
-        """Cross-shard execution + per-shard-group underfill escalation.
+        """Plan-driven cross-shard execution + underfill escalation.
 
-        The sharded scan is exact over the dense scores, so a query that
-        underfills k can only have fewer than k qualifying rows. The
-        escalation pass cross-checks exactly that: the underfilled subset
-        re-runs through the single-shard exact filter-first (one extra
-        grouped pass over only that subset, reusing the same score rows)
-        and the better-filled result wins — a cheap guard against shard
-        padding/merge artifacts that otherwise would go unnoticed."""
-        results = bx.execute_batch_sharded(queries, scores_b=scores_b)
+        The batch is planned by the learned optimizer exactly like the
+        single-shard path, then fanned out: the executor routes every
+        index-strategy group through the cost model (per-shard IVF probing
+        / exact per-shard dense scan / single-device), with PER-SHARD
+        underfill escalation inside the probing path (exact retry only on
+        the underfilled shard-subset). This global cross-check remains on
+        top: any query still returning fewer than k valid ids re-runs
+        through the single-shard exact filter-first (one extra grouped pass
+        over only that subset) and the better-filled result wins — the
+        same recall contract the single-shard learned path keeps."""
+        plans = self.optimize_batch(queries, scores_b=scores_b)
+        results = bx.execute_batch_sharded(queries, plans,
+                                           scores_b=scores_b)
         under = [j for j, (ids, _) in enumerate(results)
                  if _n_valid(ids) < queries[j].k]
         if under:
@@ -475,7 +489,7 @@ class BoomHQ:
                 self.table, self.indexes, self.engine,
                 n_shards=self.n_shards, mesh=self.shard_mesh,
                 shard_axes=getattr(self, "shard_axes", ("data",)),
-                cost_model=self.cost_model)
+                cost_model=self.cost_model, hists=self.hists)
         return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):

@@ -88,6 +88,22 @@ def rerank_scored(row_scores, rows, *, k, total):
     return _dedup_topk(rows, score, k=k, total=total)
 
 
+def legalize_for_shard(k_i: int, nprobe: int, max_scan: int, *,
+                       n_shards: int, shard_len: int,
+                       n_clusters: int) -> tuple[int, int, int]:
+    """Split one subquery's GLOBAL probing budget across ``n_shards``.
+
+    The learned plan's knobs describe a whole-table search; under the
+    per-shard IVF path every shard probes its own (smaller) index, so the
+    scan budget is divided across shards (ceil, floored at the per-shard
+    candidate count so a shard can always fill its slice of the merge) and
+    nprobe is clamped to the per-shard cluster count. Returns the per-shard
+    ``(k_i, nprobe, max_scan)`` — all static, so they join the group key and
+    the jit cache stays bounded the same way the single-device grids do."""
+    ms = min(shard_len, max(1, min(k_i, shard_len), -(-max_scan // n_shards)))
+    return min(k_i, ms), max(1, min(nprobe, n_clusters)), ms
+
+
 def plan_columns(q: MHQ, plan: ExecutionPlan) -> tuple:
     """Vector columns a plan actually searches (shared by the sequential and
     batched executors so candidate generation can never drift)."""

@@ -46,13 +46,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import (
-    EngineCaps, HybridExecutor, PGVECTOR, plan_columns, recall_at_k,
-    rerank_scored,
+    EngineCaps, HybridExecutor, PGVECTOR, legalize_for_shard, plan_columns,
+    recall_at_k, rerank_scored,
 )
 from repro.core.query import ExecutionPlan, MHQ
-from repro.kernels.gather_score import gather_score_topk
-from repro.vectordb import flat, ivf, predicates
-from repro.vectordb.distributed import sharded_batch_topk, sharded_topk_ref
+from repro.kernels.gather_score import gather_score_topk, merge_topk_unique
+from repro.vectordb import flat, histogram, ivf, predicates
+from repro.vectordb.distributed import (
+    build_sharded_ivf, sharded_batch_topk, sharded_ivf_topk, sharded_topk_ref,
+)
 from repro.vectordb.predicates import eval_mask
 from repro.vectordb.table import Table
 
@@ -65,35 +67,78 @@ MAX_BATCH_KERNEL = 64  # widest vmapped execution kernel
 # scoring paths the per-group dispatcher chooses between
 DENSE = "dense"
 CANDIDATE_LOCAL = "candidate_local"
+# sharded-group routes: plan-driven per-shard IVF probing, or no fan-out at
+# all (the group runs the plain single-device path when shards are too
+# small to amortize the merge)
+SHARDED_LOCAL = "sharded_local"
+SINGLE_DEVICE = "single_device"
+
+# histogram-estimated static gather caps (the sharded candidate-local path):
+# cap = next_bucket(margin · estimated_max + slack), with overflow
+# escalation re-running only the queries whose true count exceeds the cap
+CAP_MARGIN = 1.5
+CAP_SLACK = 32
 
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """Dense-vs-candidate-local crossover model.
+    """Scoring-path cost model: dense vs candidate-local, plus the sharded
+    three-way route.
 
     The dense path runs one GEMM over ALL rows per vector column and group
-    chunk — per-query cost ∝ ``n_rows``. The candidate-local path gathers
-    and scores only each query's legalized candidate budget — group cost
-    ∝ ``batch · scan``. Candidate-local wins when
+    chunk — per-batch cost ∝ ``n_rows``, and (measured) essentially
+    batch-size independent while B ≤ the chunk cap: the GEMM streams the
+    table once either way. The candidate-local path gathers and scores
+    only each query's legalized candidate budget, paying a FIXED per-batch
+    overhead (probe slot selection dispatch, kernel launch, re-expansion
+    host syncs) on top of the ``batch · scan`` gather work. Candidate-local
+    wins when
 
-        batch · scan  ≤  crossover · n_rows
+        batch · scan + overhead  ≤  crossover · n_rows
 
-    (the ROADMAP's ``B·max_scan / n_rows`` threshold). ``crossover`` is
-    calibrated by the sweep in ``benchmarks/kernels_bench.py`` /
-    ``benchmarks/serving.py --crossover``; the default is the measured
-    value on the CPU container — the random-row gather streams ~2× slower
-    than the GEMM's sequential table read, so candidate-local must touch
-    well under half the table's bytes to win; a TPU backend with the
-    Mosaic kernel should recalibrate upward. ``force`` pins every group to
-    one path (used by the benchmarks and the dispatcher tests)."""
+    The constant term is what closes the ROADMAP's small-batch mispredict:
+    without it the model sends every tiny batch candidate-local (B·scan
+    shrinks with B but the fixed cost does not). Both constants are
+    calibrated by ``benchmarks/kernels_bench.py`` (``crossover_sweep`` /
+    ``overhead_sweep``) and the defaults are the values measured on this
+    CPU container; a TPU backend with the Mosaic kernel should recalibrate
+    ``crossover`` upward and ``overhead`` downward.
+
+    ``choose_sharded`` adds the sharded three-way: groups over a sharded
+    table run plan-driven per-shard IVF probing (``SHARDED_LOCAL``) when
+    the same inequality holds at the global scale (the probe work is split
+    across shards but the fixed overhead is paid once per batch), the
+    exact per-shard dense scan otherwise — and skip the fan-out entirely
+    (``SINGLE_DEVICE``) when shards are smaller than ``min_shard_rows``,
+    where the O(shards·k) merge costs more than it saves.
+
+    ``force`` pins every group to one path (benchmarks and dispatcher
+    tests): dense-flavored forces pin dense, local-flavored forces pin the
+    context's local path."""
 
     crossover: float = 0.136
+    overhead: float = 2048.0  # per-batch fixed cost, in gathered-row units
+    min_shard_rows: int = 4096
     force: Optional[str] = None
 
     def choose(self, *, batch: int, scan: int, n_rows: int) -> str:
         if self.force is not None:
-            return self.force
-        return CANDIDATE_LOCAL if batch * scan <= self.crossover * n_rows \
+            return CANDIDATE_LOCAL \
+                if self.force in (CANDIDATE_LOCAL, SHARDED_LOCAL) else DENSE
+        if batch * scan + self.overhead <= self.crossover * n_rows:
+            return CANDIDATE_LOCAL
+        return DENSE
+
+    def choose_sharded(self, *, batch: int, scan: int, n_rows: int,
+                       n_shards: int) -> str:
+        if self.force is not None:
+            if self.force in (CANDIDATE_LOCAL, SHARDED_LOCAL):
+                return SHARDED_LOCAL
+            return self.force  # DENSE or SINGLE_DEVICE
+        if n_rows // max(1, n_shards) < self.min_shard_rows:
+            return SINGLE_DEVICE
+        return SHARDED_LOCAL if self.choose(
+            batch=batch, scan=scan, n_rows=n_rows) == CANDIDATE_LOCAL \
             else DENSE
 
 
@@ -136,6 +181,26 @@ class ScoringDispatcher:
         self.counts[path] = self.counts.get(path, 0) + 1
         return path
 
+    def choose_sharded(self, *, batch: int, scan: int, n_shards: int,
+                       group=None, prefer_dense: bool = False) -> str:
+        """Route one sharded plan-driven group: per-shard IVF probing,
+        exact per-shard dense scan, or no fan-out (single-device). A
+        ``SINGLE_DEVICE`` decision delegates to the plain chunk path,
+        which records its own inner dense/candidate-local decision. The
+        paid-for-GEMM rule applies here too: when the batch's dense score
+        matrices already exist, the exact sharded scan over them is
+        strictly cheaper than re-scoring candidates from raw vectors."""
+        if self.pins_dense(prefer_dense):
+            path = DENSE
+        else:
+            path = self.cost_model.choose_sharded(
+                batch=batch, scan=scan, n_rows=self.n_rows,
+                n_shards=n_shards)
+        self.decisions.append(
+            {"group": group, "batch": batch, "scan": scan, "path": path})
+        self.counts[path] = self.counts.get(path, 0) + 1
+        return path
+
     def take(self) -> tuple[dict, list]:
         """Return (counts, recent decisions) accumulated since the last
         take, and reset both."""
@@ -158,6 +223,15 @@ def pow2_at_most(n: int) -> int:
     while b * 2 <= n:
         b <<= 1
     return b
+
+
+def pad_selection(sel: np.ndarray) -> np.ndarray:
+    """Pad a (non-empty) query-index selection to its power-of-two bucket
+    by repeating the first element — the shared scaffolding of every
+    subset-retry path (escalation, overflow re-gather, re-expansion):
+    padding lanes compute a duplicate result that callers slice away."""
+    bb = next_bucket(len(sel))
+    return np.concatenate([sel, np.full(bb - len(sel), sel[0])])
 
 
 def warm_bucket_ladder(execute_batch, queries: list, batch_size: int) -> None:
@@ -236,6 +310,16 @@ def _eval_mask_batch(pred_b, scalars):
     return jax.vmap(lambda p: eval_mask(p, scalars))(pred_b)
 
 
+@jax.jit
+def _selectivity_batch(hists, pred_b):
+    """(B,) histogram selectivity estimates for a stacked predicate batch —
+    a tiny pure-stats computation (no table reads), so syncing it to size a
+    static gather cap costs microseconds, not a device round-trip through
+    the (B, n) mask kernel."""
+    return jax.vmap(
+        lambda p: histogram.estimate_selectivity(hists, p))(pred_b)
+
+
 @partial(jax.jit, static_argnames=("k", "metric"))
 def _gather_rerank_batch(rows_b, vectors, q_b, w_b, scalars, *, k, metric):
     """Candidate-local weighted re-rank: fused gather+score+dedup+top-k over
@@ -252,6 +336,36 @@ def _qualifying_rows_batch(mask_b, *, size):
     )(mask_b).astype(jnp.int32)
 
 
+NEG = -1e30
+
+
+@partial(jax.jit, static_argnames=("shard_len", "k", "metric"))
+def _sharded_exact_retry(vectors, scalars, pred_b, q_b, w_b, need_b, *,
+                         shard_len, k, metric):
+    """Exact weighted filtered top-k over each query's underfilled
+    shard-subset: dense scores for the retry subset (one GEMM per column),
+    the predicate mask ANDed with the per-query shard-allow mask (rows of
+    well-filled shards contribute nothing — their probed top-k stands),
+    then one top-k. Used when the escalated queries span most shards: one
+    batched retry beats a per-shard dispatch loop."""
+    from repro.vectordb.table import similarity
+
+    n = scalars.shape[0]
+    s_count = need_b.shape[1]
+    ws = jnp.zeros((w_b.shape[0], n), jnp.float32)
+    for i, v in enumerate(vectors):
+        ws = ws + w_b[:, i, None] * jax.vmap(
+            lambda q, vv=v: similarity(q, vv, metric))(q_b[i])
+    shard_of = jnp.minimum(jnp.arange(n, dtype=jnp.int32) // shard_len,
+                           s_count - 1)
+    allow = need_b[:, shard_of]
+    mask = jax.vmap(lambda p: eval_mask(p, scalars))(pred_b) & allow
+    masked = jnp.where(mask, ws, NEG)
+    top_s, top_i = jax.lax.top_k(masked, k)
+    ids = jnp.where(top_s > NEG / 2, top_i, -1)
+    return ids.astype(jnp.int32), top_s
+
+
 # ---------------------------------------------------------------------------
 # batched executor
 # ---------------------------------------------------------------------------
@@ -261,22 +375,28 @@ class BatchedHybridExecutor:
     kernels. Produces per-query results identical to ``HybridExecutor``.
 
     With ``n_shards > 1`` (or a bound ``mesh``) the executor additionally
-    exposes the CROSS-SHARD path (:meth:`execute_batch_sharded`): formed
-    batches fan out over contiguous table shards — per clause-bucket group,
-    every shard masks + local-top-k's its slice of the dense score matrices
-    and one O(shards · k) merge produces the global result. A real mesh
-    runs it under ``shard_map`` (``vectordb.distributed.sharded_batch_topk``);
-    without one the logical-shard reference kernel keeps the identical
+    exposes the CROSS-SHARD paths (:meth:`execute_batch_sharded`): formed
+    batches fan out over contiguous table shards. Without plans, every
+    clause-bucket group runs the EXACT per-shard scan (mask + local top-k
+    over the dense score matrices, one O(shards · k) merge). With learned
+    plans, index-strategy groups are dispatcher-routed three ways: the
+    plan-driven per-shard IVF probing path (``ShardedIVF`` — each shard
+    probes its own index with the group's shard-legalized knobs and reranks
+    candidate-locally inside the shard), the exact per-shard dense scan, or
+    the plain single-device path when shards are too small to amortize the
+    fan-out. A real mesh runs both sharded paths under ``shard_map``;
+    without one the logical-shard reference kernels keep the identical
     semantics on a single device.
     """
 
     def __init__(self, table: Table, indexes: list,
                  engine: EngineCaps = PGVECTOR, *, n_shards: int = 1,
                  mesh=None, shard_axes=("data",),
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None, hists=None):
         self.table = table
         self.indexes = indexes
         self.engine = engine
+        self.hists = hists  # selectivity stats for static gather caps
         self.dispatcher = ScoringDispatcher(table.n_rows, cost_model)
         self.mesh = mesh
         self.shard_axes = shard_axes if isinstance(shard_axes, tuple) \
@@ -291,6 +411,13 @@ class BatchedHybridExecutor:
                     f"{n_shards} mesh shards")
         self.n_shards = max(1, int(n_shards))
         self._shard_fns: dict = {}  # k -> jit'd shard_map kernel
+        self._sivf: dict = {}  # col -> ShardedIVF (lazy, per shard config)
+        self._sivf_fns: dict = {}  # (group key, act) -> jit'd probe kernel
+        # query indices (positions in the last execute_batch_sharded call)
+        # whose merged probe result underfilled and took the exact
+        # shard-subset retry — benchmarks segment the probe-served tier
+        # from the escalation tax with this; callers may clear it
+        self.escalated: set = set()
         self._seq = HybridExecutor(table, indexes, engine)
 
     def legalize(self, plan: ExecutionPlan) -> ExecutionPlan:
@@ -367,33 +494,77 @@ class BatchedHybridExecutor:
 
     # -- cross-shard execution ---------------------------------------------
 
-    def execute_batch_sharded(self, queries: list[MHQ], *,
+    def execute_batch_sharded(self, queries: list[MHQ],
+                              plans: Optional[list[ExecutionPlan]] = None, *,
                               scores_b: Optional[tuple] = None
                               ) -> list[tuple[np.ndarray, np.ndarray]]:
         """Cross-shard fan-out of a formed batch.
 
-        Queries are grouped by (legalized clause bucket, k) so every group
-        stacks to one static (B, C, M) predicate shape, then each group runs
-        as an EXACT sharded masked top-k: every shard masks + local-top-k's
-        its slice of the dense score matrices and one O(shards · k) merge
-        yields the global result. The dense GEMMs already scored every row
-        for the batch (``compute_batch_scores``), so the exact scan is the
-        optimal plan here — no probing knobs restrict it, and underfill can
-        only mean fewer than k rows genuinely qualify.
+        Without ``plans`` (the exact mode): queries group by (legalized
+        clause bucket, k) so every group stacks to one static (B, C, M)
+        predicate shape, then each group runs as an EXACT sharded masked
+        top-k — every shard masks + local-top-k's its slice of the dense
+        score matrices and one O(shards · k) merge yields the global
+        result. Underfill there can only mean fewer than k rows genuinely
+        qualify.
+
+        With learned ``plans``: groups form exactly like the single-device
+        batched path (strategy + legalized grid params + clause bucket),
+        and every index-strategy group is routed three ways by the cost
+        model (``choose_sharded``): the PLAN-DRIVEN per-shard IVF probing
+        path (each shard probes its own index with the group's
+        shard-legalized knobs — the learned nprobe/max_scan finally
+        operative at shard scale), the exact per-shard dense scan, or the
+        plain single-device path when shards are too small to amortize the
+        fan-out. filter_first groups keep the exact sharded scan (their
+        plan IS the full filtered gather).
         """
         out: list = [None] * len(queries)
-        groups: dict = {}
-        for j, q in enumerate(queries):
-            groups.setdefault(
-                (predicates.clause_bucket(q.predicates), q.k), []).append(j)
         chunk = pow2_at_most(max(1, min(
             MAX_BATCH_KERNEL, SLOT_BUDGET // max(self.table.n_rows, 1))))
-        for (_, k), idxs in groups.items():
+        if plans is None:
+            groups: dict = {}
+            for j, q in enumerate(queries):
+                groups.setdefault(
+                    (predicates.clause_bucket(q.predicates), q.k),
+                    []).append(j)
+            for (_, k), idxs in groups.items():
+                for s in range(0, len(idxs), chunk):
+                    part = idxs[s: s + chunk]
+                    self._run_chunk_sharded(
+                        [queries[j] for j in part], part, out, k=k,
+                        bucket_cap=chunk, scores_b=scores_b)
+            return out
+        assert len(plans) == len(queries)
+        plans = [self.legalize(p) for p in plans]
+        groups = {}
+        for j, (q, p) in enumerate(zip(queries, plans)):
+            groups.setdefault(self._group_key(q, p), []).append(j)
+        for key, idxs in groups.items():
             for s in range(0, len(idxs), chunk):
                 part = idxs[s: s + chunk]
-                self._run_chunk_sharded(
-                    [queries[j] for j in part], part, out, k=k,
-                    bucket_cap=chunk, scores_b=scores_b)
+                qs = [queries[j] for j in part]
+                if key[0] == "ff":
+                    self._run_chunk_sharded(qs, part, out, k=key[2],
+                                            bucket_cap=chunk,
+                                            scores_b=scores_b)
+                    continue
+                bb = min(next_bucket(len(part)), chunk)
+                path = self.dispatcher.choose_sharded(
+                    batch=bb, scan=self._group_scan(key),
+                    n_shards=self.n_shards,
+                    group=("sharded-ivf",) + key[:3],
+                    prefer_dense=scores_b is not None)
+                if path == SINGLE_DEVICE:
+                    self._run_chunk(key, qs, part, out, bucket_cap=chunk,
+                                    scores_b=scores_b)
+                elif path == SHARDED_LOCAL:
+                    self._run_chunk_sharded_ivf(key, qs, part, out,
+                                                bucket_cap=chunk)
+                else:
+                    self._run_chunk_sharded(qs, part, out, k=key[2],
+                                            bucket_cap=chunk,
+                                            scores_b=scores_b)
         return out
 
     def _shard_fn(self, k: int):
@@ -403,19 +574,157 @@ class BatchedHybridExecutor:
                 self.mesh, self.shard_axes, k=k)
         return self._shard_fns[k]
 
+    # -- plan-driven per-shard IVF probing ----------------------------------
+
+    def _sivf_col(self, col: int):
+        """This shard config's per-shard IVF of one column (lazy). Each
+        shard keeps the bound index's FULL cluster count — S× finer
+        granularity relative to its rows — because the per-shard slot
+        budget is the global ``max_scan`` split S ways, and finer clusters
+        target those fewer slots much better (measured on the 500k suite:
+        probe-tier recall 0.08 → 0.22 and +57% QPS vs dividing C by S).
+        The 1-shard configuration reuses the bound index verbatim, so it
+        is bit-for-bit the single-device candidate-local path."""
+        if col not in self._sivf:
+            base = self.indexes[col]
+            self._sivf[col] = build_sharded_ivf(
+                self.table.vectors[col], self.n_shards,
+                n_clusters=base.n_clusters,
+                seed=col, metric=self.table.schema.metric, base_index=base)
+        return self._sivf[col]
+
+    def _sivf_fn(self, key, act: tuple):
+        """jit'd per-shard probing kernel for one (group key, active-column
+        set) — all plan params are shard-legalized here, so the static
+        grid stays as bounded as the single-device group keys."""
+        fkey = (key, act)
+        if fkey not in self._sivf_fns:
+            _, _, k, subs = key
+            shard_subs, total = [], 0
+            for (col, k_i, np0, ms, _it) in subs:
+                sivf = self._sivf_col(col)
+                k_s, np_s, ms_s = legalize_for_shard(
+                    k_i, np0, ms, n_shards=self.n_shards,
+                    shard_len=sivf.shard_len, n_clusters=sivf.n_clusters)
+                ks = min(next_bucket(k_s, 16), ms_s)
+                shard_subs.append((act.index(col), k_s, ks, np_s, ms_s))
+                total += k_s
+            self._sivf_fns[fkey] = sharded_ivf_topk(
+                self.n_shards, self.mesh, self.shard_axes,
+                subs=tuple(shard_subs), k=k, n_cols=len(act),
+                metric=self.table.schema.metric,
+                pad_total=next_bucket(total, 64))
+        return self._sivf_fns[fkey]
+
+    def _run_chunk_sharded_ivf(self, key, qs: list[MHQ], part: list[int],
+                               out: list, *, bucket_cap: int):
+        """One plan-driven sharded group chunk: per-shard IVF probing with
+        the group's shard-legalized knobs, candidate-local rerank inside
+        each shard, one O(shards · k) merge — no dense score matrix is
+        ever built. Per-shard underfill escalation afterwards: a query
+        whose MERGED result underfills k (the single-shard learned path's
+        escalation trigger, kept at shard scale) re-runs as an exact
+        masked top-k over ONLY its underfilled shard-subset's rows —
+        preserving the recall contract without rescanning the well-filled
+        shards."""
+        t = self.table
+        _, _, k, subs = key
+        bb = min(next_bucket(len(qs)), bucket_cap)
+        pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
+        vecs, qsb, wsub, act = self._active_columns(qs, qv_b, w_b)
+        sivfs = [self._sivf_col(col) for (col, *_r) in subs]
+        fn = self._sivf_fn(key, act)
+        ids, scores, fill = fn(
+            tuple(s.centroids for s in sivfs),
+            tuple(s.sorted_rows for s in sivfs),
+            tuple(s.offsets for s in sivfs),
+            vecs, t.scalars, pred_b, qsb, wsub)
+        # fill and the merged ids ride along with the results in one
+        # transfer — no mid-chunk host round-trip gates the kernels.
+        # Escalation keeps the single-device recall contract at shard
+        # scale: a query escalates only when its MERGED result underfills
+        # k (same trigger as the single-shard learned path), and the exact
+        # retry then covers only its underfilled shard-subset — shards
+        # that already contributed k candidates are never rescanned.
+        fill_np = np.asarray(fill)
+        ids_np0 = np.asarray(ids)
+        under = (ids_np0 >= 0).sum(axis=1) < k  # (bb,) merged underfill
+        need = (fill_np < k) & under[:, None]
+        need[len(qs):] = False  # padding queries never escalate
+        self.escalated.update(part[j] for j in np.flatnonzero(
+            need.any(axis=1)))
+        if need.any():
+            ids, scores = self._escalate_shards(
+                ids, scores, need, k=k, pred_b=pred_b, vecs=vecs, qsb=qsb,
+                wsub=wsub)
+            ids_np = np.asarray(ids)
+        else:
+            ids_np = ids_np0  # already on host — don't transfer twice
+        scores_np = np.asarray(scores)
+        for pos, j in enumerate(part):
+            out[j] = (ids_np[pos], scores_np[pos])
+
+    def _escalate_shards(self, ids, scores, need: np.ndarray, *, k: int,
+                         pred_b, vecs: tuple, qsb: tuple, wsub):
+        """Exact retry on the underfilled shard-subset: the escalated
+        queries re-run as one dense masked top-k restricted (allow mask)
+        to the rows of their underfilled shards (``_sharded_exact_retry``
+        — streaming the rows once beats gathering qualifying rows at
+        arbitrary width), and a dedup-by-id merge folds the escalated
+        candidates into the probed results. Probe-found rows keep the
+        probe path's exact float scores through the merge (first
+        occurrence wins), so escalation can only ADD rows, never perturb
+        the well-filled shards' results."""
+        t = self.table
+        s_count = need.shape[1]
+        shard_len = -(-t.n_rows // s_count)
+        sel = np.flatnonzero(need.any(axis=1))
+        sel_p = pad_selection(sel)
+        cur_ids = ids[jnp.asarray(sel_p)]
+        cur_sc = scores[jnp.asarray(sel_p)]
+        # ONE batched dense retry for the whole subset, shard scope
+        # enforced by the allow mask. (Under the merged-underfill trigger
+        # every escalated query has ALL shards below k — a shard with k
+        # candidates would have filled the merge — so the allow mask is
+        # in practice the whole table for those queries; it stays explicit
+        # so a finer future trigger inherits correct scoping for free.)
+        rq_j = jnp.asarray(sel_p)
+        need_p = np.array(need[sel_p])
+        need_p[len(sel):] = False  # padding rows draw nothing
+        e_ids, e_sc = _sharded_exact_retry(
+            vecs, t.scalars, predicates.take(pred_b, sel_p),
+            tuple(q[rq_j] for q in qsb), wsub[rq_j],
+            jnp.asarray(need_p),
+            shard_len=min(shard_len, t.n_rows), k=k,
+            metric=t.schema.metric)
+        cur_ids, cur_sc = merge_topk_unique(
+            jnp.concatenate([cur_ids, e_ids], axis=1),
+            jnp.concatenate([cur_sc, e_sc], axis=1), k)
+        sel_j = jnp.asarray(sel)
+        ids = ids.at[sel_j].set(cur_ids[: len(sel)])
+        scores = scores.at[sel_j].set(cur_sc[: len(sel)])
+        return ids, scores
+
     def _run_chunk_sharded(self, qs: list[MHQ], part: list[int], out: list,
                            *, k: int, bucket_cap: int,
                            scores_b: Optional[tuple] = None):
         """One sharded group chunk, dispatcher-routed.
 
         The sharded scan is EXACT, so its candidate-local variant must be
-        too: the qualifying-row count per query (from the predicate masks,
-        which cost no GEMM) is the group's candidate budget — when
-        ``bb · max(n_qualified)`` clears the crossover, the chunk runs as an
-        exact fused gather+score over only the qualifying rows instead of
-        the dense (bb, n) weighted-score scan. A bound device mesh pins the
-        group to the dense shard_map kernel (the fan-out IS the point
-        there); the decision is still recorded."""
+        too: the per-query qualifying-row count (from the predicate masks,
+        which cost no GEMM) is the group's candidate budget — when it
+        clears the crossover, the chunk runs as an exact fused gather+score
+        over only the qualifying rows instead of the dense (bb, n)
+        weighted-score scan. The gather width is a STATIC cap estimated
+        from the selectivity histograms (margin + slack over the largest
+        per-query estimate), so no host sync gates the kernels; the true
+        counts ride back with the results, and any query whose count
+        overflowed the cap re-runs at the exact width (overflow
+        escalation) — under-shooting estimates cost one retry, never
+        exactness. Without histograms the old one-sync-per-chunk sizing
+        remains. A bound device mesh pins the group to the dense shard_map
+        kernel (the fan-out IS the point there); the decision is still
+        recorded."""
         t = self.table
         bb = min(next_bucket(len(qs)), bucket_cap)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
@@ -429,8 +738,19 @@ class BatchedHybridExecutor:
         else:
             mask = _eval_mask_batch(pred_b, t.scalars)
             prefer_dense = scores_b is not None
+            n_qual = None
+            estimated = False
             if self.dispatcher.pins_dense(prefer_dense):
                 mc = t.n_rows  # candidate-local impossible: skip the sync
+            elif self.hists is not None:
+                # histogram-estimated static cap — stats only, no (bb, n)
+                # mask reduction blocks the host before the gather launches
+                est = float(np.max(np.asarray(
+                    _selectivity_batch(self.hists, pred_b)))) * t.n_rows
+                mc = min(next_bucket(max(
+                    int(np.ceil(est * CAP_MARGIN)) + CAP_SLACK, k, 1)),
+                    next_bucket(t.n_rows))
+                estimated = mc < next_bucket(t.n_rows)
             else:
                 # one host sync per chunk sizes the candidate-local gather
                 n_qual = np.asarray(jnp.sum(mask, axis=1))
@@ -440,11 +760,20 @@ class BatchedHybridExecutor:
                                           group=("sharded", k),
                                           prefer_dense=prefer_dense)
             if path == CANDIDATE_LOCAL:
+                vecs, qsb, wsub, _ = self._active_columns(qs, qv_b, w_b)
                 rows_b = _qualifying_rows_batch(mask, size=mc)
-                vecs, qsb, wsub = self._active_columns(qs, qv_b, w_b)
                 out_ids, out_scores, _ = _gather_rerank_batch(
                     rows_b, vecs, qsb, wsub, t.scalars,
                     k=k, metric=t.schema.metric)
+                if estimated:
+                    # true counts ride back with the result transfer
+                    if n_qual is None:
+                        n_qual = np.asarray(jnp.sum(mask, axis=1))
+                    over = np.flatnonzero(n_qual[: len(qs)] > mc)
+                    if over.size:
+                        out_ids, out_scores = self._regather_overflow(
+                            mask, n_qual, over, out_ids, out_scores,
+                            vecs, qsb, wsub, k=k)
             else:
                 _, weighted_scores = self._chunk_scores(
                     qs, part, bb, qv_b, w_b, scores_b)
@@ -453,6 +782,27 @@ class BatchedHybridExecutor:
         ids_np, scores_np = np.asarray(out_ids), np.asarray(out_scores)
         for pos, j in enumerate(part):
             out[j] = (ids_np[pos], scores_np[pos])
+
+    def _regather_overflow(self, mask, n_qual: np.ndarray, over: np.ndarray,
+                           out_ids, out_scores, vecs, qsb, wsub, *, k: int):
+        """Overflow escalation of the histogram-capped exact gather: the
+        queries whose true qualifying count exceeded the static cap re-run
+        at their exact width, so an under-shooting estimate can never drop
+        qualifying rows."""
+        t = self.table
+        sel_p = pad_selection(over)
+        sel_j = jnp.asarray(sel_p)
+        mc2 = min(next_bucket(max(int(n_qual[over].max()), k, 1)),
+                  next_bucket(t.n_rows))
+        rows2 = _qualifying_rows_batch(
+            jnp.asarray(mask)[sel_j], size=mc2)
+        ids2, sc2, _ = _gather_rerank_batch(
+            rows2, vecs, tuple(q[sel_j] for q in qsb), wsub[sel_j],
+            t.scalars, k=k, metric=t.schema.metric)
+        sel = jnp.asarray(over)
+        out_ids = jnp.asarray(out_ids).at[sel].set(ids2[: len(over)])
+        out_scores = jnp.asarray(out_scores).at[sel].set(sc2[: len(over)])
+        return out_ids, out_scores
 
     def _stack_inputs(self, qs: list[MHQ], bb: int):
         """Batch inputs padded (by repeating the first query) to bucket bb."""
@@ -546,7 +896,7 @@ class BatchedHybridExecutor:
                                        np0, ms, it, local=True)
                 for (col, k_i, np0, ms, it) in subs]
         rows_b = self._pad_candidates(cand)
-        vecs, qsb, wsub = self._active_columns(qs, qv_b, w_b)
+        vecs, qsb, wsub, _ = self._active_columns(qs, qv_b, w_b)
         out_ids, out_scores, _ = _gather_rerank_batch(
             rows_b.astype(jnp.int32), vecs, qsb, wsub, t.scalars,
             k=k, metric=t.schema.metric)
@@ -555,14 +905,15 @@ class BatchedHybridExecutor:
     def _active_columns(self, qs: list[MHQ], qv_b: tuple, w_b):
         """Restrict (vectors, queries, weights) to columns some query in the
         chunk actually weights — a zero weight contributes exactly 0, so the
-        candidate-local re-rank need not gather those columns at all."""
+        candidate-local re-rank need not gather those columns at all.
+        Returns (vectors, queries, weights, active column ids)."""
         w_np = np.asarray([q.weights for q in qs], np.float32)
-        act = [i for i in range(self.table.schema.n_vec)
-               if np.any(np.abs(w_np[:, i]) > 0)]
+        act = tuple(i for i in range(self.table.schema.n_vec)
+                    if np.any(np.abs(w_np[:, i]) > 0))
         vecs = tuple(self.table.vectors[i] for i in act)
         qsb = tuple(qv_b[i] for i in act)
         wsub = w_b[:, jnp.asarray(act, jnp.int32)] if act else w_b[:, :0]
-        return vecs, qsb, wsub
+        return vecs, qsb, wsub, act
 
     @staticmethod
     def _pad_candidates(cand: list):
@@ -613,8 +964,7 @@ class BatchedHybridExecutor:
         while not bool(done.all()) and nprobe < cap:
             nprobe = min(2 * nprobe, cap)
             sel = np.flatnonzero(~done)
-            bb = next_bucket(len(sel))
-            sel_p = np.concatenate([sel, np.full(bb - len(sel), sel[0])])
+            sel_p = pad_selection(sel)
             pred_sub = predicates.take(pred_b, sel_p)
             ids2, nq2 = probe(nprobe, pred_sub, q_b[sel_p],
                               rs_b[sel_p] if rs_b is not None else None)

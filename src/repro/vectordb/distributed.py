@@ -7,10 +7,25 @@ candidates with one all-gather of O(devices · k) elements — independent of
 DB size, so the collective term stays negligible (see EXPERIMENTS.md
 §Roofline boomhq rows).
 
-Implemented with ``shard_map`` so the collective schedule is explicit.
+Two families of sharded search live here:
+
+  * the EXACT scans (``sharded_masked_scan*``, ``sharded_batch_topk``) mask
+    + local-top-k precomputed dense scores per shard — optimal while the
+    dense GEMM is cheap relative to the table;
+  * the PLAN-DRIVEN path (``ShardedIVF`` + ``sharded_ivf_topk``): each
+    shard holds its slice's own IVF index and probes it with the learned
+    plan's legalized knobs (nprobe / max_scan / k_i split across shards),
+    reranking the candidate union with the fused candidate-local
+    gather+score kernel INSIDE the shard — so the learned knobs stay
+    operative at the scale tier where the dense GEMM becomes the wall.
+
+Implemented with ``shard_map`` so the collective schedule is explicit; a
+logical single-device variant keeps identical merge semantics for tests
+and mesh-less serving.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -245,5 +260,220 @@ def sharded_batch_topk(mesh: Mesh, data_axes=("data",), *, k: int):
         assert n % n_dev == 0, (n, n_dev)
         row0 = jnp.arange(n_dev, dtype=jnp.int32) * (n // n_dev)
         return fn(w_scores, scalars, preds, row0)
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# per-shard IVF indexing + plan-driven probing (the learned knobs at scale)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardedIVF:
+    """Per-shard IVF indexes of ONE vector column, stacked on a leading
+    shard axis so a single structure serves both execution modes: under
+    ``shard_map`` axis 0 shards across the mesh's data axes (each device
+    reads only its own shard's index), and the logical single-device path
+    vmaps over it with identical semantics.
+
+    Rows are the table's contiguous ``shard_len``-sized slices.
+    ``sorted_rows`` holds LOCAL row ids (0 .. shard_rows-1); callers
+    globalize with ``shard * shard_len``. The last shard of a non-divisible
+    table is short: its ``sorted_rows`` tail is zero-padded, and because
+    ``offsets`` only ever counts the shard's real rows, padded slots can
+    never be selected as probe candidates.
+    """
+
+    centroids: jax.Array    # (S, C, d)
+    sorted_rows: jax.Array  # (S, shard_len) i32 local row ids, zero-padded
+    offsets: jax.Array      # (S, C+1) i32
+
+    metric: str
+
+    def tree_flatten(self):
+        return (self.centroids, self.sorted_rows, self.offsets), self.metric
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, metric=aux)
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def n_clusters(self) -> int:
+        return int(self.centroids.shape[1])
+
+    @property
+    def shard_len(self) -> int:
+        return int(self.sorted_rows.shape[1])
+
+    def local_index(self, s: int):
+        """Shard ``s``'s index as a plain ``ivf.IVFIndex`` (tests, probes)."""
+        from repro.vectordb import ivf as _ivf
+
+        return _ivf.IVFIndex(self.centroids[s], self.sorted_rows[s],
+                             self.offsets[s], self.metric)
+
+
+def build_sharded_ivf(vectors: jax.Array, n_shards: int, *,
+                      n_clusters: int, seed: int = 0, metric: str = "dot",
+                      base_index=None) -> ShardedIVF:
+    """Build one per-shard IVF index per contiguous table slice.
+
+    ``n_clusters`` is the PER-SHARD cluster count; every shard gets the
+    same count (clamped to the shortest shard) so the stacked arrays stay
+    static-shape. With ``n_shards == 1`` and a ``base_index`` the existing
+    single-device index is reused verbatim — the degenerate configuration
+    is then bit-for-bit the single-device candidate-local path."""
+    from repro.vectordb import ivf as _ivf
+
+    n = int(vectors.shape[0])
+    s = max(1, int(n_shards))
+    if s == 1 and base_index is not None:
+        return ShardedIVF(base_index.centroids[None],
+                          base_index.sorted_rows[None],
+                          base_index.offsets[None], base_index.metric)
+    shard_len = -(-n // s)
+    n_last = n - (s - 1) * shard_len
+    c = max(1, min(int(n_clusters), n_last))
+    cents, rows, offs = [], [], []
+    for i in range(s):
+        v = vectors[i * shard_len: min((i + 1) * shard_len, n)]
+        idx = _ivf.build(v, c, seed=seed + 7919 * i, metric=metric)
+        r = idx.sorted_rows
+        if int(r.shape[0]) < shard_len:
+            r = jnp.pad(r, (0, shard_len - int(r.shape[0])))
+        cents.append(idx.centroids)
+        rows.append(r)
+        offs.append(idx.offsets)
+    return ShardedIVF(jnp.stack(cents), jnp.stack(rows), jnp.stack(offs),
+                      metric)
+
+
+def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
+                     data_axes=("data",), *, subs: tuple, k: int,
+                     n_cols: int, metric: str, pad_total: int):
+    """Build the jit'd plan-driven per-shard probing search.
+
+    ``subs``: one entry per probed column, carrying the SHARD-LEGALIZED
+    static plan params ``(pos, k_i, ks, nprobe, max_scan)`` — ``pos``
+    indexes the column tuples passed at call time (the chunk's weighted
+    columns), ``ks`` the bucketed local top-k width, and
+    ``nprobe``/``max_scan`` the per-shard probing budget
+    (``executor.legalize_for_shard``). Each shard probes its own IVF index
+    (``ivf.search_local_batch``), reranks the per-shard candidate union by
+    the full weighted score with the fused candidate-local gather+score
+    kernel — the PR 4 path, now running INSIDE each shard — and keeps a
+    local top-k; the global result is one O(shards · k) candidate merge.
+
+    Returned fn signature:
+      fn(cent_t, rows_t, offs_t  — per-probed-column ``ShardedIVF`` arrays,
+         vectors tuple[(n, d_i)], scalars (n, M), pred_b (stacked over B),
+         qv_t tuple[(B, d_i)], w_b (B, n_cols))
+        -> (ids (B, k), scores (B, k), fill (B, S))
+
+    ``fill[:, s]`` is how many candidates shard ``s`` contributed per query
+    — the executor's per-shard underfill escalation reads it. Without a
+    mesh the shard axis is vmapped on one device (a non-divisible table is
+    zero-padded; padded rows are unreachable by construction); with a mesh
+    the identical body runs under ``shard_map`` and the merge is one
+    all-gather, in the same shard order.
+    """
+    from repro.kernels.gather_score import gather_score_topk
+    from repro.vectordb import ivf as _ivf
+
+    s = max(1, int(n_shards))
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+
+    def body(cent_t, rows_t, offs_t, vecs_t, scal, row0, pred_b, qv_t, w_b):
+        """One shard: probe each planned column, rerank the union, local
+        top-k. All ids are shard-local until the final globalization."""
+        cands = []
+        for j, (pos, k_i, ks, np_s, ms_s) in enumerate(subs):
+            idx = _ivf.IVFIndex(cent_t[j], rows_t[j], offs_t[j], metric)
+            ids_j, _, _, _ = _ivf.search_local_batch(
+                idx, vecs_t[pos], scal, pred_b, qv_t[pos],
+                nprobe=np_s, max_scan=ms_s, k=ks)
+            cands.append(ids_j[:, :k_i])
+        rows_b = jnp.concatenate(cands, axis=1)
+        if pad_total > rows_b.shape[1]:
+            rows_b = jnp.pad(rows_b,
+                             ((0, 0), (0, pad_total - rows_b.shape[1])),
+                             constant_values=-1)
+        ids_l, scores_l, _ = gather_score_topk(
+            rows_b.astype(jnp.int32), vecs_t, qv_t, w_b, scal, None,
+            k=k, metric=metric)
+        fill = jnp.sum(ids_l >= 0, axis=1).astype(jnp.int32)
+        ids_g = jnp.where(ids_l >= 0, ids_l + row0, -1)
+        return ids_g, scores_l, fill
+
+    if mesh is None:
+        def run(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b):
+            n = scalars.shape[0]
+            shard_len = -(-n // s)
+            if s == 1:
+                # degenerate configuration: EXACTLY the single-device
+                # candidate-local chunk (no vmap, no pad, identity merge)
+                ids, sc, fill = body(
+                    tuple(c[0] for c in cent_t), tuple(r[0] for r in rows_t),
+                    tuple(o[0] for o in offs_t), vectors, scalars,
+                    jnp.asarray(0, jnp.int32), pred_b, qv_t, w_b)
+                return ids, sc, fill[:, None]
+            pad = s * shard_len - n
+            if pad:
+                vectors = tuple(jnp.pad(v, ((0, pad), (0, 0)))
+                                for v in vectors)
+                scalars = jnp.pad(scalars, ((0, pad), (0, 0)))
+            vecs_sh = tuple(v.reshape(s, shard_len, v.shape[1])
+                            for v in vectors)
+            scal_sh = scalars.reshape(s, shard_len, scalars.shape[1])
+            row0 = jnp.arange(s, dtype=jnp.int32) * shard_len
+            ids, sc, fill = jax.vmap(
+                body, in_axes=(0, 0, 0, 0, 0, 0, None, None, None))(
+                cent_t, rows_t, offs_t, vecs_sh, scal_sh, row0,
+                pred_b, qv_t, w_b)
+            b = sc.shape[1]
+            # (S, B, k) -> (B, S·k) in shard order — the all_gather layout
+            s_all = jnp.swapaxes(sc, 0, 1).reshape(b, s * k)
+            g_all = jnp.swapaxes(ids, 0, 1).reshape(b, s * k)
+            mi, ms = _merge_shard_candidates(s_all, g_all, k=k)
+            return mi, ms, jnp.swapaxes(fill, 0, 1)
+
+        return jax.jit(run)
+
+    sub_specs3 = tuple(P(axes, None, None) for _ in subs)
+    sub_specs2 = tuple(P(axes, None) for _ in subs)
+    vec_specs = tuple(P(axes, None) for _ in range(n_cols))
+
+    def local(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b,
+              row0):
+        ids_g, sc, fill = body(
+            tuple(c[0] for c in cent_t), tuple(r[0] for r in rows_t),
+            tuple(o[0] for o in offs_t), vectors, scalars, row0[0],
+            pred_b, qv_t, w_b)
+        s_all = jax.lax.all_gather(sc, axes, axis=1, tiled=True)
+        g_all = jax.lax.all_gather(ids_g, axes, axis=1, tiled=True)
+        mi, ms = _merge_shard_candidates(s_all, g_all, k=k)
+        return mi, ms, fill[None, :]
+
+    fn = compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(sub_specs3, sub_specs2, sub_specs2, vec_specs,
+                  P(axes, None), P(), tuple(P() for _ in range(n_cols)),
+                  P(), P(axes)),
+        out_specs=(P(), P(), P(axes, None)),
+        check_vma=False)
+
+    def run(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b):
+        n = scalars.shape[0]
+        assert n % s == 0, (n, s)
+        row0 = jnp.arange(s, dtype=jnp.int32) * (n // s)
+        mi, ms, fill = fn(cent_t, rows_t, offs_t, vectors, scalars,
+                          pred_b, qv_t, w_b, row0)
+        return mi, ms, jnp.swapaxes(fill, 0, 1)
 
     return jax.jit(run)

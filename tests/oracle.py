@@ -81,6 +81,44 @@ def brute_force_topk(table, query_vectors, weights, pred, k: int):
     return ids, scores, masked
 
 
+def sharded_brute_force_topk(table, query_vectors, weights, pred, k: int,
+                             n_shards: int):
+    """Exact per-shard filtered top-k + candidate merge, pure NumPy.
+
+    Mirrors the reference semantics of every sharded execution path: the
+    table splits into ``n_shards`` contiguous ceil(n/S)-row shards, each
+    shard keeps its local top-k over the exact masked scores, and the
+    global result is the top-k of the S·k merged candidates (stable on
+    score, shard-order on ties — the all-gather layout). Because each
+    shard's local top-k is exact, the merge equals the global brute force
+    up to float ties; this pins that the MERGE itself (not just the
+    per-shard scans) loses nothing. Returns (ids, scores, masked) like
+    ``brute_force_topk``."""
+    total = exact_scores(table, query_vectors, weights)
+    mask = eval_mask_np(pred, np.asarray(table.scalars))
+    masked = np.where(mask, total, NEG)
+    n = masked.shape[0]
+    per = -(-n // n_shards)
+    cand_ids, cand_scores = [], []
+    for s in range(n_shards):
+        seg = masked[s * per: min((s + 1) * per, n)]
+        kk = min(k, seg.shape[0])
+        order = np.argsort(-seg, kind="stable")[:kk]
+        cand_ids.append(order + s * per)
+        cand_scores.append(seg[order])
+    cid = np.concatenate(cand_ids)
+    cs = np.concatenate(cand_scores)
+    order = np.argsort(-cs, kind="stable")[:k]
+    found = cs[order] > NEG / 2
+    ids = np.where(found, cid[order], -1)
+    scores = np.where(found, cs[order], NEG)
+    if ids.shape[0] < k:
+        ids = np.pad(ids, (0, k - ids.shape[0]), constant_values=-1)
+        scores = np.pad(scores, (0, k - scores.shape[0]),
+                        constant_values=NEG)
+    return ids, scores, masked
+
+
 def tie_tolerance(kth: float, atol: float = 1e-4, rtol: float = 1e-5) -> float:
     return atol + rtol * abs(kth)
 

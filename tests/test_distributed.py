@@ -132,6 +132,27 @@ _SUBPROC = textwrap.dedent("""
     assert np.allclose(np.asarray(s_b), np.asarray(s_r), atol=1e-5)
     print("sharded_batch OK")
 
+    # --- per-shard IVF probing: shard_map == logical reference ---
+    from repro.vectordb.distributed import build_sharded_ivf, sharded_ivf_topk
+    sivf = build_sharded_ivf(vecs[0], 4, n_clusters=8, seed=3, metric="dot")
+    subs = ((0, 16, 16, 4, 64),)  # (pos, k_i, ks, nprobe, max_scan)
+    qv_b = jnp.asarray(rng.normal(size=(qb, d)), jnp.float32)
+    w_b = jnp.ones((qb, 1), jnp.float32)
+    args = ((sivf.centroids,), (sivf.sorted_rows,), (sivf.offsets,),
+            (vecs[0],), scal, preds, (qv_b,), w_b)
+    fn_m = sharded_ivf_topk(4, mesh, ("data",), subs=subs, k=k2, n_cols=1,
+                            metric="dot", pad_total=64)
+    fn_r = sharded_ivf_topk(4, None, subs=subs, k=k2, n_cols=1,
+                            metric="dot", pad_total=64)
+    with mesh:
+        ids_m, s_m, fill_m = fn_m(*args)
+    ids_l, s_l, fill_l = fn_r(*args)
+    assert np.array_equal(np.asarray(ids_m), np.asarray(ids_l)), (ids_m, ids_l)
+    assert np.allclose(np.asarray(s_m), np.asarray(s_l), atol=1e-5)
+    assert np.array_equal(np.asarray(fill_m), np.asarray(fill_l))
+    assert np.asarray(fill_m).shape == (qb, 4)
+    print("sharded_ivf OK")
+
     # --- elastic replan onto a reshaped mesh ---
     from repro import configs
     from repro.distributed.elastic import replan
@@ -174,6 +195,7 @@ def test_multidevice_subprocess():
     assert out.returncode == 0, out.stderr[-3000:]
     assert "sharded_scan OK" in out.stdout
     assert "sharded_batch OK" in out.stdout
+    assert "sharded_ivf OK" in out.stdout
     assert "elastic OK" in out.stdout
     assert "pjit_train OK" in out.stdout
 

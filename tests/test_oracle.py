@@ -12,13 +12,20 @@ import pytest
 
 import jax.numpy as jnp
 
-from oracle import brute_force_topk, eval_mask_np, tie_aware_recall
+from _hypothesis_compat import given, settings, st
+from oracle import (
+    brute_force_topk, eval_mask_np, sharded_brute_force_topk,
+    tie_aware_recall,
+)
 
 from repro.bench import queries
+from repro.core.executor import HybridExecutor
 from repro.core.query import ExecutionPlan, SubqueryParams, default_plan
-from repro.serve.batch import BatchedHybridExecutor, compute_batch_scores
+from repro.serve.batch import (
+    BatchedHybridExecutor, SHARDED_LOCAL, CostModel, compute_batch_scores,
+)
 from repro.vectordb import flat, ivf
-from repro.vectordb.predicates import eval_mask
+from repro.vectordb.predicates import clause_bucket, eval_mask
 
 FLOOR = 0.95
 
@@ -110,15 +117,19 @@ def test_batched_path_recall_floor(fitted):
 
 @pytest.mark.slow
 def test_cross_shard_recall_floor_and_acceptance(fitted):
-    """Acceptance: oracle-measured recall of the cross-shard batched path
-    matches (>=, up to float ties) the single-shard batched path on the
-    fitted fixture, and both the 2- and 4-shard meshes clear the exact-path
-    floor of 1.0."""
+    """Acceptance: oracle-measured recall of the cross-shard EXACT scan
+    (cost model pinned dense — the default router sends this tiny table's
+    index groups single-device) matches (>=, up to float ties) the
+    single-shard batched path on the fitted fixture, and both the 2- and
+    4-shard meshes clear the exact-path floor of 1.0."""
+    from repro.serve.batch import DENSE
+
     bq, test = fitted
     single = bq.execute_batch(test)  # learned plans + escalation
     recs_single = [_oracle_recall(bq.table, q, ids)
                    for q, (ids, _) in zip(test, single)]
     try:
+        bq.bind_cost_model(CostModel(force=DENSE))
         for n_shards in (2, 4):
             assert bq.table.n_rows % n_shards == 0
             bq.bind_shards(n_shards)
@@ -130,7 +141,145 @@ def test_cross_shard_recall_floor_and_acceptance(fitted):
             for rs, r1 in zip(recs_sh, recs_single):
                 assert rs >= r1 - 1e-9, (n_shards, rs, r1)
     finally:
-        bq.bind_shards()  # restore the shared fixture to single-shard
+        # restore the shared fixture to single-shard + calibrated model
+        bq.bind_shards().bind_cost_model()
+
+
+@pytest.mark.slow
+def test_sharded_ivf_learned_acceptance(fitted):
+    """Acceptance (satellite): the sharded-IVF LEARNED path — per-shard
+    probing driven by the same learned plans, with per-shard escalation —
+    reaches oracle recall no worse than the single-shard learned path on
+    the fitted fixture (mean level; per-shard probing covers at least the
+    single index's neighborhoods at generous fan-out)."""
+    bq, test = fitted
+    single = bq.execute_batch(test)
+    mean_single = float(np.mean([_oracle_recall(bq.table, q, ids)
+                                 for q, (ids, _) in zip(test, single)]))
+    try:
+        # the fixture's shards sit under min_shard_rows: pin the probing
+        # path so the learned sharded route is what's measured
+        bq.bind_cost_model(CostModel(force=SHARDED_LOCAL))
+        for n_shards in (2, 4):
+            bq.bind_shards(n_shards)
+            sharded = bq.execute_batch(test)
+            mean_sh = float(np.mean([_oracle_recall(bq.table, q, ids)
+                                     for q, (ids, _) in zip(test, sharded)]))
+            assert mean_sh >= mean_single - 1e-3, (n_shards, mean_sh,
+                                                   mean_single)
+    finally:
+        bq.bind_shards().bind_cost_model()
+
+
+def test_sharded_oracle_merge_matches_global(tiny_table):
+    """The pure-NumPy sharded oracle (per-shard exact top-k + candidate
+    merge) must agree with the global brute force score-for-score — pins
+    that the merge semantics every sharded path is tested against loses
+    nothing."""
+    t = tiny_table
+    for q in _mixed_workload(t, seed=71):
+        g_ids, g_scores, _ = brute_force_topk(
+            t, list(q.query_vectors), list(q.weights), q.predicates, q.k)
+        for s in (2, 4, 7):
+            s_ids, s_scores, _ = sharded_brute_force_topk(
+                t, list(q.query_vectors), list(q.weights), q.predicates,
+                q.k, n_shards=s)
+            np.testing.assert_allclose(s_scores, g_scores, atol=1e-12)
+            assert set(s_ids[s_ids >= 0]) == set(g_ids[g_ids >= 0]) or \
+                np.allclose(np.sort(s_scores), np.sort(g_scores))
+
+
+# ---------------------------------------------------------------------------
+# three-way parity: sequential vs execute_batch vs sharded-IVF learned path
+# ---------------------------------------------------------------------------
+
+def _single_col_mixed_wl(t, *, n_conj=4, n_dnf=4, seed=31):
+    """Mixed clause-bucket workload with ONE active vector column per
+    query: single-column index_scan at exhaustive budgets (nprobe = all
+    clusters, max_scan = table, k_i >= k) IS the exact filtered top-k —
+    the candidates are the top-k_i QUALIFYING rows of the only scored
+    column — so strict three-way parity is mathematically well-defined.
+    (Multi-column index_scan is structurally approximate — the ROADMAP's
+    per-column candidate gap — and the sharded union is a superset of the
+    single-device one, so those are held to one-sided floors instead.)"""
+    return queries.gen_workload(t, n_conj, n_vec_used=1, seed=seed) + \
+        queries.gen_dnf_workload(t, n_dnf, n_vec_used=1, seed=seed + 1,
+                                 clause_counts=(2, 3, 4))
+
+
+def _three_way_sharded_ivf(t, wl, *, shard_counts=(2, 5)):
+    idx = [ivf.build(v, 16, seed=i, metric=t.schema.metric)
+           for i, v in enumerate(t.vectors)]
+    seq = HybridExecutor(t, idx)
+    bx = BatchedHybridExecutor(t, idx)
+    plan = ExecutionPlan("index_scan", tuple(
+        SubqueryParams(k_mult=4, nprobe=64, max_scan=t.n_rows,
+                       iterative=False) for _ in range(t.schema.n_vec)))
+    plans = [plan] * len(wl)
+    batched = bx.execute_batch(wl, plans)
+    sharded = {s: BatchedHybridExecutor(
+        t, idx, n_shards=s, cost_model=CostModel(force=SHARDED_LOCAL)
+    ).execute_batch_sharded(wl, plans) for s in shard_counts}
+    for j, q in enumerate(wl):
+        ids_s, scores_s = seq.execute(q, plan)
+        assert _oracle_recall(t, q, np.asarray(ids_s)) == 1.0
+        assert _oracle_recall(t, q, batched[j][0]) == 1.0
+        valid = np.asarray(ids_s) >= 0
+        for s in shard_counts:
+            ids_x, scores_x = sharded[s][j]
+            assert _oracle_recall(t, q, ids_x) == 1.0
+            np.testing.assert_allclose(
+                np.sort(np.asarray(scores_x)[np.asarray(ids_x) >= 0]),
+                np.sort(np.asarray(scores_s)[valid]), atol=1e-4, rtol=1e-5)
+
+
+def test_sharded_ivf_three_way_parity_corpus(tiny_table):
+    """Deterministic corpus (always runs): mixed clause-bucket batches
+    through the sequential executor, execute_batch, and the sharded-IVF
+    learned path on a divisible (2) and a padded (7: 1500 % 7 != 0)
+    shard split."""
+    t = tiny_table
+    assert t.n_rows % 7 != 0  # the 7-way split genuinely exercises padding
+    for seed in (301, 402):
+        wl = _single_col_mixed_wl(t, seed=seed)
+        assert len({clause_bucket(q.predicates) for q in wl}) >= 2
+        _three_way_sharded_ivf(t, wl, shard_counts=(2, 7))
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50_000))
+def test_sharded_ivf_three_way_parity_property(tiny_table, seed):
+    """Hypothesis sweep of the same three-way parity over random mixed
+    clause-bucket workloads."""
+    t = tiny_table
+    _three_way_sharded_ivf(
+        t, _single_col_mixed_wl(t, n_conj=3, n_dnf=3, seed=seed),
+        shard_counts=(4,))
+
+
+def test_sharded_ivf_multicolumn_never_below_batched(tiny_table):
+    """Multi-column index_scan: the per-shard candidate union is a
+    SUPERSET of the single-device one, so at identical plans the
+    sharded-IVF oracle recall can only be >= the batched path's,
+    per query."""
+    t = tiny_table
+    idx = [ivf.build(v, 16, seed=i, metric=t.schema.metric)
+           for i, v in enumerate(t.vectors)]
+    bx = BatchedHybridExecutor(t, idx)
+    wl = _mixed_workload(t, seed=83)
+    plan = ExecutionPlan("index_scan", tuple(
+        SubqueryParams(k_mult=4, nprobe=64, max_scan=t.n_rows,
+                       iterative=False) for _ in range(t.schema.n_vec)))
+    plans = [plan] * len(wl)
+    batched = bx.execute_batch(wl, plans)
+    for s in (2, 4):
+        bxs = BatchedHybridExecutor(
+            t, idx, n_shards=s, cost_model=CostModel(force=SHARDED_LOCAL))
+        sharded = bxs.execute_batch_sharded(wl, plans)
+        for q, (ids_b, _), (ids_x, _) in zip(wl, batched, sharded):
+            assert _oracle_recall(t, q, ids_x) >= \
+                _oracle_recall(t, q, ids_b) - 1e-9
 
 
 @pytest.mark.slow

@@ -131,8 +131,13 @@ def _tiny_bq():
 
 
 def test_async_engine_serves_stream():
+    from repro.serve.batch import DENSE, CostModel
+
     table, bq = _tiny_bq()
-    bq.bind_shards(3)
+    # pin the exact sharded scan: this test asserts ground-truth scores,
+    # and the default cost model would route this tiny table's index
+    # groups through the (approximate) single-device learned path
+    bq.bind_shards(3).bind_cost_model(CostModel(force=DENSE))
     wl = queries.gen_workload(table, 8, n_vec_used=2, seed=11)
 
     async def main():
