@@ -16,6 +16,17 @@ else
   echo "ruff unavailable; skipping lint"
 fi
 
+# boomlint: trace-safety & recompile-hazard static analysis (AST +
+# jaxpr/HLO; docs/analysis.md). Gates on zero unsuppressed findings beyond
+# the checked-in baseline. CI_FAST keeps it AST-only; full runs also trace
+# the serving kernels (level 2).
+BOOMLINT_ARGS=(src/repro --baseline boomlint.baseline.json)
+if [[ "${CI_FAST:-0}" == "1" ]]; then
+  BOOMLINT_ARGS+=(--no-trace)
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m repro.analysis.cli "${BOOMLINT_ARGS[@]}"
+
 PYTEST_ARGS=(-x -q)
 if [[ "${CI_FAST:-0}" == "1" ]]; then
   PYTEST_ARGS+=(-m "not slow")
@@ -24,7 +35,7 @@ fi
 # via requirements-dev.txt); offline images without it run plain so the
 # baked-in toolchain stays sufficient
 if python -c "import pytest_cov" >/dev/null 2>&1 && [[ "${CI_FAST:-0}" != "1" ]]; then
-  PYTEST_ARGS+=(--cov=repro --cov-report=term --cov-fail-under=72)
+  PYTEST_ARGS+=(--cov=repro --cov-report=term --cov-fail-under=74)
 else
   echo "pytest-cov unavailable or CI_FAST set; running without coverage floor"
 fi

@@ -1,0 +1,23 @@
+"""boomlint: trace-safety & recompile-hazard static analysis.
+
+Two levels, one finding stream:
+
+* **Level 1 (AST)** — :mod:`repro.analysis.astpass` walks the source and
+  flags host-sync hazards in traced/hot functions (HS001), shape-bearing
+  literals at jitted entry points that are off the registered grids
+  (RC001), ``shard_map`` bodies closing over full-table arrays (SM001),
+  and literal Pallas block shapes that blow the VMEM budget (PL001).
+* **Level 2 (jaxpr/HLO)** — :mod:`repro.analysis.tracepass` traces the
+  real serving kernels and checks the jaxpr/HLO for host callbacks,
+  collectives beyond the O(shards·k) merge (CM001), and the per-kernel
+  VMEM envelope from :mod:`repro.kernels.shapes` (PL001).
+
+Findings support inline suppression (``# boomlint: ignore[HS001] reason``)
+and a checked-in baseline; the CLI (``python -m repro.analysis.cli``)
+gates CI on zero unsuppressed findings. Rule catalog: ``docs/analysis.md``.
+"""
+from repro.analysis.config import LintConfig
+from repro.analysis.findings import Finding
+from repro.analysis.runner import run_paths
+
+__all__ = ["Finding", "LintConfig", "run_paths"]

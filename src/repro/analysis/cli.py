@@ -1,0 +1,89 @@
+"""boomlint CLI.
+
+    PYTHONPATH=src python -m repro.analysis.cli src/repro
+
+Exit code 0 iff no unsuppressed, unbaselined findings. ``--json`` emits
+machine-readable findings; ``--write-baseline`` snapshots current findings
+so pre-existing debt can be ratcheted down without blocking CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.config import LintConfig
+from repro.analysis.findings import to_json
+from repro.analysis.runner import run_paths
+from repro.analysis.suppressions import Baseline
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="boomlint",
+        description="trace-safety & recompile-hazard lint for the serving "
+                    "stack (AST + jaxpr/HLO)")
+    p.add_argument("paths", nargs="+", help="files or directories to scan")
+    p.add_argument("--json", action="store_true",
+                   help="emit findings as JSON on stdout")
+    p.add_argument("--baseline", default=None,
+                   help="baseline file of accepted findings (JSON)")
+    p.add_argument("--write-baseline", default=None, metavar="PATH",
+                   help="write current active findings to PATH and exit 0")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip level-2 jaxpr/HLO checks (AST only; fast)")
+    p.add_argument("--vmem-budget", type=int, default=0, metavar="BYTES",
+                   help="per-kernel VMEM budget for PL001 "
+                        "(default: kernels.shapes.DEFAULT_VMEM_BUDGET)")
+    p.add_argument("--max-all-gathers", type=int, default=2,
+                   help="CM001 all-gather budget per kernel (default 2)")
+    p.add_argument("--ignore-suppressions", action="store_true",
+                   help="report suppressed findings too (audit mode)")
+    p.add_argument("--show-suppressed", action="store_true",
+                   help="list suppressed findings after the active ones")
+    return p
+
+
+def main(argv: list | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    cfg = LintConfig(
+        vmem_budget=args.vmem_budget,
+        max_all_gathers=args.max_all_gathers,
+        trace=not args.no_trace,
+        ignore_suppressions=args.ignore_suppressions,
+    )
+    baseline = None
+    if args.baseline and not args.write_baseline:
+        baseline = Baseline.load(args.baseline)
+
+    result = run_paths(args.paths, cfg, baseline=baseline)
+    active = result["active"]
+
+    if args.write_baseline:
+        Baseline.from_findings(active).save(args.write_baseline)
+        print(f"boomlint: wrote {len(active)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    if args.json:
+        print(to_json(active))
+    else:
+        for f in active:
+            print(f.render())
+        if args.show_suppressed and result["suppressed"]:
+            print("# suppressed:")
+            for f in result["suppressed"]:
+                print(f"#   {f.render()}")
+        tail = []
+        if result["suppressed"]:
+            tail.append(f"{len(result['suppressed'])} suppressed")
+        if result["baselined"]:
+            tail.append(f"{result['baselined']} baselined")
+        status = f"boomlint: {len(active)} finding(s)"
+        if tail:
+            status += " (" + ", ".join(tail) + ")"
+        print(status, file=sys.stderr)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

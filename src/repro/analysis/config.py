@@ -1,0 +1,94 @@
+"""boomlint configuration: rule knobs, hot-path registry, grid registry."""
+from __future__ import annotations
+
+import dataclasses
+
+# Host functions on the serving hot path (scope B of HS001): host-side
+# coercions inside their loops are per-iteration syncs, and repeated
+# transfers of the same value are duplicate round-trips. Offline code
+# (fit/build/bench) is deliberately NOT here — np.asarray is free there.
+DEFAULT_HOT_FUNCTIONS = (
+    ("serve/batch.py", "BatchedHybridExecutor.*"),
+    ("serve/batch.py", "ServingEngine.*"),
+    ("serve/queue.py", "AsyncServingEngine.*"),
+    ("serve/queue.py", "BatchFormer.*"),
+    ("core/executor.py", "HybridExecutor.execute"),
+    ("core/executor.py", "HybridExecutor._subquery"),
+    ("core/boomhq.py", "BoomHQ.execute"),
+    ("core/boomhq.py", "BoomHQ.execute_batch"),
+    ("core/boomhq.py", "BoomHQ.optimize"),
+    ("core/boomhq.py", "BoomHQ.optimize_batch"),
+)
+
+# Fallback shape vocabulary used only when the live registries cannot be
+# imported (e.g. linting a checkout without jax). registered_shape_values()
+# prefers the single-source-of-truth exports.
+_FALLBACK_GRID_VALUES = frozenset(
+    {1, 2, 4}  # CLAUSE_GRID
+    | {1, 2, 4, 8, 16, 32}  # NPROBE_GRID
+    | {2048, 8192, 32768, 131072}  # MAX_SCAN_GRID
+    | {1, 2, 4, 8}  # KMULT_GRID
+    | {16, 64, 256, 1024}  # floors + kernel tiles
+)
+
+
+def registered_shape_values() -> frozenset:
+    """Every non-pow2-exempt static shape value the serving stack is allowed
+    to use at a jitted call site: the registered grids (serve/batch.py
+    ``SHAPE_GRIDS``), the padding floors, and the kernel tile constants
+    (kernels/shapes.py)."""
+    try:
+        from repro.kernels.shapes import GATHER_BLOCK_S, SCAN_BLOCK_ROWS
+        from repro.serve.batch import (
+            CANDIDATE_PAD_FLOOR, K_BUCKET_FLOOR, SHAPE_GRIDS,
+        )
+    except Exception:  # pragma: no cover - jax-less checkout
+        return _FALLBACK_GRID_VALUES
+    vals = {K_BUCKET_FLOOR, CANDIDATE_PAD_FLOOR, SCAN_BLOCK_ROWS,
+            GATHER_BLOCK_S}
+    for grid in SHAPE_GRIDS.values():
+        vals.update(int(v) for v in grid)
+    return frozenset(vals)
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Knobs for one analyzer run (tests construct these; the CLI maps
+    flags onto them)."""
+
+    # AST-level PL001: literal BlockSpec/VMEM shapes per function must sum
+    # under this. Trace-level PL001 checks the kernels/shapes.py envelope
+    # against the same budget.
+    vmem_budget: int = 0  # 0 -> use kernels.shapes.DEFAULT_VMEM_BUDGET
+    # CM001: all-gathers allowed per serving kernel (ids + scores of the
+    # O(shards·k) merge).
+    max_all_gathers: int = 2
+    # hot host functions for HS001 scope B: (path suffix, qualname glob)
+    hot_functions: tuple = DEFAULT_HOT_FUNCTIONS
+    # run the level-2 trace checks (CLI --no-trace disables)
+    trace: bool = True
+    # report suppressed findings too (debugging)
+    ignore_suppressions: bool = False
+    # explicit grid override for tests; None -> registered_shape_values()
+    shape_values: frozenset | None = None
+
+    def budget(self) -> int:
+        if self.vmem_budget:
+            return self.vmem_budget
+        try:
+            from repro.kernels.shapes import DEFAULT_VMEM_BUDGET
+        except Exception:  # pragma: no cover
+            return 12 * 2**20
+        return DEFAULT_VMEM_BUDGET
+
+    def grid_values(self) -> frozenset:
+        if self.shape_values is not None:
+            return self.shape_values
+        return registered_shape_values()
+
+    def allowed_shape_literal(self, v: int) -> bool:
+        return is_pow2(v) or v in self.grid_values()

@@ -1,0 +1,96 @@
+"""Runtime recompile counting via ``jax_log_compiles``.
+
+JAX logs per-compilation records when ``jax_log_compiles`` is on.
+``CompileCounter`` attaches a counting handler to the ``jax`` ancestor
+logger for the duration of a ``with`` block — the serving-path regression
+tests use it to pin "a warmed engine never recompiles":
+
+    with CompileCounter() as cc:
+        engine.execute_batch(queries)
+    assert cc.count == 0
+
+One compilation can emit BOTH marker styles ("Finished XLA compilation of
+<name>" from the dispatch path and "Compiling <name> with global shapes"
+from pxla), so the two are counted separately and ``count`` is their max.
+Counting is support-probed (``supported()``): if a jax version moves the
+log messages, dependent tests skip instead of passing vacuously.
+"""
+from __future__ import annotations
+
+import logging
+
+_FINISHED = "Finished XLA compilation"
+_COMPILING = "Compiling "
+
+
+class _CountingHandler(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.finished = 0
+        self.compiling = 0
+        self.names: list = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        if _FINISHED in msg:
+            self.finished += 1
+            self.names.append(msg.split(" in ")[0])
+        elif msg.startswith(_COMPILING):
+            self.compiling += 1
+            self.names.append(msg.split(" with ")[0])
+
+
+class CompileCounter:
+    """Count XLA compilations inside a ``with`` block."""
+
+    def __init__(self):
+        self._handler = _CountingHandler()
+        self._saved = None
+
+    def __enter__(self):
+        import jax
+
+        self._ctx = jax.log_compiles(True)
+        self._ctx.__enter__()
+        # the ancestor logger sees every jax._src.* record via propagation;
+        # propagate=False keeps the WARNING-level compile log spam off the
+        # root handlers while counting
+        logger = logging.getLogger("jax")
+        self._saved = (logger, logger.propagate)
+        logger.addHandler(self._handler)
+        logger.propagate = False
+        return self
+
+    def __exit__(self, *exc):
+        logger, propagate = self._saved
+        logger.removeHandler(self._handler)
+        logger.propagate = propagate
+        self._saved = None
+        self._ctx.__exit__(*exc)
+        return False
+
+    @property
+    def count(self) -> int:
+        return max(self._handler.finished, self._handler.compiling)
+
+    @property
+    def names(self) -> list:
+        return list(self._handler.names)
+
+
+def supported() -> bool:
+    """Probe: does this jax emit countable compile logs?
+
+    Compiles a trivial jitted function with a fresh shape under a counter
+    and checks the count moved. Tests skip (not pass) when this is False.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def probe(x):
+        return x * 2 + 1
+
+    with CompileCounter() as cc:
+        probe(jnp.ones((3, 7), jnp.float32)).block_until_ready()
+    return cc.count >= 1

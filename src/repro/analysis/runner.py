@@ -1,0 +1,85 @@
+"""Scan orchestration: file collection, cross-module jit registry,
+suppressions, baseline."""
+from __future__ import annotations
+
+import os
+
+from repro.analysis import astpass
+from repro.analysis.config import LintConfig
+from repro.analysis.findings import sort_findings
+from repro.analysis.suppressions import (
+    Baseline, parse_suppressions, split_suppressed,
+)
+
+
+def collect_files(paths: list) -> list:
+    files = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+            continue
+        for root, dirs, names in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if d not in ("__pycache__", ".git"))
+            files.extend(os.path.join(root, n) for n in sorted(names)
+                         if n.endswith(".py"))
+    return files
+
+
+def _relpath(path: str) -> str:
+    return os.path.relpath(path).replace(os.sep, "/")
+
+
+def run_paths(paths: list, cfg: LintConfig | None = None,
+              baseline: Baseline | None = None) -> dict:
+    """Run level 1 (and level 2 when ``cfg.trace``) over ``paths``.
+
+    Returns ``{"active": [...], "suppressed": [...], "baselined": n}`` —
+    ``active`` is what should gate CI."""
+    cfg = cfg or LintConfig()
+    files = collect_files(paths)
+    sources = {}
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            sources[f] = fh.read()
+
+    # pass 1: every module's decorated jit entries feed the RC001 registry,
+    # so cross-module call sites (serve -> vectordb) are checked too
+    entries: dict = {}
+    for f, src in sources.items():
+        try:
+            lint = astpass.ModuleLint(f, src, cfg, relpath=_relpath(f))
+            entries.update(lint.collect_jit_entries())
+        except SyntaxError:
+            continue
+    astpass.ModuleLint.reset_jit_entries()
+    astpass.ModuleLint.register_jit_entries(entries)
+
+    findings = []
+    suppress_maps: dict = {}
+    for f, src in sources.items():
+        rel = _relpath(f)
+        try:
+            findings.extend(astpass.lint_source(f, src, cfg, relpath=rel))
+        except SyntaxError as e:
+            from repro.analysis.findings import Finding
+            findings.append(Finding("XX000", rel, e.lineno or 1,
+                                    f"syntax error: {e.msg}"))
+        suppress_maps[rel] = parse_suppressions(src)
+
+    if cfg.trace:
+        from repro.analysis import tracepass
+        findings.extend(tracepass.run_trace_checks(cfg))
+
+    findings = sort_findings(findings)
+    if cfg.ignore_suppressions:
+        active, suppressed = findings, []
+    else:
+        active, suppressed = split_suppressed(findings, suppress_maps)
+    baselined = 0
+    if baseline is not None:
+        before = len(active)
+        active = baseline.filter(active)
+        baselined = before - len(active)
+    return {"active": active, "suppressed": suppressed,
+            "baselined": baselined}

@@ -1,0 +1,98 @@
+"""Inline suppressions and the checked-in baseline.
+
+Inline syntax (same line as the finding, or a standalone comment on the
+line(s) above it)::
+
+    x = int(n_qual)  # boomlint: ignore[HS001] one sync per round is the contract
+
+    # boomlint: ignore[HS001,RC001] reason may span
+    # further plain comment lines
+    x = int(n_qual)
+
+A standalone suppression comment applies to the next non-comment,
+non-blank line. The baseline is a JSON file of finding keys
+(rule, path, stripped source line) so entries survive unrelated line
+drift; matched entries are consumed (multiset semantics).
+"""
+from __future__ import annotations
+
+import json
+import re
+
+from repro.analysis.findings import Finding
+
+SUPPRESS_RE = re.compile(
+    r"#\s*boomlint:\s*ignore\[([A-Za-z0-9_,\s]+)\]\s*(.*)")
+
+
+def parse_suppressions(source: str) -> dict:
+    """-> {line_number: set(rule_ids)} of suppressed lines (1-indexed)."""
+    out: dict = {}
+    lines = source.splitlines()
+    for i, line in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if line.strip().startswith("#"):
+            # standalone comment: also covers the next code line
+            j = i
+            while j < len(lines) and (not lines[j].strip()
+                                      or lines[j].strip().startswith("#")):
+                j += 1
+            if j < len(lines):
+                out.setdefault(j + 1, set()).update(rules)
+    return out
+
+
+def split_suppressed(findings: list, suppressions_by_path: dict) -> tuple:
+    """-> (active, suppressed) given {path: {line: rules}} maps."""
+    active, suppressed = [], []
+    for f in findings:
+        rules = suppressions_by_path.get(f.path, {}).get(f.line, set())
+        (suppressed if f.rule in rules else active).append(f)
+    return active, suppressed
+
+
+class Baseline:
+    def __init__(self, entries: list | None = None):
+        self.entries = list(entries or [])
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        with open(path) as fh:
+            data = json.load(fh)
+        return cls([(e["rule"], e["path"], e.get("context", ""))
+                    for e in data.get("entries", [])])
+
+    @classmethod
+    def from_findings(cls, findings: list) -> "Baseline":
+        return cls([f.key() for f in findings])
+
+    def save(self, path) -> None:
+        entries = [{"rule": r, "path": p, "context": c}
+                   for (r, p, c) in sorted(self.entries)]
+        with open(path, "w") as fh:
+            json.dump({"version": 1, "entries": entries}, fh, indent=2,
+                      sort_keys=True)
+            fh.write("\n")
+
+    def filter(self, findings: list) -> list:
+        """Drop findings matching a baseline entry (each entry consumes at
+        most one finding)."""
+        budget: dict = {}
+        for key in self.entries:
+            budget[key] = budget.get(key, 0) + 1
+        out = []
+        for f in findings:
+            k = f.key()
+            if budget.get(k, 0) > 0:
+                budget[k] -= 1
+            else:
+                out.append(f)
+        return out
+
+
+def _self_test_finding() -> Finding:  # pragma: no cover - debugging helper
+    return Finding("HS001", "x.py", 1, "m", context="int(x)")

@@ -349,11 +349,14 @@ class BoomHQ:
     def execute(self, q: MHQ):
         ids, scores = self.executor.execute(q, self.optimize(q))
         # underfill safeguard: if the plan found fewer than k qualifying rows
-        # (severe mis-prediction), escalate once to the robust default plan
-        if int(np.sum(np.asarray(ids) >= 0)) < q.k:
+        # (severe mis-prediction), escalate once to the robust default plan.
+        # One transfer per result decides it (HS001: ids used to round-trip
+        # the device twice more in the comparison below).
+        nv = _n_valid(ids)
+        if nv < q.k:
             ids2, scores2 = self.executor.execute(
                 q, default_plan(q.n_vec, self.engine))
-            if int(np.sum(np.asarray(ids2) >= 0)) > int(np.sum(np.asarray(ids) >= 0)):
+            if _n_valid(ids2) > nv:
                 return ids2, scores2
         return ids, scores
 

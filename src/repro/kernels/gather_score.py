@@ -44,8 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
-ID_SENTINEL = 2**30  # sorts padded slots after every real row id
+from repro.kernels.shapes import GATHER_BLOCK_S, ID_SENTINEL, NEG
 
 
 def _pred_fields(pred):
@@ -216,7 +215,8 @@ def _default_use_kernel() -> bool:
 
 
 def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
-                      k: int, metric: str = "dot", block_s: int = 256,
+                      k: int, metric: str = "dot",
+                      block_s: int = GATHER_BLOCK_S,
                       use_kernel: bool | None = None,
                       interpret: bool | None = None):
     """Fused candidate-local filtered top-k for a query batch.

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -1e30
+from repro.kernels.shapes import ID_SENTINEL, NEG, SCAN_BLOCK_ROWS
 
 
 def quantize_rows(vectors: jax.Array):
@@ -42,7 +42,7 @@ def _kernel(q_ref, vec_ref, scale_ref, scal_ref, lo_ref, hi_ref, act_ref,
     for j in range(k):
         m = jnp.max(s)
         is_max = (s >= m) & (s > NEG / 2)
-        first = jnp.min(jnp.where(is_max, gid, jnp.int32(2**30)))
+        first = jnp.min(jnp.where(is_max, gid, jnp.int32(ID_SENTINEL)))
         out_s_ref[0, j] = m
         out_i_ref[0, j] = jnp.where(m > NEG / 2, first, -1)
         s = jnp.where(gid == first, NEG, s)
@@ -50,7 +50,8 @@ def _kernel(q_ref, vec_ref, scale_ref, scal_ref, lo_ref, hi_ref, act_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
 def int8_topk_blocks(q, vec_i8, scales, scalars, lo, hi, active, n_rows, *,
-                     k: int, block_rows: int = 1024, interpret: bool = True):
+                     k: int, block_rows: int = SCAN_BLOCK_ROWS,
+                     interpret: bool = True):
     n, d = vec_i8.shape
     m = scalars.shape[1]
     assert n % block_rows == 0

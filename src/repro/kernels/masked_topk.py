@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -1e30
+from repro.kernels.shapes import ID_SENTINEL, NEG, SCAN_BLOCK_ROWS
 
 
 def _kernel(q_ref, vec_ref, scal_ref, lo_ref, hi_ref, act_ref, nrows_ref,
@@ -46,7 +46,7 @@ def _kernel(q_ref, vec_ref, scal_ref, lo_ref, hi_ref, act_ref, nrows_ref,
         m = jnp.max(s)
         # first row achieving the max (tie-break by smallest row id)
         is_max = (s >= m) & (s > NEG / 2)
-        first = jnp.min(jnp.where(is_max, gid, jnp.int32(2**30)))
+        first = jnp.min(jnp.where(is_max, gid, jnp.int32(ID_SENTINEL)))
         out_s_ref[0, j] = m
         out_i_ref[0, j] = jnp.where(m > NEG / 2, first, -1)
         s = jnp.where(gid == first, NEG, s)
@@ -55,8 +55,8 @@ def _kernel(q_ref, vec_ref, scal_ref, lo_ref, hi_ref, act_ref, nrows_ref,
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "metric",
                                              "interpret"))
 def masked_topk_blocks(q, vectors, scalars, lo, hi, active, n_rows, *,
-                       k: int, block_rows: int = 1024, metric: str = "dot",
-                       interpret: bool = True):
+                       k: int, block_rows: int = SCAN_BLOCK_ROWS,
+                       metric: str = "dot", interpret: bool = True):
     """-> (block_scores (nb, k), block_ids (nb, k)). Inputs must be padded to
     a multiple of block_rows (ops.py handles padding + the final merge)."""
     n, d = vectors.shape

@@ -13,8 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels.int8_scan import int8_topk_blocks, quantize_rows  # noqa: F401
 from repro.kernels.masked_topk import masked_topk_blocks
-
-NEG = -1e30
+from repro.kernels.shapes import NEG, SCAN_BLOCK_ROWS
 
 
 def _default_interpret() -> bool:
@@ -50,7 +49,7 @@ def _merge(block_s, block_i, k):
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "metric",
                                              "interpret"))
 def masked_topk(q, vectors, scalars, lo, hi, active, *, k: int,
-                block_rows: int = 1024, metric: str = "dot",
+                block_rows: int = SCAN_BLOCK_ROWS, metric: str = "dot",
                 interpret: bool | None = None):
     """Fused filtered top-k over the whole table.
     -> (scores (k,), ids (k,), valid (k,))."""
@@ -68,7 +67,8 @@ def masked_topk(q, vectors, scalars, lo, hi, active, *, k: int,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
 def int8_masked_topk(q, vec_i8, scales, scalars, lo, hi, active, *, k: int,
-                     block_rows: int = 1024, interpret: bool | None = None):
+                     block_rows: int = SCAN_BLOCK_ROWS,
+                     interpret: bool | None = None):
     """Quantized fused filtered top-k.
     -> (scores (k,), ids (k,), valid (k,))."""
     if interpret is None:

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-NEG = -1e30
+from repro.kernels.shapes import NEG
 
 
 def masked_topk_ref(q, vectors, scalars, lo, hi, active, n_rows, *, k: int,

@@ -1,0 +1,78 @@
+"""Single source of truth for kernel tile/block shapes and sentinels.
+
+Every Pallas kernel in this package *and* the boomlint PL001 VMEM
+estimator (``repro.analysis``) read these constants, so the static
+analyzer can never disagree with what the kernels actually launch. If a
+tile shape changes here, the estimator budget check moves with it; if a
+kernel grows a new scratch buffer, add it to the matching ``*_tile_bytes``
+function in the same commit.
+
+The byte estimators model resident VMEM per grid step: the row/candidate
+tile plus the operands whose index_map pins them to block 0 (query,
+predicate bounds). They deliberately ignore compiler-managed double
+buffering — the budget (``DEFAULT_VMEM_BUDGET``) leaves headroom for it.
+"""
+from __future__ import annotations
+
+# Score sentinel for masked-out / padded rows and the id sentinel used by
+# the k-round knockout select (any value > max row count works; 2**30
+# keeps int32 arithmetic safe).
+NEG = -1e30
+ID_SENTINEL = 2**30
+
+# Row tile for the full-scan kernels (masked_topk, int8_scan). 1024 rows ×
+# 768 dims × 4 B ≈ 3.2 MB resident — comfortable inside 16 MB VMEM with
+# dims aligned to the 128-lane MXU.
+SCAN_BLOCK_ROWS = 1024
+
+# Candidate tile for the gather+score kernel (gather_score). 256 gathered
+# rows per step bounds the per-column scratch to block_s·d·4 B.
+GATHER_BLOCK_S = 256
+
+# Declared support envelope — the largest shapes the serving kernels are
+# expected to launch with. The PL001 trace-level check evaluates the
+# estimators at this envelope against the budget.
+MAX_COL_DIM = 768  # widest single vector column
+MAX_VEC_COLS = 4  # most vector columns per table
+MAX_SCALARS = 16  # most scalar predicate columns
+MAX_TOPK = 128  # largest static k a kernel is launched with
+
+# Conservative per-step budget: 16 MB physical VMEM minus headroom for
+# Mosaic double buffering and spills.
+DEFAULT_VMEM_BUDGET = 12 * 2**20
+
+_F32 = 4
+
+
+def scan_tile_bytes(dim: int, n_scalars: int, *, k: int = MAX_TOPK,
+                    block_rows: int = SCAN_BLOCK_ROWS) -> int:
+    """Resident bytes per grid step of ``masked_topk_blocks``:
+    (block_rows, dim) f32 vector tile + (block_rows, n_scalars) f32 scalar
+    tile + pinned query/lo/hi/active rows + (1, k) output pools."""
+    tile = block_rows * (dim + n_scalars) * _F32
+    pinned = (dim + 3 * n_scalars + 1) * _F32
+    out = 2 * k * _F32
+    return tile + pinned + out
+
+
+def int8_scan_tile_bytes(dim: int, n_scalars: int, *, k: int = MAX_TOPK,
+                         block_rows: int = SCAN_BLOCK_ROWS) -> int:
+    """Like ``scan_tile_bytes`` but the vector tile is int8 with a per-row
+    f32 dequant scale column."""
+    tile = block_rows * (dim + (1 + n_scalars) * _F32)
+    pinned = (dim + 3 * n_scalars + 1) * _F32
+    out = 2 * k * _F32
+    return tile + pinned + out
+
+
+def gather_tile_bytes(dims: tuple, n_scalars: int, n_clauses: int, *,
+                      k: int = MAX_TOPK,
+                      block_s: int = GATHER_BLOCK_S) -> int:
+    """Resident bytes per grid step of ``gather_score_blocks``: one
+    (block_s, d_i) f32 VMEM scratch per vector column + the gathered
+    (block_s, n_scalars) scalar tile + pinned per-query operands."""
+    scratch = block_s * sum(dims) * _F32
+    scal = block_s * n_scalars * _F32
+    pinned = (sum(dims) + n_clauses * (2 * n_scalars + 1) + block_s) * _F32
+    out = 2 * k * _F32
+    return scratch + scal + pinned + out

@@ -34,6 +34,15 @@ _DTYPE_BYTES = {
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+# opcodes that move data across the device/host boundary: explicit
+# transfers (outfeed/infeed), point-to-point sends (host or cross-replica),
+# and host-offloaded custom calls
+HOST_TRANSFER_OPS = ("outfeed", "infeed", "send", "recv", "send-done",
+                     "recv-done")
+# S(5) is XLA's host memory space annotation (memory offloading / host
+# layouts); a copy to/from it is a device<->host transfer
+_HOST_SPACE_RE = re.compile(r"S\(5\)")
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\(")
 _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
@@ -242,3 +251,45 @@ def analyze(text: str) -> dict:
         "collective_counts": {k: cc.get(k, 0) for k in COLLECTIVES},
         "unknown_trip_whiles": unknown_trips,
     }
+
+
+def host_transfers(text: str) -> dict:
+    """Count device<->host transfer instructions in optimized HLO text.
+
+    Returns ``{"count": n, "ops": {opcode: n}, "host_space_copies": n}`` —
+    serving kernels must report zero (boomlint CM001 gates on it): a
+    transfer in compiled serving HLO means some value round-trips the host
+    *inside* the kernel, the hazard class HS001 catches at the AST level.
+    ``custom-call`` targets naming host callbacks count too (that is how
+    ``pure_callback``/``io_callback`` lower)."""
+    ops: dict = {}
+    host_copies = 0
+    for line in text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        opcode = m.group(3)
+        if opcode in HOST_TRANSFER_OPS:
+            ops[opcode] = ops.get(opcode, 0) + 1
+        elif opcode == "custom-call" and "callback" in line:
+            ops["host-callback"] = ops.get("host-callback", 0) + 1
+        elif opcode in ("copy", "copy-start") and _HOST_SPACE_RE.search(m.group(2)):
+            host_copies += 1
+    return {"count": sum(ops.values()) + host_copies, "ops": ops,
+            "host_space_copies": host_copies}
+
+
+def comm_report(text: str, *, max_all_gathers: int | None = None) -> dict:
+    """Collective-budget view of ``analyze``: per-opcode counts/bytes plus
+    an over-budget verdict for the O(shards·k) merge contract (at most
+    ``max_all_gathers`` all-gathers, no other collectives)."""
+    a = analyze(text)
+    counts = a["collective_counts"]
+    others = {k: v for k, v in counts.items()
+              if k != "all-gather" and v > 0}
+    over = None
+    if max_all_gathers is not None:
+        over = counts.get("all-gather", 0) > max_all_gathers or bool(others)
+    return {"counts": counts, "bytes": a["collectives"],
+            "unexpected": others, "over_budget": over,
+            "host": host_transfers(text)}

@@ -49,7 +49,9 @@ from repro.core.executor import (
     EngineCaps, HybridExecutor, PGVECTOR, legalize_for_shard, plan_columns,
     recall_at_k, rerank_scored,
 )
-from repro.core.query import ExecutionPlan, MHQ
+from repro.core.query import (
+    ExecutionPlan, KMULT_GRID, MAX_SCAN_GRID, MHQ, NPROBE_GRID,
+)
 from repro.kernels.gather_score import gather_score_topk, merge_topk_unique
 from repro.vectordb import flat, histogram, ivf, predicates
 from repro.vectordb.distributed import (
@@ -208,6 +210,21 @@ class ScoringDispatcher:
         self.counts = {}
         self.decisions.clear()
         return counts, decisions
+
+
+# Registered static-shape vocabularies. Every shape-bearing static argument
+# a serving-path jit is called with must come from one of these grids, a
+# power-of-two ``next_bucket`` value, or one of the two floors below —
+# that bound on distinct shapes is what bounds compile count, and boomlint
+# (repro.analysis, rule RC001) checks call sites against this registry.
+K_BUCKET_FLOOR = 16  # smallest padded top-k bucket
+CANDIDATE_PAD_FLOOR = 64  # smallest padded candidate-slot bucket
+SHAPE_GRIDS = {
+    "clause": predicates.CLAUSE_GRID,
+    "nprobe": NPROBE_GRID,
+    "max_scan": MAX_SCAN_GRID,
+    "kmult": KMULT_GRID,
+}
 
 
 def next_bucket(n: int, floor: int = 1) -> int:
@@ -606,14 +623,14 @@ class BatchedHybridExecutor:
                 k_s, np_s, ms_s = legalize_for_shard(
                     k_i, np0, ms, n_shards=self.n_shards,
                     shard_len=sivf.shard_len, n_clusters=sivf.n_clusters)
-                ks = min(next_bucket(k_s, 16), ms_s)
+                ks = min(next_bucket(k_s, K_BUCKET_FLOOR), ms_s)
                 shard_subs.append((act.index(col), k_s, ks, np_s, ms_s))
                 total += k_s
             self._sivf_fns[fkey] = sharded_ivf_topk(
                 self.n_shards, self.mesh, self.shard_axes,
                 subs=tuple(shard_subs), k=k, n_cols=len(act),
                 metric=self.table.schema.metric,
-                pad_total=next_bucket(total, 64))
+                pad_total=next_bucket(total, CANDIDATE_PAD_FLOOR))
         return self._sivf_fns[fkey]
 
     def _run_chunk_sharded_ivf(self, key, qs: list[MHQ], part: list[int],
@@ -920,7 +937,7 @@ class BatchedHybridExecutor:
         """Concat per-column candidate ids and pad the union to a
         power-of-two bucket (-1 = empty slot)."""
         rows_b = jnp.concatenate(cand, axis=1)
-        total = next_bucket(rows_b.shape[1], 64)
+        total = next_bucket(rows_b.shape[1], CANDIDATE_PAD_FLOOR)
         if total > rows_b.shape[1]:
             rows_b = jnp.pad(rows_b, ((0, 0), (0, total - rows_b.shape[1])),
                              constant_values=-1)
@@ -943,7 +960,7 @@ class BatchedHybridExecutor:
         size."""
         t, index = self.table, self.indexes[col]
         cap = min(index.n_clusters, self.engine.nprobe_cap)
-        ks = min(next_bucket(k_i, 16), max_scan)
+        ks = min(next_bucket(k_i, K_BUCKET_FLOOR), max_scan)
 
         def probe(np_, pred, qb, rs):
             if local:
@@ -961,6 +978,8 @@ class BatchedHybridExecutor:
         if not iterative:
             return ids
         done = np.asarray(n_qual) >= k_i  # ONE host sync per group round
+        # boomlint: ignore[HS001] `done` is already a host-side numpy mask
+        # (transferred once above) — this bool() costs no device sync
         while not bool(done.all()) and nprobe < cap:
             nprobe = min(2 * nprobe, cap)
             sel = np.flatnonzero(~done)
@@ -969,6 +988,10 @@ class BatchedHybridExecutor:
             ids2, nq2 = probe(nprobe, pred_sub, q_b[sel_p],
                               rs_b[sel_p] if rs_b is not None else None)
             ids = ids.at[jnp.asarray(sel)].set(ids2[: len(sel), :k_i])
+            # boomlint: ignore[HS001] one sync per re-expansion round is
+            # the iterative contract (the round count is the doubling
+            # ladder, not the batch size — same shape as
+            # HybridExecutor._subquery)
             done[sel] = np.asarray(nq2)[: len(sel)] >= k_i
         return ids
 

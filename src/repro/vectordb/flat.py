@@ -16,10 +16,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.shapes import GATHER_BLOCK_S, NEG
 from repro.vectordb.predicates import PredicateLike, eval_mask
 from repro.vectordb.table import Table
-
-NEG = -1e30
 
 
 @partial(jax.jit, static_argnames=("k", "max_candidates", "n_vec", "metric"))
@@ -93,7 +92,7 @@ def filter_first_local_batch(
     metric: str = "dot",
     use_kernel: bool | None = None,
     interpret: bool | None = None,
-    block_s: int = 256,
+    block_s: int = GATHER_BLOCK_S,
 ):
     """Candidate-local batched ``filter_first``: evaluate the predicate over
     all rows per query, then ONE fused gather+score+top-k

@@ -19,10 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.shapes import GATHER_BLOCK_S, NEG
 from repro.vectordb.predicates import PredicateLike, eval_mask
 from repro.vectordb.table import similarity
-
-NEG = -1e30
 
 
 @jax.tree_util.register_pytree_node_class
@@ -296,7 +295,7 @@ def search_local_batch(
     k: int,
     use_kernel: bool | None = None,
     interpret: bool | None = None,
-    block_s: int = 256,
+    block_s: int = GATHER_BLOCK_S,
 ):
     """Candidate-local batched variant of ``search_scored``: no dense (B, n)
     score matrix is ever built. Candidate slots are selected per query (the

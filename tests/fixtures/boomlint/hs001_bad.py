@@ -1,0 +1,44 @@
+"""Seeded HS001 violations: host syncs on traced values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def item_in_jit(x):
+    s = jnp.sum(x)
+    return s.item()  # HS001: .item() on a traced value
+
+
+@jax.jit
+def coerce_in_jit(x):
+    t = jnp.max(x)
+    return x / float(t)  # HS001: float() of a traced value
+
+
+@jax.jit
+def branch_in_jit(x):
+    m = jnp.mean(x)
+    if m > 0:  # HS001: truthiness of a traced value
+        return x - m
+    return x
+
+
+@jax.jit
+def asarray_in_jit(x):
+    y = x * 2
+    return np.asarray(y)  # HS001: np call on a traced value
+
+
+def hot_loop(batches):
+    # qualname-matched hot function (configured in the test)
+    out = []
+    for b in batches:
+        out.append(int(b.sum()))  # HS001: coercion inside a loop
+    return out
+
+
+def hot_duplicate(ids):
+    a = np.asarray(ids)
+    b = np.asarray(ids)  # HS001: repeated transfer of the same value
+    return a, b

@@ -1,0 +1,61 @@
+"""Clean twin of hs001_bad: the same shapes of code, no host syncs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def sum_stays_on_device(x):
+    return jnp.sum(x)
+
+
+@jax.jit
+def scale_on_device(x):
+    t = jnp.max(x)
+    return x / t  # stays traced — no coercion
+
+
+@jax.jit
+def branch_with_where(x):
+    m = jnp.mean(x)
+    return jnp.where(m > 0, x - m, x)  # lax-level select, no sync
+
+
+@jax.jit
+def shape_reads_are_static(x):
+    n = x.shape[0]  # static metadata — never a transfer
+    return x * float(n)  # float() of a static int is host arithmetic
+
+
+def hot_loop_hoisted(batches):
+    sums = np.asarray(jnp.stack([b.sum() for b in batches]))  # one transfer
+    return [int(s) for s in sums]  # host-side ints after the sync
+
+
+def hot_single_transfer(ids):
+    a = np.asarray(ids)
+    return a, a  # reuse the host value
+
+
+def hot_rebound(run, ids):
+    a = np.asarray(ids)
+    ids = run(ids)  # rebound — the next transfer is a NEW value
+    b = np.asarray(ids)
+    return a, b
+
+
+def hot_lazy_memo(mask, estimated):
+    n_qual = None
+    if not estimated:
+        n_qual = np.asarray(jnp.sum(mask, axis=1))
+    if n_qual is None:  # memo guard: at most one of the two sites runs
+        n_qual = np.asarray(jnp.sum(mask, axis=1))
+    return n_qual
+
+
+def hot_exclusive_branches(mask, fast):
+    if fast:
+        n_qual = np.asarray(jnp.sum(mask, axis=1))
+    else:
+        n_qual = np.asarray(jnp.sum(mask, axis=1))  # other arm — one runs
+    return n_qual

@@ -1,0 +1,20 @@
+"""Seeded PL001 violation: literal Pallas tile shapes over the VMEM budget."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, scratch):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def big_tile(x):
+    # PL001: 4096×1024 f32 tile + matching scratch = 32 MiB of VMEM
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((4096, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((4096, 1024), jnp.float32)],
+    )(x)

@@ -1,0 +1,20 @@
+"""Clean twin of pl001_bad: tiles sized inside the VMEM budget."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, scratch):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def small_tile(x):
+    # 1024×256 f32 tile + scratch = 2 MiB — well inside the budget
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec((1024, 256), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1024, 256), lambda i: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1024, 256), jnp.float32)],
+    )(x)

@@ -1,0 +1,21 @@
+"""Seeded RC001 violations: recompile hazards at jitted entry points."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "mode"))
+def topk_static(x, *, k, mode="dot"):
+    return jax.lax.top_k(x, k)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("kk",))
+def misnamed_static(x, *, k=4):  # RC001: 'kk' names no parameter
+    return x * k
+
+
+def caller(x):
+    a = topk_static(x, k=48)  # RC001: 48 is no grid value / pow2 bucket
+    b = topk_static(x, k=[4])  # RC001: unhashable list as static arg
+    return a, b

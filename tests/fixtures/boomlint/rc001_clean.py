@@ -1,0 +1,16 @@
+"""Clean twin of rc001_bad: static args drawn from registered buckets."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k", "mode"))
+def topk_static(x, *, k, mode="dot"):
+    return jax.lax.top_k(x, k)[0]
+
+
+def caller(x, k_runtime):
+    a = topk_static(x, k=16)  # pow2 bucket — bounded compile set
+    b = topk_static(x, k=32, mode="dot")  # registered grid value
+    c = topk_static(x, k=k_runtime)  # a variable: bucketing happened
+    return a, b, c

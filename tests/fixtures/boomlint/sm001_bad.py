@@ -1,0 +1,23 @@
+"""Seeded SM001 violation: shard_map body closing over the full table."""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def sharded_scores(mesh, table, queries):
+    def local(q):
+        # SM001: `table` is captured, not passed through in_specs — it
+        # replicates to every device instead of being sharded
+        return q @ table.T
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"))(queries)
+
+
+def sharded_gather(mesh, vectors, idx):
+    def local(i):
+        return vectors[i]  # SM001: captured array subscripted in the body
+
+    return shard_map(local, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"))(idx)

@@ -1,0 +1,24 @@
+"""Suppression fixture: every violation carries a boomlint ignore."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def item_suppressed_inline(x):
+    s = jnp.sum(x)
+    return s.item()  # boomlint: ignore[HS001] fixture: intentional sync
+
+
+@jax.jit
+def item_suppressed_standalone(x):
+    s = jnp.sum(x)
+    # boomlint: ignore[HS001] fixture: standalone comment covers the
+    # next code line even across continued comment lines
+    return s.item()
+
+
+@jax.jit
+def item_not_suppressed(x):
+    s = jnp.sum(x)
+    # boomlint: ignore[RC001] wrong rule id — HS001 still fires here
+    return s.item()

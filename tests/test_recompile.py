@@ -1,0 +1,85 @@
+"""Recompile regression: a warmed serving engine never recompiles.
+
+The shape-bucketing discipline (CLAUSE_GRID / NPROBE_GRID / MAX_SCAN_GRID /
+KMULT_GRID, pow-of-two k and candidate buckets — serve/batch.SHAPE_GRIDS)
+exists so the jit cache is keyed on a FINITE set of shapes. These tests pin
+that contract at runtime, complementing boomlint's static RC001 rule: push
+a mixed 32-query batch (conjunctive + DNF, 1- and 2-vector) through
+optimize_batch + execute_batch twice and count XLA compilations.
+
+* pass 2 (same engine, same queries): exactly zero compiles;
+* pass 1 (cold paths for a fresh workload): bounded by a grid-derived
+  ceiling — un-bucketing any shape makes the count scale with the batch
+  (32 novel keys × per-group pipeline jits) and blows through it.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.recompile import CompileCounter, supported
+
+# measured ~126 cold compiles for this exact workload; the ceiling leaves
+# ~60% headroom for jax-version drift while staying far below the
+# per-query blowup an un-bucketed shape causes (32 × ~12 jits ≈ 380+)
+FIRST_PASS_CEILING = 200
+
+
+@pytest.fixture(scope="module")
+def mixed_batch(fitted):
+    from repro.bench import queries
+
+    bq, _holdout = fitted
+    conj = queries.gen_workload(bq.table, 20, n_vec_used=2, seed=7)
+    dnf = queries.gen_dnf_workload(bq.table, 12, n_vec_used=2, seed=8)
+    qs = conj + dnf
+    assert len(qs) == 32
+    return bq, qs
+
+
+@pytest.mark.slow
+def test_warm_engine_never_recompiles(mixed_batch):
+    if not supported():
+        pytest.skip("this jax version emits no countable compile logs")
+    bq, qs = mixed_batch
+
+    with CompileCounter() as first:
+        bq.optimize_batch(qs)
+        res1 = bq.execute_batch(qs)
+    assert first.count <= FIRST_PASS_CEILING, (
+        f"{first.count} compiles on the first pass — a shape escaped the "
+        f"bucketing grids; last compiles: {first.names[-8:]}")
+
+    with CompileCounter() as second:
+        bq.optimize_batch(qs)
+        res2 = bq.execute_batch(qs)
+    assert second.count == 0, (
+        f"{second.count} recompiles on a warmed engine: {second.names}")
+
+    # determinism rides along: identical passes, identical results
+    for (i1, s1), (i2, s2) in zip(res1, res2):
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+
+
+@pytest.mark.slow
+def test_permuted_replay_converges(mixed_batch):
+    """A PERMUTED replay may re-chunk the batch (chunk membership is
+    order-dependent) and so touch a handful of new pad buckets — but the
+    count must stay grid-bounded (not per-query), and replaying the same
+    permutation must then be compile-free: the cache converges instead of
+    thrashing."""
+    if not supported():
+        pytest.skip("this jax version emits no countable compile logs")
+    bq, qs = mixed_batch
+    bq.execute_batch(qs)  # ensure warm (module fixture order-independent)
+    rng = np.random.default_rng(3)
+    perm = [qs[i] for i in rng.permutation(len(qs))]
+    with CompileCounter() as cc:
+        bq.optimize_batch(perm)
+        bq.execute_batch(perm)
+    assert cc.count <= FIRST_PASS_CEILING // 4, (
+        f"permuted replay compiled {cc.count}× — bucket keys are leaking "
+        f"per-order shapes: {cc.names[-8:]}")
+    with CompileCounter() as again:
+        bq.optimize_batch(perm)
+        bq.execute_batch(perm)
+    assert again.count == 0, f"replay did not converge: {again.names}"
