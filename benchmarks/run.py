@@ -25,6 +25,7 @@ BENCHES = {
     "fig4": multi_vector.run,
     "fig5": weight_skew.run,
     "fig6": data_updates.run,
+    "tiered": data_updates.run_mixed,
     "sec54": cross_engine.run,
     "fig7": ablation.run,
     "kernels": kernels_bench.run,

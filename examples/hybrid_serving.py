@@ -8,11 +8,17 @@ query — with running QPS/recall accounting and a mid-stream data insert
 (the paper's update scenario). The first batch is also served through the
 old per-query loop so the dispatch win is visible.
 
-The final stage switches to LIVE traffic: the table is sharded
+Later stages switch to LIVE traffic: the table is sharded
 (``bind_shards``) and a Poisson request stream flows through the async
 deadline-aware engine — requests queue, batches cut when full or when the
 oldest request ages out, each batch fans out across the shards, and every
 request resolves with an ok/timed-out disposition plus its latency.
+
+The final stage is STREAMING INGEST (``bind_tiered``,
+docs/tiered_ingest.md): inserts land in a bounded writable hot segment in
+front of the sealed cold IVF state, queries merge both tiers under one
+epoch-swapped snapshot, and a background compaction folds hot rows cold
+mid-stream with zero serving pauses.
 
   PYTHONPATH=src python examples/hybrid_serving.py
 """
@@ -139,6 +145,46 @@ def main():
     print(f"  [sharded-IVF learned, {n_shards} shards] {rep4.describe()}")
     assert rep4.path_counts and "sharded_local" in rep4.path_counts
     bq.bind_cost_model()  # restore the calibrated three-way routing
+
+    # -- streaming ingest: the tiered hot/cold table ----------------------
+    # The inserts above were the legacy EAGER path: every insert regrouped
+    # the indexes and rebuilt the executor before returning. bind_tiered
+    # switches to the LSM-style tiered table (docs/tiered_ingest.md):
+    # inserts append to a bounded writable hot segment — visible to the
+    # very next batch, scored exactly, candidate-locally — and a full
+    # segment is folded into the cold IVF state by a BACKGROUND compaction
+    # that publishes via an epoch-swapped snapshot. Serving never pauses:
+    # every batch executes against the immutable snapshot stamped on it at
+    # cut time, so an epoch swap mid-flight cannot mix row-id spaces.
+    bq.bind_shards(1).bind_cost_model()
+    bq.bind_tiered(hot_capacity=512)
+    rng = np.random.default_rng(9)
+    n_live = 700  # > hot capacity: forces a mid-stream background compaction
+    lvecs = [np.asarray(v[:n_live]) + 0.05 * rng.normal(
+        size=(n_live, v.shape[1])).astype(np.float32)
+        for v in bq.table.vectors]
+    lscal = np.asarray(bq.table.scalars[:n_live])
+
+    async def ingest_while_serving():
+        eng = AsyncServingEngine(bq, batch_size=12, max_wait=0.02)
+        async with eng:
+            tasks = [asyncio.ensure_future(eng.submit(q)) for q in live]
+            # mid-stream: fills the hot segment; the engine's
+            # CompactionScheduler folds it cold on its own worker thread
+            await asyncio.get_running_loop().run_in_executor(
+                None, bq.insert, lvecs, lscal)
+            await asyncio.gather(*tasks)
+        return eng
+
+    eng5 = asyncio.run(ingest_while_serving())
+    rep5 = eng5.report()
+    print(f"  [tiered streaming ingest] {rep5.describe()}")
+    assert rep5.n_compactions >= 1 and rep5.n_timed_out == 0
+    snap = bq.tiered.snapshot()
+    print(f"  epoch {snap.epoch}: {snap.cold.table.n_rows} cold + "
+          f"{snap.n_hot} hot rows, "
+          f"encoder staleness {bq.tiered.encoder_staleness():.3f}")
+    bq.unbind_tiered()  # folds any remaining hot rows, back to build-once
 
 
 if __name__ == "__main__":

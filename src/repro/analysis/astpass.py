@@ -1,4 +1,4 @@
-"""Level-1 AST rules: HS001, RC001, SM001, PL001 (literal shapes).
+"""Level-1 AST rules: HS001, RC001, SM001, PL001 (literal shapes), EP001.
 
 The pass builds a per-module picture of which functions run under a JAX
 trace (decorated with jit/vmap, wrapped at a call site, passed to
@@ -160,6 +160,8 @@ class ModuleLint:
                 self._scan_traced(fn, inherited=frozenset())
             elif not getattr(fn, "_bl_traced", False) and self._is_hot(fn):
                 self._scan_hot(fn)
+            if self._is_hot(fn):
+                self._check_ep001(fn)
         self._check_rc001()
         for call, body in self._shard_map_calls:
             self._check_sm001(call, body)
@@ -593,6 +595,35 @@ class ModuleLint:
                     break
                 if done:
                     break
+
+    # -- EP001: epoch-consistency of tiered reads ---------------------------
+
+    def _check_ep001(self, fn):
+        """Serving hot paths must read tiered ingest state through ONE
+        ``snapshot()`` taken at batch-formation time. A direct read of a
+        mutable ``TieredTable`` field (``_hot``/``_cold``/``_sealing``/...)
+        can observe a DIFFERENT epoch than the rest of the batch when a
+        background compaction swaps mid-flight — mixed-epoch row ids are
+        silently wrong, not crashes. The detector is textual by design: any
+        attribute access whose base expression mentions ``tiered`` and
+        whose attr is a registered mutable field."""
+        banned = set(self.cfg.tiered_mutable_fields)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Attribute) or \
+                    self._owner_fn(node) is not fn:
+                continue
+            if node.attr not in banned:
+                continue
+            base = ast.unparse(node.value)
+            if "tiered" not in base:
+                continue
+            self._emit(
+                "EP001", node,
+                f"hot function `{_qualname(fn)}` reads mutable tiered "
+                f"state `{base}.{node.attr}` directly — a background "
+                f"compaction can swap the epoch mid-batch and mix row-id "
+                f"spaces; take one `tiered.snapshot()` at batch formation "
+                f"and read `(epoch, cold, hot_views)` from it")
 
     @staticmethod
     def _assign_targets(node) -> set:

@@ -18,6 +18,15 @@ DEFAULT_HOT_FUNCTIONS = (
     ("core/boomhq.py", "BoomHQ.execute_batch"),
     ("core/boomhq.py", "BoomHQ.optimize"),
     ("core/boomhq.py", "BoomHQ.optimize_batch"),
+    ("core/boomhq.py", "BoomHQ._merge_hot"),
+    ("core/boomhq.py", "BoomHQ._execute_batch_sharded"),
+)
+
+# EP001: TieredTable fields that hold the MUTABLE ingest state. Serving hot
+# paths must never read these directly — every epoch-consistent view comes
+# from ONE tiered.snapshot() call taken at batch-formation time.
+DEFAULT_TIERED_MUTABLE_FIELDS = (
+    "_hot", "_cold", "_sealing", "_snap", "_epoch", "_compacting",
 )
 
 # Fallback shape vocabulary used only when the live registries cannot be
@@ -69,6 +78,8 @@ class LintConfig:
     max_all_gathers: int = 2
     # hot host functions for HS001 scope B: (path suffix, qualname glob)
     hot_functions: tuple = DEFAULT_HOT_FUNCTIONS
+    # EP001: mutable TieredTable fields banned from hot-path reads
+    tiered_mutable_fields: tuple = DEFAULT_TIERED_MUTABLE_FIELDS
     # run the level-2 trace checks (CLI --no-trace disables)
     trace: bool = True
     # report suppressed findings too (debugging)

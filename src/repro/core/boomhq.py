@@ -73,6 +73,9 @@ class BoomHQ:
         self.n_shards = 1  # cross-shard serving config (bind_shards)
         self.shard_mesh = None
         self.cost_model = None  # scoring-dispatch override (bind_cost_model)
+        self.tiered = None  # streaming-ingest config (bind_tiered)
+        self._compactor = None  # background scheduler (serve attaches one)
+        self._tiered_finetune = True
 
     # -- offline -------------------------------------------------------------
 
@@ -229,7 +232,7 @@ class BoomHQ:
                 plan = dataclasses.replace(plan, strategy="index_scan")
         return plan
 
-    def _plan_local(self, b: int) -> bool:
+    def _plan_local(self, b: int, cold=None) -> bool:
         """Should batch planning skip the dense score GEMMs?
 
         The batched optimizer's only dense-score consumer is the pre-probe
@@ -241,9 +244,11 @@ class BoomHQ:
         are never built unless an execution group later asks for them."""
         from repro.serve.batch import CANDIDATE_LOCAL, CostModel, next_bucket
         cm = self.cost_model if self.cost_model is not None else CostModel()
-        n = self.table.n_rows
+        t = self.table if cold is None else cold.table
+        idxs = self.indexes if cold is None else cold.indexes
+        n = t.n_rows
         scan = 0
-        for idx in self.indexes:
+        for idx in idxs:
             if self.qenc is not None:
                 scan += ivf.probe_scan_budget(
                     idx.n_clusters, n, nprobe=self.qenc.probe_nprobe,
@@ -251,12 +256,13 @@ class BoomHQ:
             else:
                 scan += min(n, self.engine.default_max_scan)
         return cm.choose(batch=next_bucket(max(1, b)), scan=max(1, scan),
-                         n_rows=n * max(1, len(self.indexes))) \
+                         n_rows=n * max(1, len(idxs))) \
             == CANDIDATE_LOCAL
 
     def optimize_batch(self, qs: list[MHQ], *,
                        scores_b: Optional[tuple] = None,
-                       dense: Optional[bool] = None) -> list[ExecutionPlan]:
+                       dense: Optional[bool] = None,
+                       cold=None) -> list[ExecutionPlan]:
         """Plan a whole batch with ONE fused jit call and ONE host sync:
         the per-query feature + head pipeline vmapped over the query axis
         (batch padded to a power-of-two bucket so the jit cache stays
@@ -266,19 +272,28 @@ class BoomHQ:
         run once per batch. ``dense=None`` auto-picks: when the scoring
         cost model says the table is past the dense crossover (and no
         matrices were passed in), planning runs the UNSCORED pre-probe
-        pipeline instead and no (B, n) matrix is ever built."""
+        pipeline instead and no (B, n) matrix is ever built.
+
+        ``cold`` — an optional epoch's ``tiered.ColdState``: planning reads
+        THAT epoch's table/indexes/histograms (the snapshot a formed batch
+        carries) instead of the façade's fields, so plans stay consistent
+        with the data the batch will actually execute against."""
         if not qs:
             return []
         if not self._fitted:
             return [default_plan(q.n_vec, self.engine) for q in qs]
+        t = self.table if cold is None else cold.table
+        idxs = self.indexes if cold is None else list(cold.indexes)
+        hs = self.hists if cold is None else cold.hists
         if dense is None:
-            dense = scores_b is not None or not self._plan_local(len(qs))
+            dense = scores_b is not None or not self._plan_local(
+                len(qs), cold)
         if dense:
             if getattr(self, "_plan_batch_jit", None) is None:
                 self._build_plan_batch_jit()
             from repro.serve.batch import compute_batch_scores
             if scores_b is None:
-                scores_b = compute_batch_scores(self.table, qs)
+                scores_b = compute_batch_scores(t, qs)
         elif getattr(self, "_plan_batch_local_jit", None) is None:
             self._build_plan_batch_jit(scored=False)
         from repro.serve.batch import next_bucket
@@ -290,10 +305,10 @@ class BoomHQ:
         from repro.vectordb import predicates
         pred_b = predicates.stack([q.predicates for q in qpad])
         qv_b = tuple(jnp.stack([q.query_vectors[i] for q in qpad])
-                     for i in range(self.table.schema.n_vec))
+                     for i in range(t.schema.n_vec))
         args = (
-            self.rewriter.params, de_args, self.qenc._edges, self.hists,
-            tuple(self.indexes), tuple(self.table.vectors), self.table.scalars,
+            self.rewriter.params, de_args, self.qenc._edges, hs,
+            tuple(idxs), tuple(t.vectors), t.scalars,
             qv_b, pred_b,
             jnp.asarray([q.weights for q in qpad], jnp.float32),
             jnp.asarray([float(np.log(q.k)) for q in qpad], jnp.float32),
@@ -347,6 +362,10 @@ class BoomHQ:
                          0, 0, 0, 0, 0)))
 
     def execute(self, q: MHQ):
+        if self.tiered is not None:
+            # tiered serving is snapshot-based and batch-shaped; a single
+            # query rides a one-element batch against one snapshot
+            return self.execute_batch([q])[0]
         ids, scores = self.executor.execute(q, self.optimize(q))
         # underfill safeguard: if the plan found fewer than k qualifying rows
         # (severe mis-prediction), escalate once to the robust default plan.
@@ -383,6 +402,64 @@ class BoomHQ:
         self._batched = None  # rebind the executor with the new shard config
         return self
 
+    def bind_tiered(self, hot_capacity: int = 1024, *,
+                    rebuild_every: int = 0,
+                    finetune: bool = True) -> "BoomHQ":
+        """Serve over a TIERED hot/cold table: subsequent ``insert`` calls
+        append to a bounded writable hot segment (scored exactly,
+        candidate-locally, as one extra merge source on every query) and
+        background compaction folds full segments into the cold IVF state
+        under an epoch-swapped snapshot — streaming ingest with zero
+        serving pauses (``vectordb.tiered``, docs/tiered_ingest.md).
+        Composes with ``bind_shards``/``bind_cost_model``: the cold tier
+        keeps the existing plan-driven (possibly sharded) probing paths.
+        ``rebuild_every=N`` makes every Nth compaction a full re-cluster
+        (the sealing step); ``finetune`` keeps the data encoder updating on
+        compacted rows. ``unbind_tiered()`` restores build-once serving."""
+        from repro.vectordb.tiered import TieredTable
+        self._tiered_finetune = finetune
+        self.tiered = TieredTable(
+            self.table, self.indexes, self.hists,
+            hot_capacity=hot_capacity, rebuild_every=rebuild_every,
+            finetune_cb=self._on_compaction)
+        return self
+
+    def unbind_tiered(self) -> "BoomHQ":
+        """Back to build-once serving. The façade's table/index fields were
+        kept in sync at every compaction, so the latest cold epoch stays
+        the serving state; un-compacted hot rows (if any) are folded in
+        through the legacy eager insert."""
+        t = self.tiered
+        self.tiered = None
+        self._compactor = None
+        if t is not None:
+            snap = t.snapshot()
+            for view in snap.hot_views:
+                if view.count:
+                    self.insert(
+                        [np.asarray(v)[: view.count] for v in view.vectors],
+                        np.asarray(view.scalars)[: view.count],
+                        finetune=self._tiered_finetune)
+        return self
+
+    def _on_compaction(self, cold, first_new: int, n_new: int) -> None:
+        """Compaction-thread callback (runs BEFORE the epoch publish):
+        finetune the data encoder on the newly cold rows, refresh the query
+        encoder, and keep the façade's offline fields tracking the latest
+        epoch. Serving never reads these mutable fields (EP001) — batches
+        in flight keep their snapshot."""
+        if self.data_encoder is not None and self._tiered_finetune:
+            self.data_encoder.update(
+                cold.table, np.arange(first_new, first_new + n_new))
+        if self.qenc is not None:
+            self.qenc = QueryEncoder(cold.table, list(cold.indexes),
+                                     cold.hists, self.data_encoder)
+        self.table = cold.table
+        self.indexes = list(cold.indexes)
+        self.hists = cold.hists
+        self.executor = HybridExecutor(cold.table, list(cold.indexes),
+                                       self.engine)
+
     def bind_cost_model(self, cost_model=None) -> "BoomHQ":
         """Override the scoring dispatcher's cost model (a
         ``serve.batch.CostModel`` — crossover ratio and/or a forced path)
@@ -396,7 +473,7 @@ class BoomHQ:
     def _sharded(self) -> bool:
         return self.n_shards > 1 or self.shard_mesh is not None
 
-    def execute_batch(self, queries: list[MHQ]) -> list:
+    def execute_batch(self, queries: list[MHQ], *, snapshot=None) -> list:
         """Batched analogue of execute(): one fused optimizer dispatch for
         the whole batch, grouped vmapped execution, then one batched
         underfill-escalation pass. Returns [(ids, scores)] per query.
@@ -407,51 +484,108 @@ class BoomHQ:
         each shard's own index), the exact per-shard dense scan, or the
         single-device path, with per-shard underfill escalation inside the
         probing route and the global cross-check of
-        ``_execute_batch_sharded`` on top."""
+        ``_execute_batch_sharded`` on top.
+
+        Over a TIERED table (``bind_tiered``) the whole batch executes
+        against ONE immutable ``(epoch, hot_view, cold_shards)`` snapshot —
+        ``snapshot`` when the batch former stamped one at cut time, else
+        taken here — so an epoch swap mid-batch can never mix states: the
+        cold side runs the unchanged plan-driven paths against the
+        snapshot's epoch and the hot segment merges in as one extra exact
+        candidate source (``_merge_hot``)."""
         if not queries:
             return []
         from repro.serve.batch import (
             MAX_BATCH_KERNEL, SLOT_BUDGET, compute_batch_scores, pow2_at_most,
         )
+        snap = None
+        if self.tiered is not None:
+            snap = snapshot if snapshot is not None else \
+                self.tiered.snapshot()
+        cold = snap.cold if snap is not None else None
+        t = self.table if cold is None else cold.table
         # bound the dense-score working set (batch · n_rows per column) the
         # same way the executor chunks do — large tables get sub-batches
         limit = pow2_at_most(max(1, min(
-            MAX_BATCH_KERNEL, SLOT_BUDGET // max(self.table.n_rows, 1))))
+            MAX_BATCH_KERNEL, SLOT_BUDGET // max(t.n_rows, 1))))
         if len(queries) > limit:
             out = []
             for s in range(0, len(queries), limit):
-                out.extend(self.execute_batch(queries[s: s + limit]))
+                out.extend(self.execute_batch(queries[s: s + limit],
+                                              snapshot=snap))
             return out
         # past the dense crossover the (B, n) similarity matrices are never
         # built: planning runs the unscored pre-probe pipeline and execution
         # groups gather only their candidate budgets (per-group dispatch can
         # still fall back to a per-chunk GEMM when a group wants dense)
-        plan_local = self._plan_local(len(queries))
+        plan_local = self._plan_local(len(queries), cold)
         scores_b = None if plan_local \
-            else compute_batch_scores(self.table, queries)
-        bx = self._batched_executor()
+            else compute_batch_scores(t, queries)
+        bx = self._batched_executor(cold)
         if self._sharded:
-            return self._execute_batch_sharded(queries, bx, scores_b)
-        plans = self.optimize_batch(queries, scores_b=scores_b,
-                                    dense=not plan_local)
-        results = bx.execute_batch(queries, plans, scores_b=scores_b)
+            results = self._execute_batch_sharded(queries, bx, scores_b,
+                                                  cold=cold)
+        else:
+            plans = self.optimize_batch(queries, scores_b=scores_b,
+                                        dense=not plan_local, cold=cold)
+            results = bx.execute_batch(queries, plans, scores_b=scores_b)
 
-        under = [j for j, (ids, _) in enumerate(results)
-                 if _n_valid(ids) < queries[j].k]
-        if under:
-            sub = np.asarray(under)
-            retry = bx.execute_batch(
-                [queries[j] for j in under],
-                [default_plan(queries[j].n_vec, self.engine) for j in under],
-                scores_b=tuple(s[sub] for s in scores_b)
-                if scores_b is not None else None)
-            for j, (ids2, s2) in zip(under, retry):
-                if _n_valid(ids2) > _n_valid(results[j][0]):
-                    results[j] = (ids2, s2)
+            under = [j for j, (ids, _) in enumerate(results)
+                     if _n_valid(ids) < queries[j].k]
+            if under:
+                sub = np.asarray(under)
+                retry = bx.execute_batch(
+                    [queries[j] for j in under],
+                    [default_plan(queries[j].n_vec, self.engine)
+                     for j in under],
+                    scores_b=tuple(s[sub] for s in scores_b)
+                    if scores_b is not None else None)
+                for j, (ids2, s2) in zip(under, retry):
+                    if _n_valid(ids2) > _n_valid(results[j][0]):
+                        results[j] = (ids2, s2)
+        if snap is not None and snap.hot_views:
+            results = self._merge_hot(results, queries, snap)
         return results
 
+    def _merge_hot(self, results, queries: list[MHQ], snap) -> list:
+        """Fold the snapshot's hot views into the cold results: ONE fused
+        exact gather-score over each bounded hot view plus ONE pass of the
+        existing O(shards·k) dedup merge (``merge_topk_unique``) — the hot
+        segment is just one more candidate source, with globally disjoint
+        row ids, so escalation and recall contracts survive unchanged. An
+        empty hot segment never reaches here (bit-for-bit cold parity)."""
+        from repro.kernels.shapes import NEG
+        from repro.serve.batch import K_BUCKET_FLOOR, next_bucket
+        from repro.vectordb import predicates, tiered
+        b = len(queries)
+        k_pad = next_bucket(max(K_BUCKET_FLOOR,
+                                max(q.k for q in queries)))
+        b_pad = next_bucket(b)
+        qpad = list(queries) + [queries[0]] * (b_pad - b)
+        n_vec = snap.cold.table.schema.n_vec
+        pred_b = predicates.stack([q.predicates for q in qpad])
+        qv_b = tuple(jnp.stack([q.query_vectors[i] for q in qpad])
+                     for i in range(n_vec))
+        w_b = jnp.asarray([q.weights for q in qpad], jnp.float32)
+        ids_np = [np.asarray(r[0], np.int32).ravel() for r in results]
+        sc_np = [np.asarray(r[1], np.float32).ravel() for r in results]
+        cold_ids = np.full((b_pad, k_pad), -1, np.int32)
+        cold_scores = np.full((b_pad, k_pad), np.float32(NEG), np.float32)
+        for j in range(b):
+            kk = min(ids_np[j].shape[0], k_pad)
+            cold_ids[j, :kk] = ids_np[j][:kk]
+            cold_scores[j, :kk] = sc_np[j][:kk]
+        views = tuple(tiered.view_args(v) for v in snap.hot_views)
+        m_ids, m_scores = tiered.merge_hot_batch(
+            jnp.asarray(cold_ids), jnp.asarray(cold_scores), views,
+            qv_b, w_b, pred_b, k=k_pad, metric=snap.cold.table.schema.metric)
+        m_ids = np.asarray(m_ids)
+        m_scores = np.asarray(m_scores)
+        return [(m_ids[j, : q.k], m_scores[j, : q.k])
+                for j, q in enumerate(queries)]
+
     def _execute_batch_sharded(self, queries: list[MHQ], bx,
-                               scores_b: tuple) -> list:
+                               scores_b: tuple, cold=None) -> list:
         """Plan-driven cross-shard execution + underfill escalation.
 
         The batch is planned by the learned optimizer exactly like the
@@ -464,7 +598,8 @@ class BoomHQ:
         through the single-shard exact filter-first (one extra grouped pass
         over only that subset) and the better-filled result wins — the
         same recall contract the single-shard learned path keeps."""
-        plans = self.optimize_batch(queries, scores_b=scores_b)
+        t = self.table if cold is None else cold.table
+        plans = self.optimize_batch(queries, scores_b=scores_b, cold=cold)
         results = bx.execute_batch_sharded(queries, plans,
                                            scores_b=scores_b)
         under = [j for j, (ids, _) in enumerate(results)
@@ -474,7 +609,7 @@ class BoomHQ:
             exact = [ExecutionPlan(
                 "filter_first",
                 tuple(SubqueryParams() for _ in range(queries[j].n_vec)),
-                max_candidates=self.table.n_rows) for j in under]
+                max_candidates=t.n_rows) for j in under]
             retry = bx.execute_batch(
                 [queries[j] for j in under], exact,
                 scores_b=tuple(s[sub] for s in scores_b)
@@ -484,15 +619,23 @@ class BoomHQ:
                     results[j] = (ids2, s2)
         return results
 
-    def _batched_executor(self):
+    def _batched_executor(self, cold=None):
+        """Executor bound to the serving state — the façade's fields, or a
+        snapshot's cold epoch when one is passed. Single-slot cache keyed
+        on table identity: batches execute in formation order, so an epoch
+        swap rebuilds once at the first post-swap batch and never
+        thrashes."""
         from repro.serve.batch import BatchedHybridExecutor
+        t = self.table if cold is None else cold.table
+        idxs = self.indexes if cold is None else list(cold.indexes)
+        hs = self.hists if cold is None else cold.hists
         if getattr(self, "_batched", None) is None \
-                or self._batched.table is not self.table:
+                or self._batched.table is not t:
             self._batched = BatchedHybridExecutor(
-                self.table, self.indexes, self.engine,
+                t, idxs, self.engine,
                 n_shards=self.n_shards, mesh=self.shard_mesh,
                 shard_axes=getattr(self, "shard_axes", ("data",)),
-                cost_model=self.cost_model, hists=self.hists)
+                cost_model=self.cost_model, hists=hs)
         return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):
@@ -511,6 +654,18 @@ class BoomHQ:
 
     def insert(self, vectors: list[np.ndarray], scalars: np.ndarray,
                *, finetune: bool = True) -> dict:
+        """Data updates. Tiered (``bind_tiered``): rows append to the hot
+        segment — visible to the next formed batch, exact-scored, never a
+        serving pause — and compaction (background when a scheduler is
+        attached, else deferred to the next ``compact()``) folds them cold,
+        finetuning the encoder per ``finetune``. Untiered: the legacy eager
+        path — extend indexes/histograms and rebuild the executor now."""
+        if self.tiered is not None:
+            self._tiered_finetune = finetune
+            stats = self.tiered.insert(vectors, scalars)
+            if stats["needs_compaction"] and self._compactor is not None:
+                self._compactor.maybe_schedule()
+            return stats
         first_new = self.table.n_rows
         self.table = self.table.append(vectors, scalars)
         self.indexes = [

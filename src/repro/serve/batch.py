@@ -1014,6 +1014,11 @@ class ServeReport:
     p99_ms: Optional[float] = None
     # per-group scoring-path dispatch counts ({"dense": .., "candidate_local": ..})
     path_counts: Optional[dict] = None
+    # tiered streaming ingest (vectordb/tiered.py): rows inserted, background
+    # hot→cold compactions completed, and the cold epoch at report time
+    n_inserted: int = 0
+    n_compactions: int = 0
+    epoch: int = 0
 
     def describe(self) -> str:
         rec = f", mean recall {self.mean_recall:.3f}" \
@@ -1025,9 +1030,11 @@ class ServeReport:
         if self.path_counts:
             paths = ", paths " + "/".join(
                 f"{name}×{cnt}" for name, cnt in sorted(self.path_counts.items()))
+        ingest = f", {self.n_inserted} inserted over {self.n_compactions} " \
+            f"compactions (epoch {self.epoch})" if self.n_inserted else ""
         return (f"{self.n_queries} queries in {self.seconds:.2f}s over "
                 f"{self.n_batches} batches ({self.qps:.1f} QPS{rec}{lat}{to}"
-                f"{paths})")
+                f"{paths}{ingest})")
 
 
 class ServingEngine:

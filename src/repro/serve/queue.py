@@ -30,6 +30,7 @@ from __future__ import annotations
 import asyncio
 import concurrent.futures
 import dataclasses
+import functools
 import time
 from typing import Callable, Optional
 
@@ -59,6 +60,10 @@ class ServeRequest:
     status: str = PENDING  # PENDING | OK | TIMED_OUT | FAILED
     result: Optional[tuple] = None  # (ids, scores) when status == OK
     done: float = 0.0
+    # tiered serving: the immutable (epoch, hot, cold) snapshot stamped on
+    # the whole batch at CUT time — every request in a batch shares one, so
+    # an epoch swap between formation and execution can never mix states
+    snapshot: Optional[object] = None
 
     @property
     def latency(self) -> float:
@@ -75,11 +80,15 @@ class BatchFormer:
     """
 
     def __init__(self, *, batch_size: int = 32, max_wait: float = 0.05,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 snapshot_fn: Optional[Callable[[], object]] = None):
         assert batch_size >= 1 and max_wait >= 0.0
         self.batch_size = batch_size
         self.max_wait = max_wait
         self.clock = clock
+        # tiered serving: called ONCE per cut; the returned snapshot is
+        # stamped on every request of the formed batch (snapshot-at-cut)
+        self.snapshot_fn = snapshot_fn
         self._pending: list[ServeRequest] = []
         self._seq = 0
 
@@ -129,6 +138,10 @@ class BatchFormer:
                 or flush):
             batch = self._pending[: self.batch_size]
             self._pending = self._pending[self.batch_size:]
+            if self.snapshot_fn is not None:
+                snap = self.snapshot_fn()  # snapshot-at-cut: one per batch
+                for r in batch:
+                    r.snapshot = snap
         return batch, expired
 
     def drain(self) -> list[ServeRequest]:
@@ -146,6 +159,39 @@ class BatchFormer:
             if r.deadline is not None:
                 t = min(t, r.deadline)
         return t
+
+
+class CompactionScheduler:
+    """Background hot→cold compaction — the same single-worker-thread
+    pattern ``AsyncServingEngine`` executes batches with, on its OWN pool
+    so a compaction can never delay a batch (and vice versa). At most one
+    compaction runs at a time; ``maybe_schedule()`` is cheap and safe to
+    call from any thread (the ingest path calls it on every insert that
+    fills the hot segment, the drainer nudges it between batches)."""
+
+    def __init__(self, tiered):
+        self.tiered = tiered
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._inflight: Optional[concurrent.futures.Future] = None
+        self.n_scheduled = 0
+
+    def maybe_schedule(self) -> bool:
+        """Submit one compaction if the hot segment needs it and none is
+        already in flight. Returns True when one was submitted."""
+        if self._inflight is not None and not self._inflight.done():
+            return False
+        if not self.tiered.needs_compaction():
+            return False
+        self._inflight = self._pool.submit(self.tiered.compact)
+        self.n_scheduled += 1
+        return True
+
+    def drain(self) -> None:
+        """Wait out the in-flight compaction and stop the worker."""
+        if self._inflight is not None:
+            self._inflight.result()
+            self._inflight = None
+        self._pool.shutdown(wait=True)
 
 
 class AsyncServingEngine:
@@ -176,6 +222,7 @@ class AsyncServingEngine:
         self._n_batches = 0
         self._t0: Optional[float] = None
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._compactor: Optional[CompactionScheduler] = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -186,6 +233,13 @@ class AsyncServingEngine:
             # order, and a late stop() flush can never race the drainer
             # into two concurrent execute_batch calls
             self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+            if getattr(self.bq, "tiered", None) is not None:
+                # snapshot-at-cut: every batch executes against one
+                # immutable (epoch, hot, cold) view, and compaction runs
+                # on its own worker so serving never pauses for it
+                self.former.snapshot_fn = self.bq.tiered.snapshot
+                self._compactor = CompactionScheduler(self.bq.tiered)
+                self.bq._compactor = self._compactor
             self._task = asyncio.get_running_loop().create_task(self._drain())
         return self
 
@@ -222,6 +276,13 @@ class AsyncServingEngine:
         # wait=False: do not block the event loop on a discarded batch
         self._pool.shutdown(wait=False, cancel_futures=True)
         self._pool = None
+        if self._compactor is not None:
+            # let the in-flight compaction land (it owns published state)
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._compactor.drain)
+            if getattr(self.bq, "_compactor", None) is self._compactor:
+                self.bq._compactor = None
+            self._compactor = None
 
     async def __aenter__(self) -> "AsyncServingEngine":
         return await self.start()
@@ -251,6 +312,8 @@ class AsyncServingEngine:
 
     async def _drain(self) -> None:
         while True:
+            if self._compactor is not None:
+                self._compactor.maybe_schedule()
             batch, expired = self.former.poll()
             self._resolve_expired(expired)
             if batch:
@@ -267,8 +330,15 @@ class AsyncServingEngine:
 
     async def _execute(self, batch: list[ServeRequest]) -> None:
         loop = asyncio.get_running_loop()
-        exec_fut = loop.run_in_executor(
-            self._pool, self.bq.execute_batch, [r.query for r in batch])
+        queries = [r.query for r in batch]
+        if batch[0].snapshot is not None:
+            # the whole batch shares the snapshot stamped at cut time —
+            # an epoch swap landing mid-flight cannot change what it sees
+            run = functools.partial(
+                self.bq.execute_batch, queries, snapshot=batch[0].snapshot)
+        else:
+            run = functools.partial(self.bq.execute_batch, queries)
+        exec_fut = loop.run_in_executor(self._pool, run)
         try:
             results = await asyncio.shield(exec_fut)
         except asyncio.CancelledError:
@@ -330,6 +400,7 @@ class AsyncServingEngine:
         if gt_ids is not None:
             recalls = [recall_at_k(r.result[0], gt_ids[r.seq])
                        for r in ok if r.seq in gt_ids]
+        tiered = getattr(self.bq, "tiered", None)
         return ServeReport(
             n_queries=len(served),
             n_batches=self._n_batches,
@@ -340,6 +411,9 @@ class AsyncServingEngine:
             n_timed_out=sum(r.status == TIMED_OUT for r in served),
             p50_ms=float(np.percentile(lats, 50) * 1e3) if len(lats) else None,
             p99_ms=float(np.percentile(lats, 99) * 1e3) if len(lats) else None,
+            n_inserted=0 if tiered is None else tiered.n_inserted,
+            n_compactions=0 if tiered is None else tiered.n_compactions,
+            epoch=0 if tiered is None else tiered.epoch,
         )
 
 

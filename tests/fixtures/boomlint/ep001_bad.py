@@ -1,0 +1,27 @@
+"""Seeded EP001 violations: serving hot paths reading mutable tiered state
+directly instead of through one batch-formation-time snapshot()."""
+
+
+def hot_execute_batch(bq, queries):
+    hot = bq.tiered._hot  # EP001: mutable hot buffer read in a hot path
+    cold = bq.tiered._cold  # EP001: mutable cold pointer read
+    return hot, cold, queries
+
+
+def hot_merge(tiered, results):
+    # EP001: epoch read races the background compaction's publish
+    if tiered._epoch > 0:
+        results.append(tiered._sealing)  # EP001: sealing generation read
+    return results
+
+
+def hot_status(engine):
+    # _compacting is a progress flag, not part of any published snapshot
+    return engine.bq.tiered._compacting  # EP001: compaction flag read
+
+
+def cold_ingest_path(bq, rows):
+    # NOT hot (qualname does not match the configured glob): same reads
+    # are fine off the serving path — TieredTable's own methods and
+    # offline tooling hold the lock or run single-threaded
+    return bq.tiered._hot, rows

@@ -1,0 +1,23 @@
+"""EP001-clean twin: the same hot paths, reading tiered state only through
+the snapshot accessor (and non-tiered private fields, which are exempt)."""
+
+
+def hot_execute_batch(bq, queries):
+    snap = bq.tiered.snapshot()  # ONE consistent (epoch, cold, hot) view
+    return snap.cold, snap.hot_views, queries
+
+
+def hot_merge(tiered, results):
+    snap = tiered.snapshot()
+    if snap.epoch > 0:  # epoch off the snapshot: immutable
+        results.extend(snap.hot_views)
+    return results
+
+
+def hot_status(engine):
+    # private fields of NON-tiered objects are not EP001's business
+    return engine._pool, engine.bq.tiered.snapshot().epoch
+
+
+def cold_ingest_path(bq, rows):
+    return bq.tiered.snapshot(), rows

@@ -119,6 +119,40 @@ def sharded_brute_force_topk(table, query_vectors, weights, pred, k: int,
     return ids, scores, masked
 
 
+def tiered_brute_force_topk(segments, metric: str, query_vectors, weights,
+                            pred, k: int):
+    """Exact filtered top-k over a tiered table's hot ∪ cold union.
+
+    ``segments`` is the logical table in GLOBAL ROW-ID ORDER: a list of
+    ``(vectors_list, scalars)`` pairs — the cold table first, then each hot
+    generation (sealing before active) — so row ids are positions in the
+    concatenation, matching the tiered path's ``id_offset`` numbering.
+    Returns (ids, scores, masked) like ``brute_force_topk``."""
+    totals, masks = [], []
+    for vectors_list, scalars in segments:
+        scalars = np.asarray(scalars)
+        total = np.zeros((int(scalars.shape[0]),), np.float64)
+        for i, q in enumerate(query_vectors):
+            w = float(weights[i])
+            if w != 0.0:
+                total += w * similarity_np(
+                    np.asarray(q), np.asarray(vectors_list[i]), metric)
+        totals.append(total)
+        masks.append(eval_mask_np(pred, scalars))
+    total = np.concatenate(totals)
+    mask = np.concatenate(masks)
+    masked = np.where(mask, total, NEG)
+    order = np.argsort(-masked, kind="stable")[:k]
+    found = masked[order] > NEG / 2
+    ids = np.where(found, order, -1)
+    scores = np.where(found, masked[order], NEG)
+    if ids.shape[0] < k:
+        ids = np.pad(ids, (0, k - ids.shape[0]), constant_values=-1)
+        scores = np.pad(scores, (0, k - scores.shape[0]),
+                        constant_values=NEG)
+    return ids, scores, masked
+
+
 def tie_tolerance(kth: float, atol: float = 1e-4, rtol: float = 1e-5) -> float:
     return atol + rtol * abs(kth)
 

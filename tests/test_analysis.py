@@ -16,7 +16,8 @@ REPO_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src",
 # the fixture hot_* functions opt into hot-host scanning via config
 FIXTURE_CFG = LintConfig(
     trace=False,
-    hot_functions=(("hs001_bad.py", "hot_*"), ("hs001_clean.py", "hot_*")),
+    hot_functions=(("hs001_bad.py", "hot_*"), ("hs001_clean.py", "hot_*"),
+                   ("ep001_bad.py", "hot_*"), ("ep001_clean.py", "hot_*")),
 )
 
 
@@ -84,6 +85,22 @@ def test_pl001_bad_fixture():
 
 def test_pl001_clean_fixture():
     active = _scan("pl001_clean.py")["active"]
+    assert active == [], [f.render() for f in active]
+
+
+def test_ep001_bad_fixture():
+    active = _scan("ep001_bad.py")["active"]
+    assert _rules(active) == {"EP001": 5}, [f.render() for f in active]
+    msgs = " | ".join(f.message for f in active)
+    assert "snapshot()" in msgs and "epoch" in msgs
+    # the non-hot function's identical reads stay exempt
+    assert "cold_ingest_path" not in msgs
+    fields = {f.message.split("`")[3].rsplit(".", 1)[-1] for f in active}
+    assert fields == {"_hot", "_cold", "_epoch", "_sealing", "_compacting"}
+
+
+def test_ep001_clean_fixture():
+    active = _scan("ep001_clean.py")["active"]
     assert active == [], [f.render() for f in active]
 
 
