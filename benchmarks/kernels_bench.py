@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from repro.kernels.gather_score import gather_score_topk
+from repro.kernels.gather_score import gather_score_topk, gather_score_topk_int8
 
 NEG = -1e30
 
@@ -40,13 +40,19 @@ SWEEP_RATIOS = (0.07, 0.27, 1.1, 4.4, 17.5)
 
 
 def crossover_sweep(n: int = 60_000, d: int = 128, b: int = 32, m: int = 3,
-                    k: int = 10, scans=None) -> list[dict]:
+                    k: int = 10, scans=None,
+                    precision: str = "fp32") -> list[dict]:
     """Dense batched scoring vs candidate-local fused gather+score.
 
     Dense cost is scan-independent (every row is scored); candidate-local
     scales with ``b·scan``. Each row reports both times, the work ratio
     ``b·scan/n`` and the speedup — the largest ratio with speedup > 1 is
-    the measured crossover the ``CostModel`` default should sit under."""
+    the measured crossover the ``CostModel`` default should sit under.
+
+    ``precision="int8"`` runs the quantized tier as the candidate-local
+    side (int8 gather→score→mask then exact fp32 rerank of the top-α·k) —
+    the sweep that calibrates ``CostModel.crossover_int8``. The dense
+    baseline stays fp32: there is no dense int8 path."""
     if scans is None:
         scans = tuple(max(64, int(r * n / b)) for r in SWEEP_RATIOS)
     from repro.vectordb.predicates import Predicates, stack
@@ -71,12 +77,21 @@ def crossover_sweep(n: int = 60_000, d: int = 128, b: int = 32, m: int = 3,
     hi = jnp.asarray([8.0] + [np.inf] * (m - 1), jnp.float32)
     ms_dense = _timeit(lambda: dense(q_b, lo, hi))
 
-    @jax.jit
-    def local_fn(c):
-        # jitted like the serving paths (gather_score_topk is traceable and
-        # always called inside the executor's jitted graphs)
-        return gather_score_topk(c, (vecs,), (q_b,), w_b, scal, pred_b,
-                                 k=k, metric="dot", use_kernel=False)
+    if precision == "int8":
+        v8, sc8 = ops.quantize_rows(vecs)
+
+        @jax.jit
+        def local_fn(c):
+            return gather_score_topk_int8(
+                c, (vecs,), (v8,), (sc8,), (q_b,), w_b, scal, pred_b,
+                k=k, metric="dot", use_kernel=False)
+    else:
+        @jax.jit
+        def local_fn(c):
+            # jitted like the serving paths (gather_score_topk is traceable
+            # and always called inside the executor's jitted graphs)
+            return gather_score_topk(c, (vecs,), (q_b,), w_b, scal, pred_b,
+                                     k=k, metric="dot", use_kernel=False)
 
     rows = []
     for scan in scans:
@@ -84,15 +99,15 @@ def crossover_sweep(n: int = 60_000, d: int = 128, b: int = 32, m: int = 3,
         ms_local = _timeit(lambda c=cand: local_fn(c))
         ratio = b * scan / n
         rows.append({
-            "n_rows": n, "batch": b, "scan": scan,
+            "n_rows": n, "batch": b, "scan": scan, "precision": precision,
             "work_ratio": round(ratio, 3),
             "dense_ms": round(ms_dense, 2),
             "local_ms": round(ms_local, 2),
             "speedup": round(ms_dense / ms_local, 2),
         })
-        print(f"  crossover n={n} B={b} scan={scan}: dense {ms_dense:.1f}ms "
-              f"vs local {ms_local:.1f}ms -> {rows[-1]['speedup']}x "
-              f"(B·scan/n = {ratio:.2f})")
+        print(f"  crossover[{precision}] n={n} B={b} scan={scan}: dense "
+              f"{ms_dense:.1f}ms vs local {ms_local:.1f}ms -> "
+              f"{rows[-1]['speedup']}x (B·scan/n = {ratio:.2f})")
     return rows
 
 
@@ -121,7 +136,8 @@ def measured_overhead_rows(rows: list[dict], *, scan: int, n_rows: int,
 def overhead_sweep(n: int = 500_000, k: int = 10, scan: int = 2048,
                    nprobe: int = 16, k_mult: int = 4,
                    batches=(4, 8, 16, 32), dataset: str = "sift",
-                   seed: int = 0) -> dict:
+                   seed: int = 0, precision: str = "fp32",
+                   crossover: float = 0.136) -> dict:
     """Calibrate the candidate-local path's FIXED per-batch overhead
     END-TO-END: drive the real batched executor (fixed legalized plan,
     each scoring path forced) across batch sizes.
@@ -154,7 +170,8 @@ def overhead_sweep(n: int = 500_000, k: int = 10, scan: int = 2048,
            for i, v in enumerate(table.vectors)]
     plan = ExecutionPlan("index_scan", tuple(
         SubqueryParams(k_mult=k_mult, nprobe=nprobe, max_scan=scan,
-                       iterative=True) for _ in range(n_vec)))
+                       iterative=True) for _ in range(n_vec)),
+        precision=precision)
     rows = []
     for b in batches:
         wl = queries.gen_workload(table, b, n_vec_used=min(2, n_vec),
@@ -173,12 +190,15 @@ def overhead_sweep(n: int = 500_000, k: int = 10, scan: int = 2048,
                 (time.perf_counter() - t0) / reps * 1e3, 1)
         row["local_wins"] = row["local_ms"] < row["dense_ms"]
         rows.append(row)
-        print(f"  overhead sweep B={b} scan={scan}: dense {row['dense_ms']}ms"
-              f" vs local {row['local_ms']}ms -> "
+        print(f"  overhead sweep[{precision}] B={b} scan={scan}: dense "
+              f"{row['dense_ms']}ms vs local {row['local_ms']}ms -> "
               f"{'local' if row['local_wins'] else 'dense'}")
-    oh = measured_overhead_rows(rows, scan=scan, n_rows=table.n_rows)
-    print(f"  calibrated CostModel.overhead ≈ {oh:.0f} gathered rows")
-    return {"n_rows": table.n_rows, "table": rows, "overhead_rows": oh}
+    oh = measured_overhead_rows(rows, scan=scan, n_rows=table.n_rows,
+                                crossover=crossover)
+    print(f"  calibrated CostModel.overhead[{precision}] ≈ {oh:.0f} "
+          f"gathered rows")
+    return {"n_rows": table.n_rows, "precision": precision, "table": rows,
+            "overhead_rows": oh}
 
 
 def measured_crossover(rows: list[dict]) -> float:
@@ -237,11 +257,41 @@ def run(n: int = 20_000, d: int = 128, m: int = 3, k: int = 10, **_) -> dict:
     return out
 
 
+def calibrate_quantized(n_cross: int = 60_000, n_over: int = 500_000,
+                        out: str = "benchmarks/results/quantized_crossover.json"
+                        ) -> dict:
+    """Per-precision CostModel calibration (``crossover`` /
+    ``crossover_int8``, ``overhead`` / ``overhead_int8``): the 60k-row
+    kernel crossover sweep and the 500k-row end-to-end overhead boundary,
+    both precisions, written to ``benchmarks/results/``."""
+    import json
+
+    res = {"figure": "quantized_cost_model_calibration"}
+    for prec in ("fp32", "int8"):
+        sweep = crossover_sweep(n=n_cross, precision=prec)
+        over = overhead_sweep(n=n_over, precision=prec,
+                              crossover=measured_crossover(sweep))
+        res[prec] = {
+            "crossover_sweep": sweep,
+            "measured_crossover": measured_crossover(sweep),
+            "overhead_sweep": over,
+            "measured_overhead_rows": over["overhead_rows"],
+        }
+        print(f"  [{prec}] measured crossover B·scan/n = "
+              f"{res[prec]['measured_crossover']}, overhead ≈ "
+              f"{over['overhead_rows']} gathered rows")
+    with open(out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"  wrote {out}")
+    return res
+
+
 if __name__ == "__main__":
     # standalone run = the calibration figures: the 60k-row crossover sweep
     # plus the 500k-row end-to-end per-batch overhead boundary the
-    # CostModel defaults are measured on (benchmarks.run keeps its smaller
-    # n and skips the overhead sweep — it needs the big table to be
-    # meaningful)
-    run(n=60_000)
-    overhead_sweep(n=500_000)
+    # CostModel defaults are measured on, at BOTH precisions (the int8
+    # rows calibrate crossover_int8/overhead_int8) — written to
+    # benchmarks/results/quantized_crossover.json. (benchmarks.run keeps
+    # its smaller n and skips the overhead sweep — it needs the big table
+    # to be meaningful.)
+    calibrate_quantized()

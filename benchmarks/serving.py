@@ -401,6 +401,88 @@ def run_crossover(tables=CROSSOVER_TABLES, *, n_stream: int = 64,
     return rows_out
 
 
+def run_quantized(tables=CROSSOVER_TABLES, *, n_stream: int = 64,
+                  max_scan: int = 2048, nprobe: int = 16, k_mult: int = 4,
+                  seed: int = 0) -> list[dict]:
+    """int8-then-rerank vs fp32 candidate-local QPS at a fixed plan.
+
+    Both paths are the SAME candidate-local executor on the SAME legalized
+    plan — identical probed slots, identical predicate filtering on exact
+    scalars — differing ONLY in ``ExecutionPlan.precision``: fp32 scores
+    the gathered candidates exactly; int8 scores them from the quantized
+    replica and exact-reranks the top-α·k (docs/quantized_tier.md). The
+    acceptance claim is the int8 column's QPS win at an oracle recall
+    delta within 0.01: quantization only perturbs WHICH near-boundary
+    candidates reach the exact rerank, never the returned scores.
+    ``auto_path`` columns report what the calibrated per-precision
+    ``CostModel`` crossover picks for each configuration."""
+    import numpy as np
+
+    from repro.bench import datasets, queries
+    from repro.core.executor import recall_at_k
+    from repro.core.query import ExecutionPlan, SubqueryParams
+    from repro.serve.batch import (
+        BatchedHybridExecutor, CANDIDATE_LOCAL, CostModel, next_bucket,
+    )
+    from repro.vectordb import flat, ivf
+
+    rows_out = []
+    for dataset, rows, batch_sizes in tables:
+        table = datasets.make(dataset, rows=rows, seed=seed)
+        n_vec = table.schema.n_vec
+        nc = max(64, min(512, table.n_rows // 2000))
+        idx = [ivf.build(v, nc, seed=i, metric=table.schema.metric)
+               for i, v in enumerate(table.vectors)]
+        stream = queries.gen_workload(table, n_stream,
+                                      n_vec_used=min(2, n_vec),
+                                      seed=seed + 100)
+        gts = [np.asarray(flat.ground_truth(
+            table, list(q.query_vectors), list(q.weights), q.predicates,
+            q.k)[0]) for q in stream]
+        for bs in batch_sizes:
+            row = {"dataset": dataset, "rows": table.n_rows, "batch": bs,
+                   "max_scan": max_scan}
+            scan_budget = max_scan * len([w for w in stream[0].weights
+                                          if w > 0])
+            for prec in ("fp32", "int8"):
+                plan = ExecutionPlan("index_scan", tuple(
+                    SubqueryParams(k_mult=k_mult, nprobe=nprobe,
+                                   max_scan=max_scan, iterative=True)
+                    for _ in range(n_vec)), precision=prec)
+                plans = [plan] * len(stream)
+                row[f"auto_path_{prec}"] = CostModel().choose(
+                    batch=next_bucket(bs), scan=scan_budget,
+                    n_rows=table.n_rows, precision=prec)
+                bx = BatchedHybridExecutor(
+                    table, idx,
+                    cost_model=CostModel(force=CANDIDATE_LOCAL))
+                bx.execute_batch(stream[:bs], plans[:bs])  # warm jit
+                t0 = time.perf_counter()
+                results = []
+                for s in range(0, len(stream), bs):
+                    results.extend(
+                        bx.execute_batch(stream[s: s + bs],
+                                         plans[s: s + bs]))
+                dt = time.perf_counter() - t0
+                row[f"{prec}_qps"] = round(len(stream) / dt, 1)
+                row[f"{prec}_recall"] = round(float(np.mean(
+                    [recall_at_k(ids, gt)
+                     for (ids, _), gt in zip(results, gts)])), 3)
+            row["int8_speedup"] = round(
+                row["int8_qps"] / row["fp32_qps"], 2)
+            row["recall_delta"] = round(
+                row["fp32_recall"] - row["int8_recall"], 4)
+            rows_out.append(row)
+            print(f"  quantized {dataset} rows={row['rows']} B={bs}: "
+                  f"fp32-local {row['fp32_qps']} QPS (recall "
+                  f"{row['fp32_recall']}) vs int8-then-rerank "
+                  f"{row['int8_qps']} QPS (recall {row['int8_recall']}) "
+                  f"-> {row['int8_speedup']}x, recall delta "
+                  f"{row['recall_delta']:+.4f}, auto int8="
+                  f"{row['auto_path_int8']}")
+    return rows_out
+
+
 def run(sizes=None, dataset: str = "part", *, n_stream: int = 64,
         batch_size: int = 32, seed: int = 0, shards=DEFAULT_SHARDS,
         rate: float = DEFAULT_RATE, deadline: float = DEFAULT_DEADLINE
@@ -439,6 +521,10 @@ def main():
     ap.add_argument("--crossover", action="store_true",
                     help="dense vs candidate-local acceptance sweep "
                          "(60k and 500k-row tables) instead of the suite")
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8-then-rerank vs fp32 candidate-local "
+                         "acceptance sweep (60k and 500k-row tables) "
+                         "instead of the suite")
     ap.add_argument("--sharded", action="store_true",
                     help="sharded-IVF acceptance sweep (500k rows, 4 "
                          "shards: learned per-shard probing vs exact "
@@ -459,6 +545,14 @@ def main():
     if args.crossover:
         res = {"figure": "serving_scoring_crossover",
                "table": run_crossover(n_stream=args.n_stream)}
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=2)
+        return
+
+    if args.quantized:
+        res = {"figure": "serving_quantized_tier",
+               "table": run_quantized(n_stream=args.n_stream)}
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(res, f, indent=2)

@@ -420,12 +420,15 @@ class ModuleLint:
         if isinstance(e, ast.Call):
             return self._taint_call(e, tainted, emit)
         if isinstance(e, ast.Compare):
-            base = self._taint(e.left, tainted, emit)
+            left = self._taint(e.left, tainted, emit)
+            base = False
             for op, cmp in zip(e.ops, e.comparators):
                 ct = self._taint(cmp, tainted, emit)
                 if isinstance(op, (ast.Is, ast.IsNot)):
-                    continue  # `x is None` stays a static decision
-                base = base or ct
+                    continue  # `x is None` stays a static decision — the
+                    # identity test resolves at trace time even when x is a
+                    # tracer, so the left operand's taint must not leak out
+                base = base or left or ct
             return base
         if isinstance(e, ast.IfExp):
             if self._taint(e.test, tainted, emit) and emit:

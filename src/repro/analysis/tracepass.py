@@ -98,6 +98,10 @@ def check_vmem_envelope(cfg: LintConfig) -> list:
          shapes.gather_tile_bytes(
              (shapes.MAX_COL_DIM,) * shapes.MAX_VEC_COLS,
              shapes.MAX_SCALARS, 4)),
+        ("int8_gather_score", "src/repro/kernels/gather_score.py",
+         shapes.int8_gather_tile_bytes(
+             (shapes.MAX_COL_DIM,) * shapes.MAX_VEC_COLS,
+             shapes.MAX_SCALARS, 4)),
     ]
     for label, path, est in envelope:
         if est > budget:

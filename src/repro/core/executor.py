@@ -26,11 +26,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import ExecutionPlan, MHQ, SubqueryParams
-from repro.vectordb import flat, ivf
+from repro.core.query import ExecutionPlan, MHQ, PRECISION_GRID, SubqueryParams
+from repro.vectordb import flat, ivf, predicates
 from repro.vectordb.table import Table, similarity
 
 NEG = -1e30
+
+# Shape-bucketing primitives. These live here (not serve/batch) because the
+# candidate-union width vocabulary is part of PLAN SEMANTICS shared by the
+# sequential and batched executors — both must build the same union for the
+# parity contract to hold. serve/batch re-exports them unchanged.
+K_BUCKET_FLOOR = 16  # smallest padded top-k bucket
+CANDIDATE_PAD_FLOOR = 64  # smallest padded candidate-slot bucket
+
+
+def next_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power-of-two bucket ≥ n (≥ floor)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+def pow2_at_most(n: int) -> int:
+    b = 1
+    while b * 2 <= n:
+        b <<= 1
+    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +110,80 @@ def rerank_scored(row_scores, rows, *, k, total):
     return _dedup_topk(rows, score, k=k, total=total)
 
 
+# Reciprocal-rank fusion across per-column candidate lists (multi-column
+# index_scan unions). Truncating each column at its top-k_i loses rows that
+# rank just below k_i in EVERY column yet carry the best weighted score on
+# weight-skewed queries — and the subquery probes already ranked a wider
+# list (the padded top-k bucket), whose tail was previously discarded. The
+# union therefore keeps the exact per-column top-k_i block (the engine
+# contract) and fills its pad bucket with the rows the combined column
+# rankings like best: score(row) = Σ_cols 1/(RRF_K + rank_col(row)).
+RRF_K = 60  # standard reciprocal-rank-fusion constant
+RRF_MIN_EXTRA = 16  # fused-extra slots guaranteed per multi-column union
+
+
+def rrf_union_total(sum_ki: int) -> int:
+    """Static union width for a multi-column candidate union: the exact
+    per-column top-k_i block plus ≥ RRF_MIN_EXTRA fused-extra slots,
+    power-of-two bucketed so the width vocabulary stays finite."""
+    return next_bucket(sum_ki + RRF_MIN_EXTRA, CANDIDATE_PAD_FLOOR)
+
+
+def subquery_width(k_i: int, max_scan: int) -> int:
+    """Probe width of one column's subquery: the padded top-k bucket, so
+    the list carries a ranked tail beyond k_i for RRF fusion to draw from.
+    One formula for both executors — the fused extras must be computed
+    from identical lists for batched/sequential parity."""
+    return min(next_bucket(k_i, K_BUCKET_FLOOR), max_scan)
+
+
+@partial(jax.jit, static_argnames=("kis", "n_extra", "rrf_k"))
+def rrf_extras(lists, *, kis, n_extra, rrf_k=RRF_K):
+    """Top-``n_extra`` candidates by reciprocal-rank fusion of the columns'
+    ranked tails, excluding rows already in some column's top-k_i block.
+
+    ``lists``: per-column (B, ks_i) ranked candidate ids, -1 = empty slot
+    (each column's FULL probed ranking, top-k_i prefix included so a row's
+    fused score sees all of its ranks). ``kis``: static per-column included
+    widths. Returns (B, n_extra) ids, -1 padded, best-fused first.
+
+    Cross-column dedup sums every occurrence's contribution: sort slots by
+    row id, segmented cumulative sums (cum/cumi are nondecreasing along the
+    row, so a running max of each segment-start value carries every slot
+    its own segment base), then read each run at its last slot."""
+    sc_parts, inc_parts = [], []
+    for lst, ki in zip(lists, kis):
+        valid = lst >= 0
+        contrib = 1.0 / (rrf_k + 1.0
+                         + jnp.arange(lst.shape[1], dtype=jnp.float32))
+        sc_parts.append(jnp.where(valid, contrib[None, :], 0.0))
+        inc_parts.append(valid & (jnp.arange(lst.shape[1]) < ki)[None, :])
+    rows = jnp.concatenate(list(lists), axis=1)
+    sc = jnp.concatenate(sc_parts, axis=1)
+    inc = jnp.concatenate(inc_parts, axis=1).astype(jnp.int32)
+    order = jnp.argsort(rows, axis=1)
+    rs = jnp.take_along_axis(rows, order, axis=1)
+    cs = jnp.take_along_axis(sc, order, axis=1)
+    ins = jnp.take_along_axis(inc, order, axis=1)
+    cum = jnp.cumsum(cs, axis=1)
+    cumi = jnp.cumsum(ins, axis=1)
+    b = rs.shape[0]
+    seg_start = jnp.concatenate(
+        [jnp.ones((b, 1), bool), rs[:, 1:] != rs[:, :-1]], axis=1)
+    is_last = jnp.concatenate(
+        [rs[:, 1:] != rs[:, :-1], jnp.ones((b, 1), bool)], axis=1)
+    base = jax.lax.cummax(jnp.where(seg_start, cum - cs, -1.0), axis=1)
+    basei = jax.lax.cummax(jnp.where(seg_start, cumi - ins, -1), axis=1)
+    fused = jnp.where(is_last & (rs >= 0) & (cumi - basei == 0),
+                      cum - base, -1.0)
+    ne = min(n_extra, fused.shape[1])
+    top_s, top_j = jax.lax.top_k(fused, ne)
+    out = jnp.where(top_s > 0.0, jnp.take_along_axis(rs, top_j, axis=1), -1)
+    if ne < n_extra:
+        out = jnp.pad(out, ((0, 0), (0, n_extra - ne)), constant_values=-1)
+    return out.astype(jnp.int32)
+
+
 def legalize_for_shard(k_i: int, nprobe: int, max_scan: int, *,
                        n_shards: int, shard_len: int,
                        n_clusters: int) -> tuple[int, int, int]:
@@ -139,8 +235,15 @@ class HybridExecutor:
                 s = dataclasses.replace(s, iterative=False)
             s = dataclasses.replace(s, nprobe=min(s.nprobe, e.nprobe_cap))
             subs.append(s)
+        # precision legalization: unknown values pin to fp32, and
+        # filter_first always scores fp32 (its gather is the plan — there
+        # is no candidate tier for the int8 replica to accelerate), so the
+        # batched group keys never split on a precision that can't act.
+        prec = plan.precision if plan.precision in PRECISION_GRID else "fp32"
+        if plan.strategy == "filter_first":
+            prec = "fp32"
         return dataclasses.replace(
-            plan, subqueries=tuple(subs),
+            plan, subqueries=tuple(subs), precision=prec,
             max_candidates=min(plan.max_candidates, self.table.n_rows))
 
     # -- execution -------------------------------------------------------------
@@ -159,27 +262,61 @@ class HybridExecutor:
 
         cols = plan_columns(q, plan)
 
-        cand = []
+        cand, wide = [], []
         for i in cols:
             sp = plan.subqueries[i]
             k_i = min(sp.k_mult * q.k, t.n_rows)
-            ids_i = self._subquery(i, q, k_i, sp)
-            cand.append(ids_i)
+            ks = subquery_width(k_i, min(sp.max_scan, t.n_rows)) \
+                if len(cols) > 1 else k_i
+            ids_i = self._subquery(i, q, k_i, sp, precision=plan.precision,
+                                   width=ks)
+            wide.append(ids_i)
+            cand.append(ids_i[:k_i])
         rows = jnp.concatenate(cand)
+        if len(cols) > 1:
+            # multi-column union: RRF-fused extras from the probed tails
+            # (identical construction to serve/batch._union_candidates, so
+            # batched/sequential parity is preserved by both improving)
+            kis = tuple(int(c.shape[0]) for c in cand)
+            total = rrf_union_total(int(rows.shape[0]))
+            extras = rrf_extras(tuple(wd[None, :] for wd in wide), kis=kis,
+                                n_extra=total - int(rows.shape[0]))
+            rows = jnp.concatenate([rows, extras[0]])
         total = int(rows.shape[0])
         return _rerank(tuple(t.vectors), None, rows, tuple(q.query_vectors), w,
                        k=q.k, n_vec=q.n_vec, metric=t.schema.metric, total=total)
 
-    def _subquery(self, i: int, q: MHQ, k_i: int, sp: SubqueryParams):
-        """One single-vector filtered subquery, with iterative re-expansion."""
+    def _subquery(self, i: int, q: MHQ, k_i: int, sp: SubqueryParams,
+                  precision: str = "fp32", width: int | None = None):
+        """One single-vector filtered subquery, with iterative re-expansion.
+
+        ``width`` (≥ k_i) widens the returned ranked list — top-k is
+        prefix-consistent, so slots beyond k_i are the column's ranked tail
+        for RRF fusion; underfill and re-expansion still key on k_i.
+
+        ``precision == "int8"`` probes the same slots but scores them from
+        the column's int8 replica, exact-reranking the top-α·k survivors in
+        fp32 (``ivf.search_local_batch_int8`` at batch 1). The qualified
+        count driving re-expansion comes from the exact fp32 scalar
+        predicates either way, so the doubling ladder is precision-blind."""
         t = self.table
+        kw = width or k_i
         nprobe = sp.nprobe
         while True:
             nprobe = min(nprobe, self.indexes[i].n_clusters, self.engine.nprobe_cap)
             max_scan = min(sp.max_scan, t.n_rows)
-            ids, scores, n_scored, n_qual = ivf.search(
-                self.indexes[i], t.vectors[i], t.scalars, q.predicates,
-                q.query_vectors[i], nprobe=nprobe, max_scan=max_scan, k=k_i)
+            if precision == "int8":
+                vq, sc = t.quantized(i)
+                ids_b, _, _, nq_b = ivf.search_local_batch_int8(
+                    self.indexes[i], t.vectors[i], vq, sc, t.scalars,
+                    predicates.stack([q.predicates]),
+                    q.query_vectors[i][None, :],
+                    nprobe=nprobe, max_scan=max_scan, k=kw)
+                ids, n_qual = ids_b[0], nq_b[0]
+            else:
+                ids, scores, n_scored, n_qual = ivf.search(
+                    self.indexes[i], t.vectors[i], t.scalars, q.predicates,
+                    q.query_vectors[i], nprobe=nprobe, max_scan=max_scan, k=kw)
             if not sp.iterative:
                 return ids
             # boomlint: ignore[HS001] one sync per re-expansion round is the

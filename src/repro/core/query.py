@@ -21,6 +21,11 @@ STRATEGIES = ("filter_first", "index_scan", "single_index")
 NPROBE_GRID = (1, 2, 4, 8, 16, 32)
 MAX_SCAN_GRID = (2048, 8192, 32768, 131072)
 KMULT_GRID = (1, 2, 4, 8)  # k_i = mult · k
+# scoring precision of the candidate tier: exact fp32, or the symmetric
+# int8 replica with an exact fp32 rerank of the top-α·k survivors
+# (kernels.gather_score.gather_score_topk_int8). Scalar predicates stay
+# fp32 either way, so filtering is bit-identical across precisions.
+PRECISION_GRID = ("fp32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,13 +55,15 @@ class ExecutionPlan:
     subqueries: tuple  # one SubqueryParams per vector column
     dominant: int = 0  # column searched when strategy == "single_index"
     max_candidates: int = 16384  # filter-first gather cap
+    precision: str = "fp32"  # PRECISION_GRID: candidate-tier scoring dtype
 
     def describe(self) -> str:
         subs = ", ".join(
             f"col{i}(k×{s.k_mult},np{s.nprobe},ms{s.max_scan}"
             f"{',iter' if s.iterative else ''})"
             for i, s in enumerate(self.subqueries))
-        return f"{self.strategy}[{subs}]"
+        prec = "" if self.precision == "fp32" else f"@{self.precision}"
+        return f"{self.strategy}{prec}[{subs}]"
 
 
 def default_plan(n_vec: int, engine_caps=None) -> ExecutionPlan:

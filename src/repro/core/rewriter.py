@@ -22,8 +22,8 @@ import numpy as np
 from repro.common import nn
 from repro.core.executor import HybridExecutor, recall_at_k
 from repro.core.query import (
-    ExecutionPlan, KMULT_GRID, MAX_SCAN_GRID, MHQ, NPROBE_GRID, STRATEGIES,
-    SubqueryParams,
+    ExecutionPlan, KMULT_GRID, MAX_SCAN_GRID, MHQ, NPROBE_GRID,
+    PRECISION_GRID, STRATEGIES, SubqueryParams,
 )
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -50,6 +50,7 @@ class PlanLabel:
     iterative: np.ndarray  # (N,) {0,1}
     latency: float
     recall: float
+    precision: int = 0  # PRECISION_GRID index of the candidate-tier dtype
 
 
 class MHQRewriter:
@@ -58,12 +59,13 @@ class MHQRewriter:
         self.n_vec = n_vec
         self.in_dim = in_dim
         k = jax.random.PRNGKey(cfg.seed)
-        k1, k2, k3 = jax.random.split(k, 3)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
         h = cfg.hidden
         self.params = {
             "trunk": nn.mlp_init(k1, [in_dim, h, h]),
             "strategy": nn.mlp_init(k2, [h, len(STRATEGIES)]),
             "per_col": nn.mlp_init(k3, [h, n_vec * PER_COL]),
+            "precision": nn.mlp_init(k4, [h, len(PRECISION_GRID)]),
         }
 
     # -- forward -------------------------------------------------------------
@@ -73,29 +75,38 @@ class MHQRewriter:
         strat = nn.mlp_apply(params["strategy"], z)
         per_col = nn.mlp_apply(params["per_col"], z)
         per_col = per_col.reshape(*per_col.shape[:-1], self.n_vec, PER_COL)
-        return strat, per_col
+        prec = nn.mlp_apply(params["precision"], z)
+        return strat, per_col, prec
 
     def plan_codes(self, params, x):
         """Jit-friendly head evaluation: -> int32 codes
-        [strategy, np_idx×N, ms_idx×N, km_idx×N, iter×N]."""
-        strat, per_col = self._heads(params, x)
+        [strategy, np_idx×N, ms_idx×N, km_idx×N, iter×N, precision]."""
+        strat, per_col, prec = self._heads(params, x)
         s_idx = jnp.argmax(strat)[None]
         np_i = jnp.argmax(per_col[..., :N_NP], axis=-1)
         ms_i = jnp.argmax(per_col[..., N_NP:N_NP + N_MS], axis=-1)
         km_i = jnp.argmax(per_col[..., N_NP + N_MS:N_NP + N_MS + N_KM], axis=-1)
         it = (per_col[..., -1] > 0.0).astype(jnp.int32)
-        return jnp.concatenate([s_idx, np_i, ms_i, km_i, it]).astype(jnp.int32)
+        p_idx = jnp.argmax(prec)[None]
+        return jnp.concatenate(
+            [s_idx, np_i, ms_i, km_i, it, p_idx]).astype(jnp.int32)
 
     def plan_from_codes(self, codes: np.ndarray) -> ExecutionPlan:
         n = self.n_vec
         s_idx = int(codes[0])
-        np_i, ms_i, km_i, it = (codes[1:1 + n], codes[1 + n:1 + 2 * n],
-                                codes[1 + 2 * n:1 + 3 * n], codes[1 + 3 * n:])
+        np_i, ms_i, km_i = (codes[1:1 + n], codes[1 + n:1 + 2 * n],
+                            codes[1 + 2 * n:1 + 3 * n])
+        it = codes[1 + 3 * n:1 + 4 * n]
+        # precision rides as one trailing code; decode stays compatible
+        # with pre-precision code vectors (older checkpoints/tests)
+        prec = PRECISION_GRID[int(codes[1 + 4 * n])] \
+            if codes.shape[0] > 1 + 4 * n else "fp32"
         subs = tuple(
             SubqueryParams(k_mult=KMULT_GRID[km_i[i]], nprobe=NPROBE_GRID[np_i[i]],
                            max_scan=MAX_SCAN_GRID[ms_i[i]], iterative=bool(it[i]))
             for i in range(n))
-        return ExecutionPlan(strategy=STRATEGIES[s_idx], subqueries=subs)
+        return ExecutionPlan(strategy=STRATEGIES[s_idx], subqueries=subs,
+                             precision=prec)
 
     def predict(self, x: np.ndarray, *, k: int = 10) -> ExecutionPlan:
         """Single-query convenience wrapper over the canonical decode path
@@ -118,15 +129,22 @@ class MHQRewriter:
         y_ms = jnp.asarray(np.stack([l.max_scan_idx for l in labels]))
         y_km = jnp.asarray(np.stack([l.k_mult_idx for l in labels]))
         y_it = jnp.asarray(np.stack([l.iterative for l in labels]), jnp.float32)
+        y_prec = jnp.asarray([l.precision for l in labels])
         # parameter losses only matter for index-scan-family labels
         par_mask = jnp.asarray([1.0 if l.strategy != 0 else 0.0 for l in labels])
         Xj = jnp.asarray(X)
 
         def loss_fn(params, idx):
             x = Xj[idx]
-            strat, per_col = self._heads(params, x)
+            strat, per_col, prec = self._heads(params, x)
             ls = -jnp.mean(jnp.take_along_axis(
                 jax.nn.log_softmax(strat), y_strat[idx][:, None], 1))
+            # precision head: like the strategy head but masked to the
+            # index family (filter_first is always fp32 post-legalization)
+            lprec = -jnp.mean(jnp.take_along_axis(
+                jax.nn.log_softmax(prec), y_prec[idx][:, None], 1)[..., 0]
+                * par_mask[idx])
+            ls = ls + lprec
 
             def head_ce(sl, y):
                 logp = jax.nn.log_softmax(per_col[..., sl], axis=-1)
@@ -152,7 +170,7 @@ class MHQRewriter:
             l, g = grad(self.params, idx)
             self.params, st = adamw_update(g, st, self.params, opt_cfg)
         # training accuracy
-        strat, _ = self._heads(self.params, Xj)
+        strat, _, _ = self._heads(self.params, Xj)
         acc = float(jnp.mean(jnp.argmax(strat, -1) == y_strat))
         return {"rewriter_loss": float(l), "strategy_acc": acc}
 
@@ -169,6 +187,14 @@ def candidate_plans(n_vec: int, weights=None) -> list[ExecutionPlan]:
         subs = tuple(SubqueryParams(k_mult=km, nprobe=npb, max_scan=ms,
                                     iterative=True) for _ in range(n_vec))
         plans.append(ExecutionPlan("index_scan", subs))
+    # quantized-tier twins of the deep-scan configs: int8 candidate scoring
+    # + exact fp32 rerank only pays off where the scan budget is large, so
+    # the exploration grid offers it exactly there — label generation then
+    # measures whether the two-stage path is actually cheaper at target
+    for npb, km in itertools.product((8, 32), (2, 8)):
+        subs = tuple(SubqueryParams(k_mult=km, nprobe=npb, max_scan=131072,
+                                    iterative=True) for _ in range(n_vec))
+        plans.append(ExecutionPlan("index_scan", subs, precision="int8"))
     if n_vec > 1 and weights is not None:
         dom = int(np.argmax(weights))
         for npb in (8, 32):
@@ -193,7 +219,8 @@ def plan_to_label(plan: ExecutionPlan, latency: float, recall: float) -> PlanLab
                                for s in plan.subqueries]),
         iterative=np.asarray([1.0 if s.iterative else 0.0
                               for s in plan.subqueries], np.float32),
-        latency=latency, recall=recall)
+        latency=latency, recall=recall,
+        precision=PRECISION_GRID.index(plan.precision))
 
 
 LABEL_RECALL_MARGIN = 0.05  # train to a margin above E_rec: the learned

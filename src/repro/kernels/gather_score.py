@@ -87,14 +87,22 @@ def merge_topk_unique(ids, scores, k: int):
 
 def _kernel(cand_ref, scal_ref, w_ref, lo_ref, hi_ref, act_ref, cval_ref,
             *refs, k: int, block_s: int, n_vec: int, metric: str,
-            apply_pred: bool):
+            apply_pred: bool, int8: bool = False):
     vec_refs = refs[:n_vec]  # pl.ANY (HBM) — full table columns
-    q_refs = refs[n_vec:2 * n_vec]
-    out_s_ref, out_i_ref, out_q_ref = refs[2 * n_vec: 2 * n_vec + 3]
-    scratch = refs[2 * n_vec + 3:]
-    vec_tiles = scratch[:n_vec]  # VMEM (BS, d_i) per column
-    scal_tile = scratch[n_vec]  # VMEM (BS, M)
-    sem = scratch[n_vec + 1]  # DMA completion semaphore
+    pos = n_vec
+    if int8:
+        scale_refs = refs[pos:pos + n_vec]  # pl.ANY (HBM) — (n, 1) f32
+        pos += n_vec
+    q_refs = refs[pos:pos + n_vec]
+    out_s_ref, out_i_ref, out_q_ref = refs[pos + n_vec: pos + n_vec + 3]
+    scratch = refs[pos + n_vec + 3:]
+    vec_tiles = scratch[:n_vec]  # VMEM (BS, d_i) per column (f32 or int8)
+    pos = n_vec
+    if int8:
+        scale_tiles = scratch[pos:pos + n_vec]  # VMEM (BS, 1) f32
+        pos += n_vec
+    scal_tile = scratch[pos]  # VMEM (BS, M)
+    sem = scratch[pos + 1]  # DMA completion semaphore
 
     cid = cand_ref[...].reshape(block_s, 1)  # (BS, 1) i32, -1 = padding
     n = scal_ref.shape[0]
@@ -116,12 +124,28 @@ def _kernel(cand_ref, scal_ref, w_ref, lo_ref, hi_ref, act_ref, cval_ref,
     total = jnp.zeros((block_s, 1), jnp.float32)
     for i in range(n_vec):
         gather(vec_refs[i], vec_tiles[i])
-        tile = vec_tiles[i][...]  # (BS, d)
         q = q_refs[i][...]  # (1, d)
-        s = jnp.dot(tile, q.T, preferred_element_type=jnp.float32)  # (BS, 1)
-        if metric == "l2":
-            s = (2.0 * s - jnp.sum(tile * tile, axis=1, keepdims=True)
-                 - jnp.sum(q * q))
+        if int8:
+            # quantized tier: the gathered tile is int8 (4× fewer HBM
+            # bytes per row) — one dot on the cast tile, then the per-row
+            # absmax dequant scale (score(v·s) = s·score(v); l2 norms
+            # rescale by s²)
+            gather(scale_refs[i], scale_tiles[i])
+            tile = vec_tiles[i][...].astype(jnp.float32)  # (BS, d)
+            sc = scale_tiles[i][...]  # (BS, 1)
+            s = jnp.dot(tile, q.T,
+                        preferred_element_type=jnp.float32) * sc
+            if metric == "l2":
+                s = (2.0 * s
+                     - jnp.sum(tile * tile, axis=1, keepdims=True) * sc * sc
+                     - jnp.sum(q * q))
+        else:
+            tile = vec_tiles[i][...]  # (BS, d)
+            s = jnp.dot(tile, q.T,
+                        preferred_element_type=jnp.float32)  # (BS, 1)
+            if metric == "l2":
+                s = (2.0 * s - jnp.sum(tile * tile, axis=1, keepdims=True)
+                     - jnp.sum(q * q))
         total = total + w_ref[0, i] * s
 
     if apply_pred:
@@ -152,21 +176,26 @@ def _kernel(cand_ref, scal_ref, w_ref, lo_ref, hi_ref, act_ref, cval_ref,
 @functools.partial(jax.jit, static_argnames=("k", "block_s", "metric",
                                              "apply_pred", "interpret"))
 def gather_score_blocks(cand, vectors, qs, weights, scalars, lo, hi, active,
-                        clause_valid, *, k: int, block_s: int,
+                        clause_valid, scales=None, *, k: int, block_s: int,
                         metric: str = "dot", apply_pred: bool = True,
                         interpret: bool = True):
     """-> (block_scores (B, nb, k), block_ids (B, nb, k), block_qual (B, nb)).
 
     ``cand`` (B, S) i32 candidate rows (-1 = padding), S a multiple of
-    ``block_s``; block ids are ROW ids (block-locally deduplicated)."""
+    ``block_s``; block ids are ROW ids (block-locally deduplicated).
+
+    With ``scales`` (tuple of (n, 1) f32 per-row dequant scales) the
+    ``vectors`` are the int8 replicas: tiles gather as int8 and dequantize
+    per row in VMEM — the quantized scoring tier."""
     b, s_tot = cand.shape
     assert s_tot % block_s == 0, (s_tot, block_s)
     nb = s_tot // block_s
     n, m = scalars.shape
     n_vec = len(vectors)
     c = lo.shape[1]
+    int8 = scales is not None
     kern = functools.partial(_kernel, k=k, block_s=block_s, n_vec=n_vec,
-                             metric=metric, apply_pred=apply_pred)
+                             metric=metric, apply_pred=apply_pred, int8=int8)
     in_specs = [
         pl.BlockSpec((1, block_s), lambda b_, j: (b_, j)),  # candidates
         pl.BlockSpec(memory_space=pl.ANY),  # scalars — stay in HBM
@@ -178,13 +207,25 @@ def gather_score_blocks(cand, vectors, qs, weights, scalars, lo, hi, active,
     ]
     for _ in vectors:
         in_specs.append(pl.BlockSpec(memory_space=pl.ANY))  # columns — HBM
+    if int8:
+        for _ in vectors:
+            in_specs.append(pl.BlockSpec(memory_space=pl.ANY))  # scales
     for v in vectors:
         in_specs.append(
             pl.BlockSpec((1, v.shape[1]), lambda b_, j: (b_, 0)))
-    scratch_shapes = [pltpu.VMEM((block_s, v.shape[1]), jnp.float32)
+    tile_dtype = jnp.int8 if int8 else jnp.float32
+    scratch_shapes = [pltpu.VMEM((block_s, v.shape[1]), tile_dtype)
                       for v in vectors]
+    if int8:
+        scratch_shapes += [pltpu.VMEM((block_s, 1), jnp.float32)
+                           for _ in vectors]
     scratch_shapes += [pltpu.VMEM((block_s, m), jnp.float32),
                        pltpu.SemaphoreType.DMA(())]
+    operands = [cand, scalars, weights, lo, hi, active, clause_valid,
+                *[v for v in vectors]]
+    if int8:
+        operands += [s for s in scales]
+    operands += [q for q in qs]
     out_s, out_i, out_q = pl.pallas_call(
         kern,
         grid=(b, nb),
@@ -201,8 +242,7 @@ def gather_score_blocks(cand, vectors, qs, weights, scalars, lo, hi, active,
         ],
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(cand, scalars, weights, lo, hi, active, clause_valid,
-      *[v for v in vectors], *[q for q in qs])
+    )(*operands)
     return out_s, out_i, out_q
 
 
@@ -218,7 +258,8 @@ def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
                       k: int, metric: str = "dot",
                       block_s: int = GATHER_BLOCK_S,
                       use_kernel: bool | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      scales=None):
     """Fused candidate-local filtered top-k for a query batch.
 
     cand:    (B, S) i32 candidate row ids, -1 = padded/empty slot (duplicates
@@ -227,6 +268,10 @@ def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
     weights: (B, n_vec) per-column weights; scalars: (n, M).
     pred:    batched PredicateLike (leading axis B) or None to skip masking
              (candidates already qualified, e.g. the rerank union).
+    scales:  tuple of (n,) f32 per-row dequant scales — when given,
+             ``vectors`` are the int8 replicas and scoring runs the
+             quantized tier (4× fewer gathered HBM bytes; the DNF mask
+             still evaluates on the exact fp32 scalars).
 
     -> (ids (B, k), scores (B, k), n_qualified (B,)). Empty slots carry
     id -1 / score NEG; ties break by smaller row id. Traceable — callers
@@ -249,7 +294,7 @@ def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
 
         return gather_score_ref(cand, vectors, qs, weights, scalars,
                                 lo, hi, act, cval, k=k, metric=metric,
-                                apply_pred=apply_pred)
+                                apply_pred=apply_pred, scales=scales)
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -259,14 +304,53 @@ def gather_score_topk(cand, vectors, qs, weights, scalars, pred=None, *,
         pad += ((k - (s_tot + pad)) + bs - 1) // bs * bs
     if pad:
         cand = jnp.pad(cand, ((0, 0), (0, pad)), constant_values=-1)
+    scales2 = None if scales is None else tuple(
+        s.reshape(-1, 1).astype(jnp.float32) for s in scales)
     out_s, out_i, out_q = gather_score_blocks(
         cand, tuple(vectors), tuple(qs), weights, scalars, lo, hi, act, cval,
-        k=k, block_s=bs, metric=metric, apply_pred=apply_pred,
+        scales2, k=k, block_s=bs, metric=metric, apply_pred=apply_pred,
         interpret=interpret)
     nb = cand.shape[1] // bs
     ids, scores = merge_topk_unique(
         out_i.reshape(b, nb * k), out_s.reshape(b, nb * k), k)
     return ids, scores, jnp.sum(out_q, axis=1)
+
+
+# α of the two-stage quantized scan: the int8 pass keeps α·k candidates for
+# the exact fp32 rerank. Measured on the quantization-loss suite: α=4 holds
+# the int8-tier recall within 0.01 of fp32 candidate-local on every clause
+# bucket; the rerank pool is capped at MAX_TOPK (the largest static k).
+RERANK_MULT = 4
+
+
+def gather_score_topk_int8(cand, vectors, vectors_i8, scales, qs, weights,
+                           scalars, pred=None, *, k: int,
+                           metric: str = "dot",
+                           rerank_mult: int = RERANK_MULT,
+                           block_s: int = GATHER_BLOCK_S,
+                           use_kernel: bool | None = None,
+                           interpret: bool | None = None):
+    """Two-stage quantized candidate-local top-k: int8 gather→score→DNF-mask
+    keeps the top ``rerank_mult·k`` candidates (predicates evaluate on the
+    EXACT scalars, so filtering is bit-identical to fp32), then the fp32
+    kernel reranks exactly those rows — returned scores are exact fp32 and
+    the quantization can only affect which near-boundary rows reach the
+    rerank pool.
+
+    Same contract as ``gather_score_topk``; ``n_qualified`` counts the
+    original candidate list's qualifying slots (stage-1 semantics)."""
+    from repro.kernels.shapes import MAX_TOPK
+
+    kq = max(k, min(rerank_mult * k, MAX_TOPK))
+    ids_q, _, n_qual = gather_score_topk(
+        cand, vectors_i8, qs, weights, scalars, pred, k=kq, metric=metric,
+        block_s=block_s, use_kernel=use_kernel, interpret=interpret,
+        scales=scales)
+    # survivors are already predicate-qualified and deduplicated (-1 pads)
+    ids, scores, _ = gather_score_topk(
+        ids_q, vectors, qs, weights, scalars, None, k=k, metric=metric,
+        block_s=block_s, use_kernel=use_kernel, interpret=interpret)
+    return ids, scores, n_qual
 
 
 def _next_pow2(n: int) -> int:

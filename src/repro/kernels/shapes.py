@@ -76,3 +76,17 @@ def gather_tile_bytes(dims: tuple, n_scalars: int, n_clauses: int, *,
     pinned = (sum(dims) + n_clauses * (2 * n_scalars + 1) + block_s) * _F32
     out = 2 * k * _F32
     return scratch + scal + pinned + out
+
+
+def int8_gather_tile_bytes(dims: tuple, n_scalars: int, n_clauses: int, *,
+                           k: int = MAX_TOPK,
+                           block_s: int = GATHER_BLOCK_S) -> int:
+    """``gather_tile_bytes`` for the quantized tier: each column's gathered
+    tile is int8 (1 B/elem) plus a (block_s, 1) f32 per-row dequant scale
+    tile; everything else (scalar tile, pinned query/predicate operands,
+    output pools) is unchanged."""
+    scratch = block_s * sum(d + _F32 for d in dims)  # int8 tile + scale col
+    scal = block_s * n_scalars * _F32
+    pinned = (sum(dims) + n_clauses * (2 * n_scalars + 1) + block_s) * _F32
+    out = 2 * k * _F32
+    return scratch + scal + pinned + out

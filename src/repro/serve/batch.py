@@ -46,8 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import (
-    EngineCaps, HybridExecutor, PGVECTOR, legalize_for_shard, plan_columns,
-    recall_at_k, rerank_scored,
+    CANDIDATE_PAD_FLOOR, EngineCaps, HybridExecutor, K_BUCKET_FLOOR, PGVECTOR,
+    legalize_for_shard, next_bucket, plan_columns, pow2_at_most, recall_at_k,
+    rerank_scored, rrf_extras, rrf_union_total, subquery_width,
 )
 from repro.core.query import (
     ExecutionPlan, KMULT_GRID, MAX_SCAN_GRID, MHQ, NPROBE_GRID,
@@ -114,20 +115,43 @@ class CostModel:
     (``SINGLE_DEVICE``) when shards are smaller than ``min_shard_rows``,
     where the O(shards·k) merge costs more than it saves.
 
+    The crossover is PER PRECISION: the int8 candidate tier gathers 1-byte
+    elements (4× less memory traffic in the heavy stage) but pays an extra
+    fixed cost per batch — the exact fp32 rerank of the top-α·k survivors
+    is a second kernel dispatch. So ``crossover_int8 > crossover``: the
+    candidate-local region widens — int8 groups stay candidate-local at
+    scan budgets that would have pushed fp32 groups dense. Both int8
+    constants are measured by the same ``kernels_bench`` sweeps run
+    against the quantized path
+    (``benchmarks/results/quantized_crossover.json``); on this container
+    the measured fixed intercept is LOWER than fp32's in gathered-row
+    units (the rerank dispatch is small next to the cheaper per-row
+    gather the intercept is normalized by).
+
     ``force`` pins every group to one path (benchmarks and dispatcher
     tests): dense-flavored forces pin dense, local-flavored forces pin the
     context's local path."""
 
     crossover: float = 0.136
     overhead: float = 2048.0  # per-batch fixed cost, in gathered-row units
+    crossover_int8: float = 0.545  # measured: results/quantized_crossover.json
+    overhead_int8: float = 3350.0  # measured, same calibration run
     min_shard_rows: int = 4096
     force: Optional[str] = None
 
-    def choose(self, *, batch: int, scan: int, n_rows: int) -> str:
+    def constants(self, precision: str = "fp32") -> tuple[float, float]:
+        """(crossover, overhead) of one precision tier."""
+        if precision == "int8":
+            return self.crossover_int8, self.overhead_int8
+        return self.crossover, self.overhead
+
+    def choose(self, *, batch: int, scan: int, n_rows: int,
+               precision: str = "fp32") -> str:
         if self.force is not None:
             return CANDIDATE_LOCAL \
                 if self.force in (CANDIDATE_LOCAL, SHARDED_LOCAL) else DENSE
-        if batch * scan + self.overhead <= self.crossover * n_rows:
+        xo, oh = self.constants(precision)
+        if batch * scan + oh <= xo * n_rows:
             return CANDIDATE_LOCAL
         return DENSE
 
@@ -173,13 +197,15 @@ class ScoringDispatcher:
 
     def choose(self, *, batch: int, scan: int, group=None,
                force: Optional[str] = None,
-               prefer_dense: bool = False) -> str:
+               prefer_dense: bool = False,
+               precision: str = "fp32") -> str:
         if force is None and self.pins_dense(prefer_dense):
             force = DENSE
         path = force if force is not None else self.cost_model.choose(
-            batch=batch, scan=scan, n_rows=self.n_rows)
+            batch=batch, scan=scan, n_rows=self.n_rows, precision=precision)
         self.decisions.append(
-            {"group": group, "batch": batch, "scan": scan, "path": path})
+            {"group": group, "batch": batch, "scan": scan, "path": path,
+             "precision": precision})
         self.counts[path] = self.counts.get(path, 0) + 1
         return path
 
@@ -214,32 +240,18 @@ class ScoringDispatcher:
 
 # Registered static-shape vocabularies. Every shape-bearing static argument
 # a serving-path jit is called with must come from one of these grids, a
-# power-of-two ``next_bucket`` value, or one of the two floors below —
-# that bound on distinct shapes is what bounds compile count, and boomlint
-# (repro.analysis, rule RC001) checks call sites against this registry.
-K_BUCKET_FLOOR = 16  # smallest padded top-k bucket
-CANDIDATE_PAD_FLOOR = 64  # smallest padded candidate-slot bucket
+# power-of-two ``next_bucket`` value, or one of the two floors (the floors,
+# ``next_bucket``/``pow2_at_most`` and the candidate-union width formulas
+# live in core/executor — plan semantics shared with the sequential path —
+# and are re-exported here) — that bound on distinct shapes is what bounds
+# compile count, and boomlint (repro.analysis, rule RC001) checks call
+# sites against this registry.
 SHAPE_GRIDS = {
     "clause": predicates.CLAUSE_GRID,
     "nprobe": NPROBE_GRID,
     "max_scan": MAX_SCAN_GRID,
     "kmult": KMULT_GRID,
 }
-
-
-def next_bucket(n: int, floor: int = 1) -> int:
-    """Smallest power-of-two bucket ≥ n (≥ floor)."""
-    b = floor
-    while b < n:
-        b <<= 1
-    return b
-
-
-def pow2_at_most(n: int) -> int:
-    b = 1
-    while b * 2 <= n:
-        b <<= 1
-    return b
 
 
 def pad_selection(sel: np.ndarray) -> np.ndarray:
@@ -451,7 +463,12 @@ class BatchedHybridExecutor:
         compiled kernels) stays small. The legalized DNF clause bucket
         (CLAUSE_GRID) joins both keys: every query in a group then stacks
         to one static (B, C, M) predicate shape, and mixed-complexity
-        batches split into at most len(CLAUSE_GRID) extra groups.
+        batches split into at most len(CLAUSE_GRID) extra groups. The
+        plan's candidate-tier precision (PRECISION_GRID) joins the index
+        key: int8 and fp32 groups compile different scoring kernels AND
+        take different cost-model crossovers, so they must never share a
+        chunk (legalization pins filter_first to fp32, so its key carries
+        no precision component).
         """
         cb = predicates.clause_bucket(q.predicates)
         if plan.strategy == "filter_first":
@@ -464,7 +481,7 @@ class BatchedHybridExecutor:
                       self.engine.nprobe_cap)
             subs.append((i, min(sp.k_mult * q.k, n), np0,
                          min(sp.max_scan, n), sp.iterative))
-        return ("ix", cb, q.k, tuple(subs))
+        return ("ix", cb, q.k, tuple(subs), plan.precision)
 
     def _group_scan(self, key) -> int:
         """Per-query, per-active-column candidate budget of a group — the
@@ -616,21 +633,22 @@ class BatchedHybridExecutor:
         grid stays as bounded as the single-device group keys."""
         fkey = (key, act)
         if fkey not in self._sivf_fns:
-            _, _, k, subs = key
+            k, subs = key[2], key[3]
             shard_subs, total = [], 0
             for (col, k_i, np0, ms, _it) in subs:
                 sivf = self._sivf_col(col)
                 k_s, np_s, ms_s = legalize_for_shard(
                     k_i, np0, ms, n_shards=self.n_shards,
                     shard_len=sivf.shard_len, n_clusters=sivf.n_clusters)
-                ks = min(next_bucket(k_s, K_BUCKET_FLOOR), ms_s)
+                ks = subquery_width(k_s, ms_s)
                 shard_subs.append((act.index(col), k_s, ks, np_s, ms_s))
                 total += k_s
+            pad_total = (rrf_union_total(total) if len(shard_subs) > 1
+                         else next_bucket(total, CANDIDATE_PAD_FLOOR))
             self._sivf_fns[fkey] = sharded_ivf_topk(
                 self.n_shards, self.mesh, self.shard_axes,
                 subs=tuple(shard_subs), k=k, n_cols=len(act),
-                metric=self.table.schema.metric,
-                pad_total=next_bucket(total, CANDIDATE_PAD_FLOOR))
+                metric=self.table.schema.metric, pad_total=pad_total)
         return self._sivf_fns[fkey]
 
     def _run_chunk_sharded_ivf(self, key, qs: list[MHQ], part: list[int],
@@ -638,35 +656,51 @@ class BatchedHybridExecutor:
         """One plan-driven sharded group chunk: per-shard IVF probing with
         the group's shard-legalized knobs, candidate-local rerank inside
         each shard, one O(shards · k) merge — no dense score matrix is
-        ever built. Per-shard underfill escalation afterwards: a query
-        whose MERGED result underfills k (the single-shard learned path's
-        escalation trigger, kept at shard scale) re-runs as an exact
-        masked top-k over ONLY its underfilled shard-subset's rows —
-        preserving the recall contract without rescanning the well-filled
-        shards."""
+        ever built. Per-shard BOUNDARY escalation afterwards: a shard that
+        kept a full local top-k whose weakest kept score sits at-or-above
+        the merged k-th (its truncated local k+1-th row may belong in the
+        global top-k) re-runs as an exact masked top-k over ONLY that
+        shard-subset's rows; merged underfill keeps the old escalate-all
+        fallback. Shards whose boundary is strictly below the merged
+        cutoff provably contributed everything relevant and are never
+        rescanned."""
         t = self.table
-        _, _, k, subs = key
+        k, subs = key[2], key[3]  # per-shard probing scores fp32 — the
+        # int8 tier targets the single-device candidate-local path, so an
+        # int8-precision group routed here keeps the exact scoring
         bb = min(next_bucket(len(qs)), bucket_cap)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
         vecs, qsb, wsub, act = self._active_columns(qs, qv_b, w_b)
         sivfs = [self._sivf_col(col) for (col, *_r) in subs]
         fn = self._sivf_fn(key, act)
-        ids, scores, fill = fn(
+        ids, scores, fill, bnd = fn(
             tuple(s.centroids for s in sivfs),
             tuple(s.sorted_rows for s in sivfs),
             tuple(s.offsets for s in sivfs),
             vecs, t.scalars, pred_b, qsb, wsub)
-        # fill and the merged ids ride along with the results in one
-        # transfer — no mid-chunk host round-trip gates the kernels.
-        # Escalation keeps the single-device recall contract at shard
-        # scale: a query escalates only when its MERGED result underfills
-        # k (same trigger as the single-shard learned path), and the exact
-        # retry then covers only its underfilled shard-subset — shards
-        # that already contributed k candidates are never rescanned.
+        # fill/boundary and the merged ids ride along with the results in
+        # one transfer — no mid-chunk host round-trip gates the kernels.
+        # The finer trigger fixes "escalation never bites": the merged
+        # result almost never underfills (other shards pad it out), so
+        # probe losses inside a DOMINANT shard went unnoticed. A shard
+        # whose weakest kept score reaches the merged cutoff had its
+        # whole contribution rank globally — its probing budget, not the
+        # data, bound what it surfaced (a full local top-k was truncated;
+        # a shorter one means the probe itself starved) — and only that
+        # shard-subset pays the exact retry. A shard strictly below the
+        # cutoff provably surfaced everything relevant.
         fill_np = np.asarray(fill)
+        bnd_np = np.asarray(bnd)
         ids_np0 = np.asarray(ids)
+        sc_np0 = np.asarray(scores)
         under = (ids_np0 >= 0).sum(axis=1) < k  # (bb,) merged underfill
-        need = (fill_np < k) & under[:, None]
+        kth = sc_np0[:, -1]  # merged k-th score (NEG when underfilled)
+        need = under[:, None] & (fill_np < k)
+        if fill_np.shape[1] > 1:
+            # S=1 stays bit-for-bit the single-device candidate-local path:
+            # the lone shard's local top-k IS the merge, so its boundary
+            # always sits at the cutoff and carries no signal
+            need |= ~under[:, None] & (bnd_np >= kth[:, None])
         need[len(qs):] = False  # padding queries never escalate
         self.escalated.update(part[j] for j in np.flatnonzero(
             need.any(axis=1)))
@@ -700,11 +734,10 @@ class BatchedHybridExecutor:
         cur_ids = ids[jnp.asarray(sel_p)]
         cur_sc = scores[jnp.asarray(sel_p)]
         # ONE batched dense retry for the whole subset, shard scope
-        # enforced by the allow mask. (Under the merged-underfill trigger
-        # every escalated query has ALL shards below k — a shard with k
-        # candidates would have filled the merge — so the allow mask is
-        # in practice the whole table for those queries; it stays explicit
-        # so a finer future trigger inherits correct scoping for free.)
+        # enforced by the allow mask. Under the boundary trigger the mask
+        # is genuinely strict: typically a single dominant shard per
+        # escalated query, so only shard_len rows are rescanned — the
+        # well-filled shards never pay the retry.
         rq_j = jnp.asarray(sel_p)
         need_p = np.array(need[sel_p])
         need_p[len(sel):] = False  # padding rows draw nothing
@@ -867,9 +900,11 @@ class BatchedHybridExecutor:
                    *, bucket_cap: int, scores_b: Optional[tuple] = None):
         t = self.table
         bb = min(next_bucket(len(qs)), bucket_cap)
+        precision = key[4] if key[0] == "ix" else "fp32"
         path = self.dispatcher.choose(batch=bb, scan=self._group_scan(key),
                                       group=key[:3],
-                                      prefer_dense=scores_b is not None)
+                                      prefer_dense=scores_b is not None,
+                                      precision=precision)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
 
         if path == CANDIDATE_LOCAL:
@@ -884,11 +919,11 @@ class BatchedHybridExecutor:
                     weighted_scores(), t.scalars, pred_b,
                     k=k, max_candidates=mc)
             else:
-                _, _, k, subs = key
+                k, subs = key[2], key[3]
                 cand = [self._batched_subquery(col, col_scores(col), pred_b,
                                                qv_b[col], k_i, np0, ms, it)
                         for (col, k_i, np0, ms, it) in subs]
-                rows_b = self._pad_candidates(cand)
+                rows_b = self._union_candidates(cand, subs)
                 out_ids, out_scores = _rerank_batch(
                     weighted_scores(), rows_b, k=k, total=rows_b.shape[1])
         ids_np, scores_np = np.asarray(out_ids), np.asarray(out_scores)
@@ -898,8 +933,11 @@ class BatchedHybridExecutor:
     def _run_chunk_local(self, key, qs: list[MHQ], pred_b, qv_b, w_b):
         """Candidate-local execution of one group chunk: only the legalized
         candidate budget is ever gathered/scored — no (bb, n) score matrix.
-        Subqueries run through ``ivf.search_local_batch`` and the re-rank /
-        filter-first through the fused gather+score kernel path."""
+        Subqueries run through ``ivf.search_local_batch`` (or its int8
+        two-stage variant when the group's plan precision says so — the
+        candidate union that reaches the final weighted rerank below is
+        then already fp32-exact per column) and the re-rank / filter-first
+        through the fused gather+score kernel path."""
         t = self.table
         if key[0] == "ff":
             _, _, k, mc = key
@@ -908,11 +946,12 @@ class BatchedHybridExecutor:
                 max_candidates=mc, n_vec=t.schema.n_vec,
                 metric=t.schema.metric)
             return out_ids, out_scores
-        _, _, k, subs = key
+        k, subs, precision = key[2], key[3], key[4]
         cand = [self._batched_subquery(col, None, pred_b, qv_b[col], k_i,
-                                       np0, ms, it, local=True)
+                                       np0, ms, it, local=True,
+                                       precision=precision)
                 for (col, k_i, np0, ms, it) in subs]
-        rows_b = self._pad_candidates(cand)
+        rows_b = self._union_candidates(cand, subs)
         vecs, qsb, wsub, _ = self._active_columns(qs, qv_b, w_b)
         out_ids, out_scores, _ = _gather_rerank_batch(
             rows_b.astype(jnp.int32), vecs, qsb, wsub, t.scalars,
@@ -943,11 +982,36 @@ class BatchedHybridExecutor:
                              constant_values=-1)
         return rows_b
 
+    def _union_candidates(self, cand_wide: list, subs):
+        """Candidate union of one ix-group chunk from the columns' WIDE
+        ranked lists: each column's exact top-k_i block (the engine
+        contract — those rows are always reranked), then, for multi-column
+        groups, RRF-fused extras drawn from the probed tails filling the
+        padded bucket (``executor.rrf_extras``). A global top-k row can
+        rank below top-k_i in every column on weight-skewed queries; the
+        fused extras recover it when its COMBINED ranks are strong, at
+        zero extra probing cost — the tails were already ranked. Widths
+        are all derived from the static group key, so the jit cache stays
+        bounded; single-column groups keep the plain truncate-and-pad
+        union (fusion of one ranking is that ranking)."""
+        kis = tuple(s[1] for s in subs)
+        cand = [cw[:, :ki] for cw, ki in zip(cand_wide, kis)]
+        if len(cand_wide) < 2:
+            return self._pad_candidates(cand)
+        base = jnp.concatenate(cand, axis=1)
+        sum_ki = base.shape[1]
+        extras = rrf_extras(tuple(cand_wide), kis=kis,
+                            n_extra=rrf_union_total(sum_ki) - sum_ki)
+        return jnp.concatenate([base, extras], axis=1)
+
     def _batched_subquery(self, col: int, rs_b, pred_b, q_b, k_i: int,
                           nprobe: int, max_scan: int, iterative: bool,
-                          *, local: bool = False):
+                          *, local: bool = False, precision: str = "fp32"):
         """One column's filtered subquery for the whole chunk, with grouped
-        iterative re-expansion. Returns candidate ids (bb, k_i).
+        iterative re-expansion. Returns ranked candidate ids at the FULL
+        padded probe width (bb, ks), ks ≥ k_i: callers take the top-k_i
+        prefix as the exact union block and feed the tail to RRF fusion
+        (``_union_candidates``).
 
         Dense mode (``local=False``): ``rs_b`` (bb, n) holds the column's
         dense scores, so re-expansion rounds never re-score vectors — only
@@ -960,10 +1024,15 @@ class BatchedHybridExecutor:
         size."""
         t, index = self.table, self.indexes[col]
         cap = min(index.n_clusters, self.engine.nprobe_cap)
-        ks = min(next_bucket(k_i, K_BUCKET_FLOOR), max_scan)
+        ks = subquery_width(k_i, max_scan)
 
         def probe(np_, pred, qb, rs):
-            if local:
+            if local and precision == "int8":
+                vq, sc = t.quantized(col)
+                ids_, _, _, nq = ivf.search_local_batch_int8(
+                    index, t.vectors[col], vq, sc, t.scalars, pred, qb,
+                    nprobe=np_, max_scan=max_scan, k=ks)
+            elif local:
                 ids_, _, _, nq = ivf.search_local_batch(
                     index, t.vectors[col], t.scalars, pred, qb,
                     nprobe=np_, max_scan=max_scan, k=ks)
@@ -974,7 +1043,6 @@ class BatchedHybridExecutor:
             return ids_, nq
 
         ids, n_qual = probe(nprobe, pred_b, q_b, rs_b)
-        ids = ids[:, :k_i]
         if not iterative:
             return ids
         done = np.asarray(n_qual) >= k_i  # ONE host sync per group round
@@ -987,7 +1055,7 @@ class BatchedHybridExecutor:
             pred_sub = predicates.take(pred_b, sel_p)
             ids2, nq2 = probe(nprobe, pred_sub, q_b[sel_p],
                               rs_b[sel_p] if rs_b is not None else None)
-            ids = ids.at[jnp.asarray(sel)].set(ids2[: len(sel), :k_i])
+            ids = ids.at[jnp.asarray(sel)].set(ids2[: len(sel)])
             # boomlint: ignore[HS001] one sync per re-expansion round is
             # the iterative contract (the round count is the doubling
             # ladder, not the batch size — same shape as

@@ -374,15 +374,23 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
       fn(cent_t, rows_t, offs_t  — per-probed-column ``ShardedIVF`` arrays,
          vectors tuple[(n, d_i)], scalars (n, M), pred_b (stacked over B),
          qv_t tuple[(B, d_i)], w_b (B, n_cols))
-        -> (ids (B, k), scores (B, k), fill (B, S))
+        -> (ids (B, k), scores (B, k), fill (B, S), boundary (B, S))
 
     ``fill[:, s]`` is how many candidates shard ``s`` contributed per query
-    — the executor's per-shard underfill escalation reads it. Without a
-    mesh the shard axis is vmapped on one device (a non-divisible table is
-    zero-padded; padded rows are unreachable by construction); with a mesh
-    the identical body runs under ``shard_map`` and the merge is one
-    all-gather, in the same shard order.
+    and ``boundary[:, s]`` is shard ``s``'s weakest VALID kept local score
+    (its k-th when the local top-k filled; NEG when it kept nothing) — the
+    executor's per-shard escalation reads both: a shard whose boundary
+    reaches the merged k-th score had its ENTIRE contribution land at or
+    above the global cutoff, so its probing budget (local truncation or a
+    starved probe), not the data, was the binding constraint and rows it
+    never surfaced may belong in the global top-k — the loss mode the old
+    merged-underfill trigger could never see. Without a mesh the shard
+    axis is vmapped on one device (a non-divisible table is zero-padded;
+    padded rows are unreachable by construction); with a mesh the identical
+    body runs under ``shard_map`` and the merge is one all-gather, in the
+    same shard order.
     """
+    from repro.core.executor import rrf_extras
     from repro.kernels.gather_score import gather_score_topk
     from repro.vectordb import ivf as _ivf
 
@@ -392,15 +400,26 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
     def body(cent_t, rows_t, offs_t, vecs_t, scal, row0, pred_b, qv_t, w_b):
         """One shard: probe each planned column, rerank the union, local
         top-k. All ids are shard-local until the final globalization."""
-        cands = []
+        wide, cands = [], []
         for j, (pos, k_i, ks, np_s, ms_s) in enumerate(subs):
             idx = _ivf.IVFIndex(cent_t[j], rows_t[j], offs_t[j], metric)
             ids_j, _, _, _ = _ivf.search_local_batch(
                 idx, vecs_t[pos], scal, pred_b, qv_t[pos],
                 nprobe=np_s, max_scan=ms_s, k=ks)
+            wide.append(ids_j)
             cands.append(ids_j[:, :k_i])
         rows_b = jnp.concatenate(cands, axis=1)
-        if pad_total > rows_b.shape[1]:
+        # multi-column unions fill the pad slots with RRF-fused extras from
+        # the wide probe tails — the SAME composition the single-device
+        # executors build (`_union_candidates`), so S=1 stays bit-for-bit
+        # and every shard recovers rows ranking below top-k_i in all of its
+        # per-column lists at zero extra probing cost
+        if len(subs) > 1 and pad_total > rows_b.shape[1]:
+            extras = rrf_extras(
+                tuple(wide), kis=tuple(s[1] for s in subs),
+                n_extra=pad_total - rows_b.shape[1])
+            rows_b = jnp.concatenate([rows_b, extras], axis=1)
+        elif pad_total > rows_b.shape[1]:
             rows_b = jnp.pad(rows_b,
                              ((0, 0), (0, pad_total - rows_b.shape[1])),
                              constant_values=-1)
@@ -409,7 +428,15 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
             k=k, metric=metric)
         fill = jnp.sum(ids_l >= 0, axis=1).astype(jnp.int32)
         ids_g = jnp.where(ids_l >= 0, ids_l + row0, -1)
-        return ids_g, scores_l, fill
+        # weakest VALID kept local score (scores are sorted descending, so
+        # that is slot fill-1, the k-th when the shard kept a full top-k):
+        # the boundary the escalation trigger compares against the merged
+        # k-th. NEG when the shard contributed nothing.
+        last = jnp.maximum(fill - 1, 0)[:, None]
+        boundary = jnp.where(
+            fill > 0, jnp.take_along_axis(scores_l, last, axis=1)[:, 0],
+            jnp.float32(NEG))
+        return ids_g, scores_l, fill, boundary
 
     if mesh is None:
         def run(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b):
@@ -418,11 +445,11 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
             if s == 1:
                 # degenerate configuration: EXACTLY the single-device
                 # candidate-local chunk (no vmap, no pad, identity merge)
-                ids, sc, fill = body(
+                ids, sc, fill, bnd = body(
                     tuple(c[0] for c in cent_t), tuple(r[0] for r in rows_t),
                     tuple(o[0] for o in offs_t), vectors, scalars,
                     jnp.asarray(0, jnp.int32), pred_b, qv_t, w_b)
-                return ids, sc, fill[:, None]
+                return ids, sc, fill[:, None], bnd[:, None]
             pad = s * shard_len - n
             if pad:
                 vectors = tuple(jnp.pad(v, ((0, pad), (0, 0)))
@@ -432,7 +459,7 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
                             for v in vectors)
             scal_sh = scalars.reshape(s, shard_len, scalars.shape[1])
             row0 = jnp.arange(s, dtype=jnp.int32) * shard_len
-            ids, sc, fill = jax.vmap(
+            ids, sc, fill, bnd = jax.vmap(
                 body, in_axes=(0, 0, 0, 0, 0, 0, None, None, None))(
                 cent_t, rows_t, offs_t, vecs_sh, scal_sh, row0,
                 pred_b, qv_t, w_b)
@@ -441,7 +468,7 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
             s_all = jnp.swapaxes(sc, 0, 1).reshape(b, s * k)
             g_all = jnp.swapaxes(ids, 0, 1).reshape(b, s * k)
             mi, ms = _merge_shard_candidates(s_all, g_all, k=k)
-            return mi, ms, jnp.swapaxes(fill, 0, 1)
+            return mi, ms, jnp.swapaxes(fill, 0, 1), jnp.swapaxes(bnd, 0, 1)
 
         return jax.jit(run)
 
@@ -451,29 +478,29 @@ def sharded_ivf_topk(n_shards: int, mesh: Mesh | None = None,
 
     def local(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b,
               row0):
-        ids_g, sc, fill = body(
+        ids_g, sc, fill, bnd = body(
             tuple(c[0] for c in cent_t), tuple(r[0] for r in rows_t),
             tuple(o[0] for o in offs_t), vectors, scalars, row0[0],
             pred_b, qv_t, w_b)
         s_all = jax.lax.all_gather(sc, axes, axis=1, tiled=True)
         g_all = jax.lax.all_gather(ids_g, axes, axis=1, tiled=True)
         mi, ms = _merge_shard_candidates(s_all, g_all, k=k)
-        return mi, ms, fill[None, :]
+        return mi, ms, fill[None, :], bnd[None, :]
 
     fn = compat.shard_map(
         local, mesh=mesh,
         in_specs=(sub_specs3, sub_specs2, sub_specs2, vec_specs,
                   P(axes, None), P(), tuple(P() for _ in range(n_cols)),
                   P(), P(axes)),
-        out_specs=(P(), P(), P(axes, None)),
+        out_specs=(P(), P(), P(axes, None), P(axes, None)),
         check_vma=False)
 
     def run(cent_t, rows_t, offs_t, vectors, scalars, pred_b, qv_t, w_b):
         n = scalars.shape[0]
         assert n % s == 0, (n, s)
         row0 = jnp.arange(s, dtype=jnp.int32) * (n // s)
-        mi, ms, fill = fn(cent_t, rows_t, offs_t, vectors, scalars,
-                          pred_b, qv_t, w_b, row0)
-        return mi, ms, jnp.swapaxes(fill, 0, 1)
+        mi, ms, fill, bnd = fn(cent_t, rows_t, offs_t, vectors, scalars,
+                               pred_b, qv_t, w_b, row0)
+        return mi, ms, jnp.swapaxes(fill, 0, 1), jnp.swapaxes(bnd, 0, 1)
 
     return jax.jit(run)

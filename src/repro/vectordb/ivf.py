@@ -363,3 +363,44 @@ def search_local_batch(
         metric=index.metric, use_kernel=use_kernel, interpret=interpret,
         block_s=block_s)
     return ids, scores, jnp.sum(valid_b, axis=1), n_qual
+
+
+@partial(jax.jit, static_argnames=("nprobe", "max_scan", "k", "rerank_mult",
+                                   "use_kernel", "interpret", "block_s"))
+def search_local_batch_int8(
+    index: IVFIndex,
+    vectors: jax.Array,  # (n, d) exact fp32 column (the rerank tier)
+    vectors_i8: jax.Array,  # (n, d) int8 replica (the scoring tier)
+    scales: jax.Array,  # (n,) f32 per-row dequant scales
+    scalars: jax.Array,  # (n, M) — exact fp32, shared by both tiers
+    pred_b: PredicateLike,  # stacked, leading axis B
+    q_b: jax.Array,  # (B, d)
+    *,
+    nprobe: int,
+    max_scan: int,
+    k: int,
+    rerank_mult: int | None = None,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    block_s: int = GATHER_BLOCK_S,
+):
+    """Quantized-tier ``search_local_batch``: identical slot selection, but
+    the probed candidates are scored from the int8 replica (predicate
+    filtering stays on the exact fp32 scalars) and only the top-α·k
+    quantized survivors are re-scored exactly in fp32
+    (``kernels.gather_score.gather_score_topk_int8``). Returned scores are
+    exact fp32; quantization can only perturb WHICH α·k candidates reach
+    the rerank, never their final scores or the qualified counts that
+    drive iterative re-expansion."""
+    from repro.kernels.gather_score import gather_score_topk_int8
+
+    rows_b, valid_b = jax.vmap(
+        lambda q: probe_slots(index, q, nprobe=nprobe, max_scan=max_scan))(q_b)
+    cand = jnp.where(valid_b, rows_b, -1).astype(jnp.int32)
+    w = jnp.ones((q_b.shape[0], 1), jnp.float32)
+    kwargs = {} if rerank_mult is None else {"rerank_mult": rerank_mult}
+    ids, scores, n_qual = gather_score_topk_int8(
+        cand, (vectors,), (vectors_i8,), (scales,), (q_b,), w, scalars,
+        pred_b, k=k, metric=index.metric, use_kernel=use_kernel,
+        interpret=interpret, block_s=block_s, **kwargs)
+    return ids, scores, jnp.sum(valid_b, axis=1), n_qual

@@ -53,10 +53,28 @@ class Table:
     schema: TableSchema
     vectors: list[jax.Array]  # one (n, d_i) per vector column
     scalars: jax.Array  # (n, M) float32
+    # per-column symmetric int8 replica (the quantized scoring tier):
+    # vectors_i8[i] is (n, d_i) int8, scales[i] the (n,) f32 per-row absmax
+    # scale (zero-point is 0 by symmetry). Built lazily per column and
+    # maintained through append, so TieredTable compaction inherits it.
+    vectors_i8: Optional[list] = None
+    scales: Optional[list] = None
 
     @property
     def n_rows(self) -> int:
         return int(self.scalars.shape[0])
+
+    def quantized(self, i: int) -> tuple[jax.Array, jax.Array]:
+        """The column's int8 replica, built on first use and cached.
+        -> ((n, d_i) int8, (n,) f32 per-row scales)."""
+        if self.vectors_i8 is None:
+            self.vectors_i8 = [None] * self.schema.n_vec
+            self.scales = [None] * self.schema.n_vec
+        if self.vectors_i8[i] is None:
+            from repro.kernels.int8_scan import quantize_rows
+
+            self.vectors_i8[i], self.scales[i] = quantize_rows(self.vectors[i])
+        return self.vectors_i8[i], self.scales[i]
 
     @staticmethod
     def from_numpy(schema: TableSchema, vectors: list[np.ndarray], scalars: np.ndarray) -> "Table":
@@ -72,12 +90,29 @@ class Table:
         )
 
     def append(self, vectors: list[np.ndarray], scalars: np.ndarray) -> "Table":
-        """Immutable append (used by the data-update experiments)."""
-        return Table(
+        """Immutable append (used by the data-update experiments).
+
+        The scale is per ROW, so an append never re-quantizes old rows: any
+        already-built int8 replica carries over as (old replica ‖ quantized
+        new rows) — compaction keeps the quantized tier warm for free."""
+        new = Table(
             schema=self.schema,
             vectors=[jnp.concatenate([a, jnp.asarray(b, jnp.float32)]) for a, b in zip(self.vectors, vectors)],
             scalars=jnp.concatenate([self.scalars, jnp.asarray(scalars, jnp.float32)]),
         )
+        if self.vectors_i8 is not None and any(
+                q is not None for q in self.vectors_i8):
+            from repro.kernels.int8_scan import quantize_rows
+
+            new.vectors_i8 = [None] * self.schema.n_vec
+            new.scales = [None] * self.schema.n_vec
+            for i, nv in enumerate(vectors):
+                if self.vectors_i8[i] is None:
+                    continue
+                qn, sn = quantize_rows(jnp.asarray(nv, jnp.float32))
+                new.vectors_i8[i] = jnp.concatenate([self.vectors_i8[i], qn])
+                new.scales[i] = jnp.concatenate([self.scales[i], sn])
+        return new
 
 
 def similarity(q: jax.Array, vecs: jax.Array, metric: str) -> jax.Array:

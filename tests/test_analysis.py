@@ -203,7 +203,7 @@ def test_vmem_envelope_fits_default_budget():
 def test_vmem_envelope_detects_overflow():
     from repro.analysis import tracepass
     found = tracepass.check_vmem_envelope(LintConfig(vmem_budget=1024))
-    assert _rules(found) == {"PL001": 3}
+    assert _rules(found) == {"PL001": 4}
 
 
 # ---------------------------------------------------------------------------

@@ -145,12 +145,14 @@ _SUBPROC = textwrap.dedent("""
     fn_r = sharded_ivf_topk(4, None, subs=subs, k=k2, n_cols=1,
                             metric="dot", pad_total=64)
     with mesh:
-        ids_m, s_m, fill_m = fn_m(*args)
-    ids_l, s_l, fill_l = fn_r(*args)
+        ids_m, s_m, fill_m, bnd_m = fn_m(*args)
+    ids_l, s_l, fill_l, bnd_l = fn_r(*args)
     assert np.array_equal(np.asarray(ids_m), np.asarray(ids_l)), (ids_m, ids_l)
     assert np.allclose(np.asarray(s_m), np.asarray(s_l), atol=1e-5)
     assert np.array_equal(np.asarray(fill_m), np.asarray(fill_l))
     assert np.asarray(fill_m).shape == (qb, 4)
+    assert np.allclose(np.asarray(bnd_m), np.asarray(bnd_l), atol=1e-5)
+    assert np.asarray(bnd_m).shape == (qb, 4)
     print("sharded_ivf OK")
 
     # --- elastic replan onto a reshaped mesh ---

@@ -1,0 +1,176 @@
+"""Quantization-loss regression suite for the int8 scoring tier.
+
+The tier's contract (docs/quantized_tier.md): the int8 replica only decides
+WHICH top-α·k candidates reach the exact fp32 rerank — returned scores are
+always exact, predicates always evaluate on exact fp32 scalars, and the hot
+tier of a tiered table never touches the replica at all. These tests pin the
+recall cost of that candidate-selection perturbation against the pure-NumPy
+float64 oracle (tests/oracle.py) and against the fp32 candidate-local path
+on the SAME plans, across clause buckets C=1/2/4 and both metrics, plus the
+tiered hot∪cold case proving hot rows stay exact-fp32-scored under an int8
+cold plan.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from oracle import brute_force_topk, tie_aware_recall, tiered_brute_force_topk
+from repro.core.query import ExecutionPlan, MHQ, SubqueryParams
+from repro.serve.batch import BatchedHybridExecutor, CANDIDATE_LOCAL, CostModel
+from repro.vectordb import ivf
+from repro.vectordb.predicates import PredicateSet, Predicates
+from repro.vectordb.table import ScalarCol, Table, TableSchema, VectorCol
+
+N, D, M, K = 800, 24, 3, 10
+
+
+def _make_table(metric: str, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    schema = TableSchema(
+        vector_cols=(VectorCol("v0", D), VectorCol("v1", D)),
+        scalar_cols=tuple(ScalarCol(f"s{i}", "num") for i in range(M)),
+        metric=metric)
+    vecs = [rng.normal(size=(N, D)).astype(np.float32) for _ in range(2)]
+    scal = rng.uniform(0.0, 1.0, (N, M)).astype(np.float32)
+    t = Table.from_numpy(schema, vecs, scal)
+    idx = [ivf.build(v, 8, seed=i, metric=metric) for i, v in enumerate(t.vectors)]
+    return t, idx
+
+
+def _clause(rng):
+    col = int(rng.integers(0, M))
+    lo = float(rng.uniform(0.0, 0.5))
+    return {col: (lo, lo + 0.45)}
+
+
+def _workload(t, n_queries: int, clauses: int, seed: int) -> list[MHQ]:
+    rng = np.random.default_rng(seed)
+    wl = []
+    for _ in range(n_queries):
+        w = rng.uniform(0.2, 1.0, 2)
+        w = (w / w.sum()).astype(np.float32)
+        qv = tuple(jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+                   for _ in range(2))
+        if clauses == 1:
+            pred = Predicates.from_conditions(M, _clause(rng))
+        else:
+            pred = PredicateSet.from_clauses(
+                M, [_clause(rng) for _ in range(clauses)])
+        wl.append(MHQ(query_vectors=qv, weights=tuple(float(x) for x in w),
+                      predicates=pred, k=K))
+    return wl
+
+
+def _plan(precision: str) -> ExecutionPlan:
+    # nprobe = n_clusters: slot selection is exhaustive, so any recall gap
+    # vs the oracle is attributable to the scoring tier, not probing
+    return ExecutionPlan("index_scan", tuple(
+        SubqueryParams(k_mult=2, nprobe=8, max_scan=2048, iterative=False)
+        for _ in range(2)), precision=precision)
+
+
+def test_cost_model_per_precision_crossover():
+    """The calibrated per-precision constants
+    (benchmarks/results/quantized_crossover.json) widen the int8 tier's
+    candidate-local region: a (batch, scan, n_rows) point between the two
+    crossovers dispatches dense under fp32 but candidate-local under int8."""
+    from repro.serve.batch import DENSE, CostModel
+
+    cm = CostModel()
+    kw = dict(batch=8, scan=4096, n_rows=100_000)
+    assert cm.choose(**kw, precision="fp32") == DENSE
+    assert cm.choose(**kw, precision="int8") == CANDIDATE_LOCAL
+
+
+@pytest.mark.parametrize("metric", ["dot", "l2"])
+def test_int8_recall_vs_oracle_across_clause_buckets(metric):
+    """int8-tier recall against the float64 oracle, per clause bucket, and
+    the quantization loss vs the fp32 candidate-local path on identical
+    plans — the α·k rerank must keep the tier within a small recall delta
+    of exact scoring."""
+    t, idx = _make_table(metric)
+    bx = BatchedHybridExecutor(t, idx,
+                               cost_model=CostModel(force=CANDIDATE_LOCAL))
+    for clauses in (1, 2, 4):
+        wl = _workload(t, 8, clauses, seed=100 + clauses)
+        res8 = bx.execute_batch(wl, [_plan("int8")] * len(wl))
+        res32 = bx.execute_batch(wl, [_plan("fp32")] * len(wl))
+        r8, r32 = [], []
+        for q, (i8, s8), (i32, _) in zip(wl, res8, res32):
+            _, _, masked = brute_force_topk(
+                t, q.query_vectors, q.weights, q.predicates, q.k)
+            r8.append(tie_aware_recall(i8, masked, q.k))
+            r32.append(tie_aware_recall(i32, masked, q.k))
+            # exact-score contract: every returned int8-tier score is the
+            # EXACT weighted fp32 score of its id (the rerank re-scored it)
+            ids = np.asarray(i8)
+            sc = np.asarray(s8)
+            for pos in range(ids.shape[0]):
+                if ids[pos] >= 0:
+                    assert abs(sc[pos] - masked[ids[pos]]) <= \
+                        1e-3 + 1e-4 * abs(masked[ids[pos]])
+        assert np.mean(r8) >= 0.9, (metric, clauses, r8)
+        assert min(r8) >= 0.7, (metric, clauses, r8)
+        # quantization loss budget vs fp32 on the same candidate budget
+        assert np.mean(r32) - np.mean(r8) <= 0.05, (metric, clauses, r8, r32)
+
+
+def test_tiered_hot_rows_stay_exact_fp32_under_int8_cold_plan(monkeypatch):
+    """Tiered parity: with the COLD tier forced onto int8 plans, the hot
+    segment is still scored exactly in fp32 (``merge_hot_batch`` reads the
+    full-precision hot vectors — there is no hot int8 replica), so every
+    oracle top-k row living in the hot tier MUST be returned with its exact
+    score; int8 selection noise is confined to cold candidates."""
+    from repro.core.boomhq import BoomHQ, BoomHQConfig
+
+    rng = np.random.default_rng(7)
+    t, _ = _make_table("dot", seed=3)
+    bq = BoomHQ(t, BoomHQConfig(use_de=False, n_clusters=8))
+    bq.bind_cost_model(CostModel(force=CANDIDATE_LOCAL))
+    bq.bind_tiered(hot_capacity=256)
+
+    # queries first, then hot rows planted ON each query's weighted
+    # direction — those hot rows dominate the global top-k by construction
+    qrng = np.random.default_rng(55)
+    wl = [MHQ(query_vectors=tuple(
+                  jnp.asarray(qrng.normal(size=(D,)).astype(np.float32))
+                  for _ in range(2)),
+              weights=(0.7, 0.3), predicates=Predicates.none(M), k=K)
+          for _ in range(4)]
+    n_hot = 40
+    hot_vecs = [rng.normal(size=(n_hot, D)).astype(np.float32) * 0.01
+                for _ in range(2)]
+    for j, q in enumerate(wl):
+        for r in range(3):
+            row = 3 * j + r
+            for c in range(2):
+                hot_vecs[c][row] = (8.0 - 0.1 * r) * \
+                    np.asarray(q.query_vectors[c])
+    hot_scal = rng.uniform(0.0, 1.0, (n_hot, M)).astype(np.float32)
+    stats = bq.insert(list(hot_vecs), hot_scal)
+    assert not stats["needs_compaction"]  # hot rows stay in the hot tier
+
+    monkeypatch.setattr(
+        bq, "optimize_batch",
+        lambda qs, **kw: [_plan("int8")] * len(qs))
+    res = bq.execute_batch(wl)
+
+    segments = [(list(t.vectors), t.scalars), (hot_vecs, hot_scal)]
+    for j, (q, (ids, scores)) in enumerate(zip(wl, res)):
+        o_ids, _, masked = tiered_brute_force_topk(
+            segments, "dot", q.query_vectors, q.weights, q.predicates, q.k)
+        oracle_hot = {int(i) for i in o_ids if i >= N}
+        assert oracle_hot, "fixture broke: no hot rows in the oracle top-k"
+        got = {int(i) for i in np.asarray(ids) if i >= 0}
+        missing = oracle_hot - got
+        assert not missing, (
+            f"query {j}: hot-tier oracle rows {sorted(missing)} lost — the "
+            f"hot segment must be exact under an int8 cold plan")
+        sc = np.asarray(scores)
+        idn = np.asarray(ids)
+        for pos in range(idn.shape[0]):
+            if int(idn[pos]) in oracle_hot:
+                exact = masked[int(idn[pos])]
+                assert abs(sc[pos] - exact) <= 1e-3 + 1e-4 * abs(exact)
+        assert tie_aware_recall(ids, masked, q.k) >= 0.9

@@ -196,6 +196,77 @@ def test_selective_predicate_escalates_to_exact(tiny_table):
         set(np.flatnonzero(masked > -1e29).tolist())
 
 
+def test_boundary_trigger_escalates_dominant_shard_only(monkeypatch):
+    """The finer escalation trigger (merged-underfill almost never fires —
+    other shards pad the merge out, so probe misses in a DOMINANT shard
+    went unnoticed): a shard whose local top-k boundary score sits at the
+    merged k-th cutoff was truncated while still globally competitive and
+    re-runs exact — and ONLY that shard. Pins all three claims:
+    the merged result is full (the old trigger stays silent), the exact
+    retry rescans a strict shard-subset, and the retry restores the oracle
+    top-k the probe missed."""
+    from repro.core.query import MHQ
+    from repro.vectordb.predicates import Predicates
+
+    rng = np.random.default_rng(5)
+    n, d, m, n_shards, k = 600, 16, 2, 3, 10
+    shard_len = n // n_shards
+    schema = TableSchema(
+        vector_cols=(VectorCol("v0", d),),
+        scalar_cols=tuple(ScalarCol(f"s{i}", "num") for i in range(m)))
+    qdir = rng.normal(size=(d,)).astype(np.float32)
+    qdir /= np.linalg.norm(qdir)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    # shard 1 dominates: its rows carry a strong query-direction component
+    # at varied magnitudes plus noise, so they spread over many clusters
+    # and a tight nprobe provably misses some of the global top-k
+    boost = np.linspace(4.0, 12.0, shard_len).astype(np.float32)
+    vecs[shard_len: 2 * shard_len] += boost[:, None] * qdir[None, :]
+    t = Table.from_numpy(
+        schema, [vecs], rng.uniform(0, 1, (n, m)).astype(np.float32))
+    idx = [ivf.build(t.vectors[0], 24, seed=0)]
+    wl = [MHQ(query_vectors=(jnp.asarray(qdir),), weights=(1.0,),
+              predicates=Predicates.none(m), k=k)]
+    tight = ExecutionPlan("index_scan", (
+        SubqueryParams(k_mult=2, nprobe=1, max_scan=96, iterative=False),))
+
+    captured = {}
+    orig = BatchedHybridExecutor._escalate_shards
+
+    def spy(self, ids, scores, need, **kw):
+        captured["need"] = need.copy()
+        return orig(self, ids, scores, need, **kw)
+
+    monkeypatch.setattr(BatchedHybridExecutor, "_escalate_shards", spy)
+    bx = BatchedHybridExecutor(t, idx, n_shards=n_shards,
+                               cost_model=CostModel(force=SHARDED_LOCAL))
+    (ids, _), = bx.execute_batch_sharded(wl, [tight])
+    q = wl[0]
+
+    # the merged result was FULL — the old merged-underfill trigger would
+    # never have escalated this query
+    assert int(np.sum(ids >= 0)) == k
+    # ... yet the boundary trigger fired, on the dominant shard ONLY
+    assert bx.escalated == {0}
+    need = captured["need"]
+    assert need[0].tolist() == [False, True, False]
+    assert not need[1:].any()  # padding queries never escalate
+    # the strict-subset retry restores the exact top-k (all of which lives
+    # in the dominant shard by construction)
+    assert _oracle_recall(t, q, ids) == 1.0
+    valid = ids[ids >= 0]
+    assert np.all((valid >= shard_len) & (valid < 2 * shard_len))
+
+    # counterfactual: with escalation disabled the same probe demonstrably
+    # missed part of the top-k — the trigger is what closes the gap
+    monkeypatch.setattr(BatchedHybridExecutor, "_escalate_shards",
+                        lambda self, ids, scores, need, **kw: (ids, scores))
+    bx2 = BatchedHybridExecutor(t, idx, n_shards=n_shards,
+                                cost_model=CostModel(force=SHARDED_LOCAL))
+    (ids2, _), = bx2.execute_batch_sharded(wl, [tight])
+    assert _oracle_recall(t, q, ids2) < 1.0
+
+
 def test_legalize_for_shard_budget_split():
     # global budget splits ceil-wise, floors at the per-shard k_i
     assert legalize_for_shard(40, 16, 2048, n_shards=4, shard_len=125_000,
