@@ -93,10 +93,10 @@ def _snapshot_recall(query, ids, snap, gt_cache) -> float:
             vecs = [np.asarray(v) for v in t.vectors]
             scal = np.asarray(t.scalars)
             for view in snap.hot_views:
-                vecs = [np.concatenate([a, np.asarray(b)[: view.count]])
-                        for a, b in zip(vecs, view.vectors)]
+                vecs = [np.concatenate([a, b[: view.count]])
+                        for a, b in zip(vecs, view.np_vectors)]
                 scal = np.concatenate(
-                    [scal, np.asarray(view.scalars)[: view.count]])
+                    [scal, view.np_scalars[: view.count]])
             tables[id(snap)] = Table.from_numpy(t.schema, vecs, scal)
         gt, _ = flat.ground_truth(
             tables[id(snap)], list(query.query_vectors),

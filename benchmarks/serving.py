@@ -483,6 +483,202 @@ def run_quantized(tables=CROSSOVER_TABLES, *, n_stream: int = 64,
     return rows_out
 
 
+def run_semcache(*, rows: int = 4000, n_unique: int = 16, n_trace: int = 80,
+                 tenants: int = 3, k: int = 10, n_insert: int = 48,
+                 eps_fuzzy: float = 1e-3, seed: int = 0) -> dict:
+    """Semantic-cache acceptance sweep (docs/semantic_cache.md).
+
+    One fitted suite over 'part' with a categorical tenant column and
+    namespaces bound, then a repeated-query trace (every unique query once,
+    then random repeats) served sequentially through ``AsyncServingEngine``
+    twice — without and with a ``SemanticCache(eps=0)``. The acceptance
+    claims the JSON must carry:
+
+      * ``speedup`` >= 2x: repeats resolve at submit time, zero scan cost;
+      * ``miss_recall_delta`` == 0.0: misses run the identical execution
+        path, so their oracle recall matches the uncached run exactly;
+      * ``replay_parity_mismatches`` == 0: every hit returns the SAME
+        ``(ids, scores)`` bits the uncached run computed for that position;
+      * ``epoch_swap.stale_hits`` == 0: after insert+compact bumps the
+        ``(epoch, n_rows)`` token, no pre-swap entry is ever served
+        (``stale_drops`` > 0 shows the flush actually happened);
+      * per-tenant accounting from ``ServeReport.tenants``.
+
+    A fuzzy pass (``eps=eps_fuzzy``, repeats perturbed within eps) shows
+    the semantic — not just exact — hit predicate."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.bench import datasets, queries
+    from repro.core.boomhq import BoomHQ, BoomHQConfig
+    from repro.core.executor import recall_at_k
+    from repro.core.rewriter import RewriterConfig
+    from repro.serve.queue import AsyncServingEngine
+    from repro.serve.semcache import SemanticCache
+    from repro.vectordb import flat
+    from repro.vectordb.table import ScalarCol, Table
+
+    rng = np.random.default_rng(seed + 11)
+    base = datasets.make("part", rows=rows, seed=seed)
+    tcol = rng.integers(0, tenants, base.n_rows).astype(np.float32)
+    schema = dataclasses.replace(
+        base.schema,
+        scalar_cols=tuple(base.schema.scalar_cols)
+        + (ScalarCol("tenant", "cat", tenants),))
+    table = Table.from_numpy(
+        schema, [np.asarray(v) for v in base.vectors],
+        np.concatenate([np.asarray(base.scalars), tcol[:, None]], axis=1))
+    t0 = time.time()
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=16, use_de=False,
+        rewriter=RewriterConfig(steps=20, refine_columns=False)))
+    bq.fit(queries.gen_workload(table, 12, n_vec_used=2, k=k, seed=seed))
+    bq.bind_tenants("tenant")
+    print(f"  semcache suite fitted in {time.time() - t0:.0f}s "
+          f"({table.n_rows} rows, {tenants} tenants)")
+
+    pool = [dataclasses.replace(q, tenant_id=i % tenants)
+            for i, q in enumerate(queries.gen_workload(
+                table, n_unique, n_vec_used=2, k=k, seed=seed + 100))]
+    # oracle GT over the tenant-FOLDED predicate (what the engine serves)
+    gts = [np.asarray(flat.ground_truth(
+        table, list(q.query_vectors), list(q.weights),
+        bq.resolve_tenant(q).predicates, q.k)[0]) for q in pool]
+    # every unique query once, then random repeats — repeats always arrive
+    # after their original completed (sequential awaits), so they CAN hit
+    trace = list(range(n_unique)) + list(
+        rng.integers(0, n_unique, n_trace - n_unique))
+
+    async def serve_seq(eng, qs):
+        async with eng:
+            t0 = time.perf_counter()
+            reqs = [await eng.submit(q) for q in qs]
+            dt = time.perf_counter() - t0
+        return reqs, dt
+
+    def engine(cache=None):
+        return AsyncServingEngine(bq, batch_size=8, max_wait=0.002,
+                                  semcache=cache)
+
+    # warm pass populates the jit specializations both timed passes reuse
+    asyncio.run(serve_seq(engine(), pool))
+
+    reqs_base, dt_base = asyncio.run(
+        serve_seq(engine(), [pool[i] for i in trace]))
+    cache = SemanticCache(eps=0.0)
+    eng_c = engine(cache)
+    reqs_c, dt_c = asyncio.run(
+        serve_seq(eng_c, [pool[i] for i in trace]))
+
+    hits = [r.cache_hit for r in reqs_c]
+    base_recs = [recall_at_k(np.asarray(r.result[0]), gts[trace[i]])
+                 for i, r in enumerate(reqs_base)]
+    miss_deltas, parity_bad = [], 0
+    for i, r in enumerate(reqs_c):
+        rec = recall_at_k(np.asarray(r.result[0]), gts[trace[i]])
+        if r.cache_hit:
+            b = reqs_base[i].result
+            if not (np.array_equal(np.asarray(r.result[0]),
+                                   np.asarray(b[0])[: pool[trace[i]].k])
+                    and np.array_equal(np.asarray(r.result[1]),
+                                       np.asarray(b[1])[: pool[trace[i]].k])):
+                parity_bad += 1
+        else:
+            miss_deltas.append(rec - base_recs[i])
+    rep = eng_c.report(gt_ids={r.seq: gts[trace[i]]
+                               for i, r in enumerate(reqs_c)})
+
+    # semantic (within-eps) repeats: perturb every repeat inside eps_fuzzy
+    fuzz = []
+    for j, i in enumerate(trace):
+        q = pool[i]
+        if j < n_unique:
+            fuzz.append(q)
+            continue
+        delta = eps_fuzzy / 4.0
+        fuzz.append(dataclasses.replace(q, query_vectors=tuple(
+            np.asarray(v, np.float32)
+            + (delta / np.sqrt(v.shape[-1])).astype(np.float32)
+            for v in q.query_vectors)))
+    reqs_f, _ = asyncio.run(
+        serve_seq(engine(SemanticCache(eps=eps_fuzzy)), fuzz))
+    fuzz_hits = sum(r.cache_hit for r in reqs_f)
+    fuzz_rec = float(np.mean([
+        recall_at_k(np.asarray(r.result[0]), gts[trace[j]])
+        for j, r in enumerate(reqs_f)]))
+
+    # epoch-swap oracle: populate -> insert+compact -> re-serve. Token bump
+    # must flush every pre-swap entry; zero stale results served.
+    bq.bind_tiered(hot_capacity=max(n_insert, 8))
+    try:
+        swap_cache = SemanticCache(eps=0.0)
+        eng_s = engine(swap_cache)
+
+        async def swap_phase():
+            async with eng_s:
+                first = [await eng_s.submit(q) for q in pool]
+                warm = [await eng_s.submit(q) for q in pool]
+                extra = datasets.make("part", rows=n_insert, seed=seed + 31)
+                scal = np.concatenate(
+                    [np.asarray(extra.scalars),
+                     rng.integers(0, tenants, n_insert)
+                        .astype(np.float32)[:, None]], axis=1)
+                bq.tiered.insert([np.asarray(v) for v in extra.vectors],
+                                 scal)
+                bq.tiered.compact()  # epoch e -> e+1
+                after = [await eng_s.submit(q) for q in pool]
+                return first, warm, after
+
+        _, warm, after = asyncio.run(swap_phase())
+        stale_hits = 0
+        for r in after:
+            if r.cache_hit:
+                ids, _ = bq.execute(r.query)
+                if not np.array_equal(np.asarray(r.result[0]),
+                                      np.asarray(ids)[: r.query.k]):
+                    stale_hits += 1
+        swap = {
+            "pre_swap_hits": sum(r.cache_hit for r in warm),
+            "post_swap_hits": sum(r.cache_hit for r in after),
+            "stale_drops": swap_cache.stats()["stale_drops"],
+            "stale_hits": stale_hits,
+            "epoch": bq.tiered.epoch,
+        }
+    finally:
+        bq.unbind_tiered()
+
+    out = {
+        "figure": "serving_semantic_cache",
+        "rows": table.n_rows, "tenants": tenants,
+        "n_unique": n_unique, "n_trace": n_trace, "k": k,
+        "qps_nocache": round(len(trace) / dt_base, 1),
+        "qps_cache": round(len(trace) / dt_c, 1),
+        "speedup": round(dt_base / dt_c, 2),
+        "hit_rate": round(sum(hits) / len(hits), 3),
+        "n_cache_hits": rep.n_cache_hits,
+        "mean_recall_cached_run": round(rep.mean_recall, 3),
+        "mean_recall_uncached_run": round(float(np.mean(base_recs)), 3),
+        "miss_recall_delta": round(
+            float(np.mean(miss_deltas)) if miss_deltas else 0.0, 4),
+        "replay_parity_mismatches": parity_bad,
+        "fuzzy_eps": eps_fuzzy,
+        "fuzzy_hit_rate": round(fuzz_hits / len(reqs_f), 3),
+        "fuzzy_mean_recall": round(fuzz_rec, 3),
+        "epoch_swap": swap,
+        "per_tenant": rep.tenants,
+    }
+    print(f"  semcache: {out['qps_nocache']} QPS uncached vs "
+          f"{out['qps_cache']} QPS cached -> {out['speedup']}x at hit rate "
+          f"{out['hit_rate']}; miss recall delta {out['miss_recall_delta']}, "
+          f"{parity_bad} parity mismatches; epoch swap: "
+          f"{swap['post_swap_hits']} post-swap hits, "
+          f"{swap['stale_drops']} stale drops, {swap['stale_hits']} stale "
+          f"served; fuzzy(eps={eps_fuzzy}) hit rate {out['fuzzy_hit_rate']} "
+          f"recall {out['fuzzy_mean_recall']}")
+    return out
+
+
 def run(sizes=None, dataset: str = "part", *, n_stream: int = 64,
         batch_size: int = 32, seed: int = 0, shards=DEFAULT_SHARDS,
         rate: float = DEFAULT_RATE, deadline: float = DEFAULT_DEADLINE
@@ -525,6 +721,10 @@ def main():
                     help="int8-then-rerank vs fp32 candidate-local "
                          "acceptance sweep (60k and 500k-row tables) "
                          "instead of the suite")
+    ap.add_argument("--semcache", action="store_true",
+                    help="semantic-cache acceptance sweep (repeated-query "
+                         "trace, epoch-swap staleness oracle, per-tenant "
+                         "accounting) instead of the suite")
     ap.add_argument("--sharded", action="store_true",
                     help="sharded-IVF acceptance sweep (500k rows, 4 "
                          "shards: learned per-shard probing vs exact "
@@ -545,6 +745,13 @@ def main():
     if args.crossover:
         res = {"figure": "serving_scoring_crossover",
                "table": run_crossover(n_stream=args.n_stream)}
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=2)
+        return
+
+    if args.semcache:
+        res = run_semcache()
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(res, f, indent=2)

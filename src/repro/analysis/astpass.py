@@ -162,6 +162,7 @@ class ModuleLint:
                 self._scan_hot(fn)
             if self._is_hot(fn):
                 self._check_ep001(fn)
+                self._check_ep002(fn)
         self._check_rc001()
         for call, body in self._shard_map_calls:
             self._check_sm001(call, body)
@@ -627,6 +628,55 @@ class ModuleLint:
                 f"compaction can swap the epoch mid-batch and mix row-id "
                 f"spaces; take one `tiered.snapshot()` at batch formation "
                 f"and read `(epoch, cold, hot_views)` from it")
+
+    # -- EP002: freshness of semantic-cache reads ----------------------------
+
+    def _check_ep002(self, fn):
+        """Serving hot paths must not read semantic-cache entry payloads
+        (``ids``/``scores``/``centroids``) without a freshness check: a raw
+        entry read can serve a result computed under a PREVIOUS epoch —
+        resurrecting pre-compaction row ids — or one that predates a
+        hot-tier insert. The sanctioned read is ``SemanticCache.lookup()``
+        (it enforces the ``(epoch, n_rows)`` token internally); a function
+        that compares an entry's ``token``/``epoch`` explicitly also
+        qualifies. Textual like EP001: attribute reads whose base mentions
+        ``cache`` or ``entry``."""
+        if self._has_freshness_check(fn):
+            return
+        banned = set(self.cfg.cache_entry_fields)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Attribute) or \
+                    self._owner_fn(node) is not fn:
+                continue
+            if node.attr not in banned:
+                continue
+            base = ast.unparse(node.value).lower()
+            if "cache" not in base and "entry" not in base:
+                continue
+            self._emit(
+                "EP002", node,
+                f"hot function `{_qualname(fn)}` reads cache-entry payload "
+                f"`{base}.{node.attr}` without a freshness check — a stale "
+                f"entry can resurrect pre-compaction results; go through "
+                f"`SemanticCache.lookup()` (token-checked) or compare the "
+                f"entry's token against the current `(epoch, n_rows)` first")
+
+    def _has_freshness_check(self, fn) -> bool:
+        """True when fn reads the cache through lookup() or explicitly
+        compares a token/epoch attribute (either side of any comparison)."""
+        for node in ast.walk(fn):
+            if self._owner_fn(node) is not fn:
+                continue
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "lookup":
+                return True
+            if isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Attribute) and \
+                            sub.attr in ("token", "epoch"):
+                        return True
+        return False
 
     @staticmethod
     def _assign_targets(node) -> set:

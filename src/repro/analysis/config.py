@@ -29,6 +29,16 @@ DEFAULT_TIERED_MUTABLE_FIELDS = (
     "_hot", "_cold", "_sealing", "_snap", "_epoch", "_compacting",
 )
 
+# EP002: payload fields of a semantic-cache entry (serve/semcache.py
+# CacheEntry). Serving hot paths must never read these directly — the
+# sanctioned read is SemanticCache.lookup(), which enforces the
+# (epoch, n_rows) freshness token; a raw entry read can resurrect
+# pre-compaction results. `token` itself is NOT banned: comparing it IS
+# the freshness check.
+DEFAULT_CACHE_ENTRY_FIELDS = (
+    "ids", "scores", "centroids",
+)
+
 # Fallback shape vocabulary used only when the live registries cannot be
 # imported (e.g. linting a checkout without jax). registered_shape_values()
 # prefers the single-source-of-truth exports.
@@ -80,6 +90,9 @@ class LintConfig:
     hot_functions: tuple = DEFAULT_HOT_FUNCTIONS
     # EP001: mutable TieredTable fields banned from hot-path reads
     tiered_mutable_fields: tuple = DEFAULT_TIERED_MUTABLE_FIELDS
+    # EP002: cache-entry payload fields banned from hot-path reads without
+    # a freshness (token/epoch) check
+    cache_entry_fields: tuple = DEFAULT_CACHE_ENTRY_FIELDS
     # run the level-2 trace checks (CLI --no-trace disables)
     trace: bool = True
     # report suppressed findings too (debugging)

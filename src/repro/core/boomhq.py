@@ -75,6 +75,7 @@ class BoomHQ:
         self.shard_mesh = None
         self.cost_model = None  # scoring-dispatch override (bind_cost_model)
         self.tiered = None  # streaming-ingest config (bind_tiered)
+        self.tenant_col = None  # namespace column index (bind_tenants)
         self._compactor = None  # background scheduler (serve attaches one)
         self._tiered_finetune = True
         # recent served queries, retained so compaction can pre-warm the
@@ -367,6 +368,7 @@ class BoomHQ:
                          0, 0, 0, 0, 0)))
 
     def execute(self, q: MHQ):
+        q = self.resolve_tenant(q)
         if self.tiered is not None:
             # tiered serving is snapshot-based and batch-shaped; a single
             # query rides a one-element batch against one snapshot
@@ -442,8 +444,8 @@ class BoomHQ:
             for view in snap.hot_views:
                 if view.count:
                     self.insert(
-                        [np.asarray(v)[: view.count] for v in view.vectors],
-                        np.asarray(view.scalars)[: view.count],
+                        [v[: view.count] for v in view.np_vectors],
+                        view.np_scalars[: view.count],
                         finetune=self._tiered_finetune)
         return self
 
@@ -496,6 +498,41 @@ class BoomHQ:
             lambda batch: self.execute_batch(batch, snapshot=snap),
             qs, len(qs))
 
+    def bind_tenants(self, column: int | str = "tenant") -> "BoomHQ":
+        """Serve MULTI-TENANT: queries carrying ``MHQ.tenant_id`` are scoped
+        to rows whose ``column`` equals that id. The namespace compiles to
+        an implicit ``tenant == id`` conjunct folded into every DNF clause
+        of the query's predicate (``predicates.fold_conjunct``) — the clause
+        bucket, C-grid legalization and every kernel stay untouched.
+        ``unbind_tenants()`` restores shared serving."""
+        if isinstance(column, str):
+            names = {sc.name: i for i, sc in
+                     enumerate(self.table.schema.scalar_cols)}
+            if column not in names:
+                raise KeyError(f"unknown scalar column {column!r}")
+            self.tenant_col = names[column]
+        else:
+            if not 0 <= int(column) < self.table.schema.n_scalar:
+                raise IndexError(f"scalar column {column} out of range")
+            self.tenant_col = int(column)
+        return self
+
+    def unbind_tenants(self) -> "BoomHQ":
+        self.tenant_col = None
+        return self
+
+    def resolve_tenant(self, q: MHQ) -> MHQ:
+        """Fold the query's tenant namespace into its predicate. No-op for
+        untenanted queries or unbound engines; idempotent, so front-ends
+        (the serving engine folds before its cache lookup) and the execute
+        paths may both resolve."""
+        if q.tenant_id is None or self.tenant_col is None:
+            return q
+        from repro.vectordb.predicates import fold_conjunct
+        t = float(int(q.tenant_id))
+        return dataclasses.replace(
+            q, predicates=fold_conjunct(q.predicates, self.tenant_col, t, t))
+
     def bind_cost_model(self, cost_model=None) -> "BoomHQ":
         """Override the scoring dispatcher's cost model (a
         ``serve.batch.CostModel`` — crossover ratio and/or a forced path)
@@ -534,6 +571,7 @@ class BoomHQ:
         from repro.serve.batch import (
             MAX_BATCH_KERNEL, SLOT_BUDGET, compute_batch_scores, pow2_at_most,
         )
+        queries = [self.resolve_tenant(q) for q in queries]
         if snapshot is None:  # outer call, not a size-limit sub-batch
             self._recent.extend(queries)
             self._last_batch = len(queries)

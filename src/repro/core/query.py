@@ -35,6 +35,9 @@ class MHQ:
     predicates: PredicateLike  # conjunctive Predicates or DNF PredicateSet
     k: int = 10
     recall_target: float = 0.9
+    # namespace: folds to an implicit `tenant_col == tenant_id` conjunct in
+    # every DNF clause (BoomHQ.resolve_tenant) — no new kernel surface
+    tenant_id: int | None = None
 
     @property
     def n_vec(self) -> int:

@@ -7,6 +7,11 @@
     per-request deadlines expire queued requests with a ``timed_out``
     disposition (never executed); ``AsyncServingEngine`` drives it under
     asyncio with execution in a worker thread.
+  * ``serve.semcache`` — the semantic result cache in FRONT of the queue:
+    repeated/near-duplicate queries (same canonicalized predicate
+    signature + tenant + k bucket, query vector within ε of a cached
+    centroid, fresh ``(epoch, n_rows)`` token) resolve at submit time with
+    zero scan cost; per-tenant bounded LRU (docs/semantic_cache.md).
   * ``serve.batch`` — the execution back half: ``BatchedHybridExecutor``
     groups a formed batch by (strategy, legalized params, clause bucket, k)
     and runs grouped vmapped kernels over shared dense score matrices; with
@@ -26,4 +31,7 @@ from repro.serve.batch import (  # noqa: F401
 )
 from repro.serve.queue import (  # noqa: F401
     AsyncServingEngine, BatchFormer, ServeRequest, serve_stream,
+)
+from repro.serve.semcache import (  # noqa: F401
+    CacheEntry, SemanticCache, predicate_signature, query_signature,
 )

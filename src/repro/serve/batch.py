@@ -1087,6 +1087,12 @@ class ServeReport:
     n_inserted: int = 0
     n_compactions: int = 0
     epoch: int = 0
+    # semantic result cache (serve/semcache.py): requests resolved at submit
+    # time without execution
+    n_cache_hits: int = 0
+    # multi-tenant serving: {tenant_id: {n_queries, n_ok, n_timed_out,
+    # n_cache_hits, mean_recall, qps}} — None key is untenanted traffic
+    tenants: Optional[dict] = None
 
     def describe(self) -> str:
         rec = f", mean recall {self.mean_recall:.3f}" \
@@ -1100,9 +1106,12 @@ class ServeReport:
                 f"{name}×{cnt}" for name, cnt in sorted(self.path_counts.items()))
         ingest = f", {self.n_inserted} inserted over {self.n_compactions} " \
             f"compactions (epoch {self.epoch})" if self.n_inserted else ""
+        cache = f", {self.n_cache_hits} cache hits" if self.n_cache_hits else ""
+        tnt = f", {len(self.tenants)} tenants" \
+            if self.tenants and len(self.tenants) > 1 else ""
         return (f"{self.n_queries} queries in {self.seconds:.2f}s over "
                 f"{self.n_batches} batches ({self.qps:.1f} QPS{rec}{lat}{to}"
-                f"{paths}{ingest})")
+                f"{paths}{ingest}{cache}{tnt})")
 
 
 class ServingEngine:

@@ -60,6 +60,7 @@ class ServeRequest:
     status: str = PENDING  # PENDING | OK | TIMED_OUT | FAILED
     result: Optional[tuple] = None  # (ids, scores) when status == OK
     done: float = 0.0
+    cache_hit: bool = False  # resolved by the semantic cache, zero scan cost
     # tiered serving: the immutable (epoch, hot, cold) snapshot stamped on
     # the whole batch at CUT time — every request in a batch shares one, so
     # an epoch swap between formation and execution can never mix states
@@ -95,15 +96,25 @@ class BatchFormer:
     def __len__(self) -> int:
         return len(self._pending)
 
-    def submit(self, query: MHQ, *, timeout: Optional[float] = None,
-               now: Optional[float] = None) -> ServeRequest:
-        """Enqueue one request; ``timeout`` (seconds from now) sets its
-        absolute deadline."""
+    def admit(self, query: MHQ, *, timeout: Optional[float] = None,
+              now: Optional[float] = None) -> ServeRequest:
+        """Stamp (but do NOT enqueue) the next request — sequence number,
+        arrival instant and absolute deadline. Front-ends that resolve a
+        request without ever forming it into a batch (a semantic-cache hit)
+        use this directly so cached requests still occupy their slot in the
+        serve order."""
         now = self.clock() if now is None else now
         r = ServeRequest(
             query=query, seq=self._seq, arrival=now,
             deadline=None if timeout is None else now + timeout)
         self._seq += 1
+        return r
+
+    def submit(self, query: MHQ, *, timeout: Optional[float] = None,
+               now: Optional[float] = None) -> ServeRequest:
+        """Enqueue one request; ``timeout`` (seconds from now) sets its
+        absolute deadline."""
+        r = self.admit(query, timeout=timeout, now=now)
         self._pending.append(r)
         return r
 
@@ -209,10 +220,15 @@ class AsyncServingEngine:
     def __init__(self, boomhq, *, batch_size: int = 32,
                  max_wait: float = 0.05,
                  default_timeout: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 semcache=None):
         self.bq = boomhq
         self.former = BatchFormer(batch_size=batch_size, max_wait=max_wait,
                                   clock=clock)
+        # optional serve.semcache.SemanticCache consulted at submit time:
+        # hits resolve immediately (zero scan cost), misses populate after
+        # their batch executes, stamped with the batch snapshot's token
+        self.semcache = semcache
         self.default_timeout = default_timeout
         self.clock = clock
         self._futures: dict[int, asyncio.Future] = {}
@@ -295,12 +311,43 @@ class AsyncServingEngine:
 
     # -- request path ------------------------------------------------------
 
+    def _cache_token(self) -> tuple:
+        """CURRENT freshness token for semantic-cache admission:
+        ``(epoch, n_rows)`` of the tiered snapshot (an epoch bump OR any
+        hot-tier insert changes it), or ``(0, table.n_rows)`` untiered
+        (eager inserts grow the table). One snapshot pointer read — never
+        the mutable tiering fields (EP001)."""
+        tiered = getattr(self.bq, "tiered", None)
+        if tiered is not None:
+            snap = tiered.snapshot()
+            return (snap.epoch, snap.n_rows)
+        return (0, self.bq.table.n_rows)
+
     async def submit(self, query: MHQ, *, timeout=_DEFAULT) -> ServeRequest:
         """Enqueue one query and await its disposition. Returns the resolved
         ``ServeRequest`` (``status`` is ``"ok"`` with ``result`` set, or
-        ``"timed_out"`` with ``result`` None)."""
+        ``"timed_out"`` with ``result`` None). With a semantic cache bound,
+        a fresh-enough repeat resolves HERE — never queued, never executed,
+        ``cache_hit`` set."""
         await self.start()
         tmo = self.default_timeout if timeout is _DEFAULT else timeout
+        # fold the tenant namespace BEFORE the cache key is computed, so
+        # the implicit conjunct is part of the predicate signature
+        if getattr(query, "tenant_id", None) is not None and \
+                hasattr(self.bq, "resolve_tenant"):
+            query = self.bq.resolve_tenant(query)
+        if self.semcache is not None:
+            cached = self.semcache.lookup(query, self._cache_token())
+            if cached is not None:
+                r = self.former.admit(query, timeout=tmo)
+                if self._t0 is None:
+                    self._t0 = r.arrival
+                r.status = OK
+                r.result = cached
+                r.cache_hit = True
+                r.done = self.clock()
+                self._served.append(r)
+                return r
         r = self.former.submit(query, timeout=tmo)
         if self._t0 is None:
             self._t0 = r.arrival
@@ -329,6 +376,21 @@ class AsyncServingEngine:
             self._event.clear()
 
     async def _execute(self, batch: list[ServeRequest]) -> None:
+        # deadline enforcement does NOT stop at cut time: a request whose
+        # deadline passed while its batch sat behind an in-flight one must
+        # resolve timed_out here, not execute and report OK (same strict
+        # `now > deadline` rule as BatchFormer.expire)
+        now = self.clock()
+        late = [r for r in batch
+                if r.deadline is not None and now > r.deadline]
+        if late:
+            for r in late:
+                r.status = TIMED_OUT
+                r.done = now
+                self._finish(r)
+            batch = [r for r in batch if r.status == PENDING]
+            if not batch:
+                return
         loop = asyncio.get_running_loop()
         queries = [r.query for r in batch]
         if batch[0].snapshot is not None:
@@ -365,10 +427,20 @@ class AsyncServingEngine:
             return
         now = self.clock()
         self._n_batches += 1
+        token = None
+        if self.semcache is not None:
+            snap = batch[0].snapshot
+            # stamp entries with the token of the state the batch actually
+            # executed under (its cut-time snapshot), not the current one —
+            # an epoch swap mid-flight must leave these entries born stale
+            token = (snap.epoch, snap.n_rows) if snap is not None \
+                else (0, self.bq.table.n_rows)
         for r, res in zip(batch, results):
             r.status = OK
             r.result = res
             r.done = now
+            if token is not None:
+                self.semcache.insert(r.query, token, res[0], res[1])
             self._finish(r)
 
     def _resolve_expired(self, expired: list[ServeRequest]) -> None:
@@ -401,6 +473,22 @@ class AsyncServingEngine:
             recalls = [recall_at_k(r.result[0], gt_ids[r.seq])
                        for r in ok if r.seq in gt_ids]
         tiered = getattr(self.bq, "tiered", None)
+        tenants: dict = {}
+        for r in served:
+            t = getattr(r.query, "tenant_id", None)
+            d = tenants.setdefault(t, {
+                "n_queries": 0, "n_ok": 0, "n_timed_out": 0,
+                "n_cache_hits": 0, "recalls": []})
+            d["n_queries"] += 1
+            d["n_ok"] += r.status == OK
+            d["n_timed_out"] += r.status == TIMED_OUT
+            d["n_cache_hits"] += r.cache_hit
+            if r.status == OK and gt_ids is not None and r.seq in gt_ids:
+                d["recalls"].append(recall_at_k(r.result[0], gt_ids[r.seq]))
+        for d in tenants.values():
+            rs = d.pop("recalls")  # host floats from recall_at_k
+            d["mean_recall"] = sum(rs) / len(rs) if rs else None
+            d["qps"] = d["n_ok"] / seconds if served else 0.0
         return ServeReport(
             n_queries=len(served),
             n_batches=self._n_batches,
@@ -414,6 +502,8 @@ class AsyncServingEngine:
             n_inserted=0 if tiered is None else tiered.n_inserted,
             n_compactions=0 if tiered is None else tiered.n_compactions,
             epoch=0 if tiered is None else tiered.epoch,
+            n_cache_hits=sum(r.cache_hit for r in served),
+            tenants=tenants or None,
         )
 
 

@@ -1,0 +1,235 @@
+"""Semantic result cache: repeated/near-duplicate MHQs short-circuit the
+engine at submit time (ROADMAP open item 1, docs/semantic_cache.md).
+
+Hybrid-query traffic at scale is dominated by repeats and near-duplicates
+of a small prevailing set. The cache sits in FRONT of ``BatchFormer``: a
+hit returns a previously computed ``(ids, scores)`` at zero scan cost; a
+miss executes normally and populates. The hit predicate is deliberately
+conservative — every clause must hold:
+
+* **same canonicalized predicate signature** — the DNF is normalized
+  (inactive bounds forced to ±inf, invalid/empty clauses dropped, clauses
+  sorted) so the signature is invariant to clause order, padding bucket and
+  inactive-column garbage; predicates that merely *render* differently but
+  denote the same DNF share a signature, while any semantic difference
+  splits it.
+* **same tenant** — the tenant id is part of the key, never the fuzzy
+  match, so one tenant's results can never leak to another (the engine also
+  folds the tenant conjunct into the predicate BEFORE lookup, which lands
+  the tenant in the signature as well — defense in depth).
+* **compatible k bucket** — the entry must have been computed for the same
+  padded top-k bucket with ``entry.k >= q.k``; the cached prefix
+  ``ids[:q.k]`` is then exactly the query's top-k.
+* **query vectors within ε of the entry's centroid** — per vector column,
+  Euclidean distance ``||q_i - c_i||_2 <= eps`` (per-metric ε; see
+  docs/semantic_cache.md for the score-error bound). ``eps=0`` degenerates
+  to exact-repeat caching with bit-for-bit replay parity.
+* **fresh token** — every entry is stamped with the freshness token of the
+  state it was computed under: ``(TieredSnapshot.epoch, n_rows)`` for
+  tiered serving, ``(0, table.n_rows)`` otherwise. A hit requires token
+  equality with the CURRENT token, so an epoch bump (compaction moved rows
+  the entry's result may depend on) or any hot-tier insert (new rows the
+  entry has never seen) implicitly flushes: stale entries are lazily
+  dropped on first touch and counted in ``stale_drops``. Cached results
+  can never resurrect pre-compaction state — pinned by
+  tests/test_semcache.py, enforced in serving code by boomlint rule EP002.
+
+Storage is a bounded per-tenant LRU (``capacity_per_tenant``) so one noisy
+tenant can never evict another's working set. All methods are thread-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.query import MHQ
+from repro.vectordb.predicates import PredicateLike, as_set
+
+DEFAULT_CAPACITY_PER_TENANT = 256
+
+
+def predicate_signature(pred: PredicateLike) -> bytes:
+    """Canonical byte signature of a DNF predicate.
+
+    Normalization: promote to ``PredicateSet``; force inactive columns'
+    bounds to ±inf (their stored values are semantically dead); drop
+    invalid (padding) clauses and clauses emptied by intersection
+    (``lo > hi`` on an active column matches nothing); sort the surviving
+    clauses' byte encodings. Two predicates share a signature iff their
+    normalized clause SETS coincide — invariant to clause order and the
+    legalized padding bucket."""
+    ps = as_set(pred)
+    active = np.asarray(ps.active, bool)
+    lo = np.asarray(ps.lo, np.float32).copy()
+    hi = np.asarray(ps.hi, np.float32).copy()
+    valid = np.asarray(ps.clause_valid, bool)
+    lo[~active] = -np.inf
+    hi[~active] = np.inf
+    clauses = []
+    for c in range(active.shape[0]):
+        if not valid[c]:
+            continue
+        if np.any(active[c] & (lo[c] > hi[c])):
+            continue  # empty clause: contributes nothing to the union
+        clauses.append(active[c].tobytes() + lo[c].tobytes() + hi[c].tobytes())
+    if not clauses:
+        return b"false"
+    return b"|".join(sorted(clauses))
+
+
+def query_signature(q: MHQ) -> bytes:
+    """Exact-match part of the cache key: predicate signature + weights +
+    recall target (plans — and therefore approximate results — may differ
+    across recall targets, so they never share entries)."""
+    w = np.asarray(q.weights, np.float32).tobytes()
+    rt = np.float32(q.recall_target).tobytes()
+    return predicate_signature(q.predicates) + b"#" + w + rt
+
+
+def k_bucket(k: int) -> int:
+    from repro.core.executor import K_BUCKET_FLOOR, next_bucket
+    return next_bucket(k, K_BUCKET_FLOOR)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    centroids: tuple  # per vector column, (d_i,) np.float32
+    k: int  # the k the result was computed for
+    ids: np.ndarray  # (k,) int — cached result rows
+    scores: np.ndarray  # (k,) f32 — cached result scores
+    token: tuple  # (epoch, n_rows) freshness stamp
+
+
+class SemanticCache:
+    """Bounded per-tenant semantic result cache (see module doc).
+
+    ``eps`` is a float (both metrics) or a ``{"dot": e, "l2": e}`` mapping;
+    0.0 caches exact repeats only. ``lookup``/``insert`` take the CURRENT
+    freshness token — the engine derives it from the serving snapshot
+    (``AsyncServingEngine._cache_token``)."""
+
+    def __init__(self, *, capacity_per_tenant: int = DEFAULT_CAPACITY_PER_TENANT,
+                 eps: float | dict = 0.0, metric: str = "dot"):
+        assert capacity_per_tenant >= 1
+        self.capacity_per_tenant = capacity_per_tenant
+        self._eps = eps
+        self.metric = metric
+        self._lock = threading.Lock()
+        # tenant -> OrderedDict[entry_id, CacheEntry]  (LRU order)
+        self._tenants: dict = {}
+        # (tenant, sig, k_bucket) -> [entry_id, ...]
+        self._index: dict = {}
+        self._next_id = 0
+        self.hits = 0
+        self.misses = 0
+        self.stale_drops = 0
+        self.evictions = 0
+        self.tenant_hits: dict = {}
+
+    @property
+    def eps(self) -> float:
+        e = self._eps
+        return float(e[self.metric]) if isinstance(e, dict) else float(e)
+
+    # -- internals (call with lock held) ------------------------------------
+
+    def _drop_locked(self, tenant, eid: int) -> None:
+        lru = self._tenants.get(tenant)
+        if lru is None or eid not in lru:
+            return
+        del lru[eid]
+        for key, eids in list(self._index.items()):
+            if key[0] == tenant and eid in eids:
+                eids.remove(eid)
+                if not eids:
+                    del self._index[key]
+
+    def _within_eps_locked(self, entry: CacheEntry, q: MHQ) -> bool:
+        eps = self.eps
+        for qv, c in zip(q.query_vectors, entry.centroids):
+            d = float(np.linalg.norm(np.asarray(qv, np.float32) - c))
+            if d > eps:
+                return False
+        return True
+
+    # -- public API ----------------------------------------------------------
+
+    def lookup(self, q: MHQ, token: tuple) -> Optional[tuple]:
+        """Return cached ``(ids, scores)`` (length ``q.k``) on a hit, else
+        None. ``token`` is the CURRENT freshness token; entries stamped with
+        any other token are stale, dropped on touch, and never served."""
+        tenant = q.tenant_id
+        key = (tenant, query_signature(q), k_bucket(q.k))
+        with self._lock:
+            eids = self._index.get(key, ())
+            for eid in list(eids):
+                entry = self._tenants[tenant][eid]
+                if entry.token != token:
+                    self._drop_locked(tenant, eid)
+                    self.stale_drops += 1
+                    continue
+                if entry.k < q.k or not self._within_eps_locked(entry, q):
+                    continue
+                self._tenants[tenant].move_to_end(eid)
+                self.hits += 1
+                self.tenant_hits[tenant] = self.tenant_hits.get(tenant, 0) + 1
+                return (entry.ids[: q.k].copy(), entry.scores[: q.k].copy())
+            self.misses += 1
+            return None
+
+    def insert(self, q: MHQ, token: tuple, ids, scores) -> None:
+        """Populate after a miss executed: stamp the result with the token
+        of the state it was computed under (the batch's snapshot, NOT the
+        current one — the table may have moved while the batch ran)."""
+        tenant = q.tenant_id
+        entry = CacheEntry(
+            centroids=tuple(np.asarray(v, np.float32).copy()
+                            for v in q.query_vectors),
+            k=int(q.k),
+            ids=np.asarray(ids).copy(),
+            scores=np.asarray(scores, np.float32).copy(),
+            token=tuple(token),
+        )
+        key = (tenant, query_signature(q), k_bucket(q.k))
+        with self._lock:
+            lru = self._tenants.setdefault(tenant, OrderedDict())
+            eid = self._next_id
+            self._next_id += 1
+            lru[eid] = entry
+            self._index.setdefault(key, []).append(eid)
+            while len(lru) > self.capacity_per_tenant:
+                old_eid = next(iter(lru))
+                self._drop_locked(tenant, old_eid)
+                self.evictions += 1
+
+    def invalidate_tenant(self, tenant) -> int:
+        """Drop every entry of one tenant; returns the count dropped."""
+        with self._lock:
+            lru = self._tenants.pop(tenant, None)
+            if not lru:
+                return 0
+            n = len(lru)
+            self._index = {k: v for k, v in self._index.items()
+                           if k[0] != tenant}
+            return n
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._tenants.values())
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "stale_drops": self.stale_drops,
+                "evictions": self.evictions,
+                "entries": sum(len(v) for v in self._tenants.values()),
+                "tenant_hits": dict(self.tenant_hits),
+            }

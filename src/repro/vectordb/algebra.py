@@ -261,6 +261,23 @@ def _resolve(clauses: list[dict], schema, m: int | None) -> tuple[list[dict], in
     return out, m
 
 
+def constrain(pred, cond: Cond, schema=None, *, m: int | None = None):
+    """Fold an atomic condition conjunctively into EVERY clause of an
+    already-compiled predicate (``Predicates`` or ``PredicateSet``).
+
+    This is the compile step for implicit constraints — tenant namespaces
+    fold ``tenant == t`` into an existing DNF without changing its clause
+    bucket or touching kernels. The column is resolved exactly like
+    :func:`compile` (by name against ``schema.scalar_cols`` or by index
+    against ``m``)."""
+    from repro.vectordb.predicates import fold_conjunct
+
+    resolved, _ = _resolve([{cond.col: (cond.lo, cond.hi)}], schema,
+                           m if m is not None else pred.active.shape[-1])
+    ((idx, (lo, hi)),) = resolved[0].items()
+    return fold_conjunct(pred, idx, lo, hi)
+
+
 def compile(expr: Expr, schema=None, *, m: int | None = None,
             n_clauses: int | None = None) -> PredicateSet:
     """Compile an expression tree to a ``PredicateSet`` (see module doc)."""

@@ -228,6 +228,35 @@ def take(pred: PredicateLike, idx) -> PredicateLike:
     return jax.tree_util.tree_map(lambda x: x[idx], pred)
 
 
+def fold_conjunct(pred: PredicateLike, col_idx: int, lo: float,
+                  hi: float) -> PredicateLike:
+    """Intersect ``[lo, hi]`` on column ``col_idx`` into EVERY clause.
+
+    This is how an implicit constraint (e.g. a tenant namespace) compiles
+    into an existing predicate with zero new kernel surface: the clause
+    count, bucket and ``clause_valid`` mask are untouched, so C-grid
+    legalization and batched group keys are unchanged. A clause whose
+    intersection with the range is empty ends up with ``lo > hi`` on an
+    active column, which :func:`eval_mask` already evaluates as matching
+    nothing. Idempotent: folding the same range twice is a no-op."""
+    if isinstance(pred, PredicateSet):
+        active = np.array(pred.active)
+        los = np.array(pred.lo, np.float32)
+        his = np.array(pred.hi, np.float32)
+        active[..., col_idx] = True
+        los[..., col_idx] = np.maximum(los[..., col_idx], np.float32(lo))
+        his[..., col_idx] = np.minimum(his[..., col_idx], np.float32(hi))
+        return PredicateSet(jnp.asarray(active), jnp.asarray(los),
+                            jnp.asarray(his), pred.clause_valid)
+    active = np.array(pred.active)
+    los = np.array(pred.lo, np.float32)
+    his = np.array(pred.hi, np.float32)
+    active[..., col_idx] = True
+    los[..., col_idx] = np.maximum(los[..., col_idx], np.float32(lo))
+    his[..., col_idx] = np.minimum(his[..., col_idx], np.float32(hi))
+    return Predicates(jnp.asarray(active), jnp.asarray(los), jnp.asarray(his))
+
+
 def eval_mask(pred: PredicateLike, scalars: jax.Array) -> jax.Array:
     """(n, M) scalars -> (n,) bool DNF mask: OR over clauses of the AND over
     that clause's active columns. C=1 reproduces the old conjunction."""

@@ -68,24 +68,73 @@ from repro.vectordb.table import Table
 DEFAULT_HOT_CAPACITY = 1024
 
 
-@dataclasses.dataclass(frozen=True)
+# host->device materializations of hot views, for the per-insert transfer
+# accounting (one "transfer" = one column buffer moved); see hot_view_transfers
+_transfer_lock = threading.Lock()
+_hot_view_transfers = 0
+
+
+def hot_view_transfers() -> int:
+    """Cumulative count of hot-view column buffers copied host->device.
+
+    Publishing a view is free — the device copies are built lazily on the
+    first reader — so the delta across an insert-only window (no query
+    snapshots consumed) must be 0."""
+    with _transfer_lock:
+        return _hot_view_transfers
+
+
 class HotView:
-    """Immutable view of one hot generation at a published instant.
+    """Immutable logical view of one hot generation at a published instant.
 
-    ``vectors``/``scalars`` are full-capacity device buffers (static shapes
-    keep the jit cache bounded); only rows ``< count`` are valid — the
-    candidate mask in ``hot_topk_batch`` excludes the rest, so later
-    in-place appends to the backing buffers can never leak into a
-    published view."""
+    Construction is a host-side token: it captures REFERENCES to the
+    generation's full-capacity host buffers plus ``count``/``id_offset``.
+    The device copies (static shapes keep the jit cache bounded) are built
+    LAZILY — on the first ``vectors``/``scalars`` read, i.e. the first query
+    snapshot that actually scores this view — and cached per view, so
+    insert-heavy windows with no interleaved reads publish versions at zero
+    transfer cost (``hot_view_transfers`` counts the copies).
 
-    vectors: tuple  # per-column (capacity, d_i) f32
-    scalars: jax.Array  # (capacity, M) f32
-    count: int  # valid rows
-    id_offset: int  # global row id of local slot 0
+    Only rows ``< count`` are valid: the candidate mask in the hot top-k
+    excludes the rest, and appends only ever write rows at-or-beyond every
+    published view's ``count``, so a late materialization still reads
+    exactly the rows the view logically froze."""
+
+    __slots__ = ("np_vectors", "np_scalars", "count", "id_offset",
+                 "_device", "_lock")
+
+    def __init__(self, np_vectors: tuple, np_scalars: np.ndarray,
+                 count: int, id_offset: int):
+        self.np_vectors = tuple(np_vectors)  # per-column (capacity, d_i) f32
+        self.np_scalars = np_scalars  # (capacity, M) f32
+        self.count = count  # valid rows
+        self.id_offset = id_offset  # global row id of local slot 0
+        self._device = None
+        self._lock = threading.Lock()
+
+    def _materialize(self):
+        if self._device is None:
+            with self._lock:
+                if self._device is None:
+                    global _hot_view_transfers
+                    dev = (tuple(jnp.asarray(b) for b in self.np_vectors),
+                           jnp.asarray(self.np_scalars))
+                    with _transfer_lock:
+                        _hot_view_transfers += len(self.np_vectors) + 1
+                    self._device = dev
+        return self._device
+
+    @property
+    def vectors(self) -> tuple:
+        return self._materialize()[0]
+
+    @property
+    def scalars(self) -> jax.Array:
+        return self._materialize()[1]
 
     @property
     def capacity(self) -> int:
-        return int(self.scalars.shape[0])
+        return int(self.np_scalars.shape[0])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,11 +185,12 @@ class _HotBuffer:
         self.count += take
 
     def view(self) -> HotView:
-        # device copies of the full-capacity buffers: rows >= count are
-        # stale garbage by construction and masked out by every consumer
+        # a host-side token over the live buffers: rows >= count are stale
+        # garbage (or rows appended after this publish) and masked out by
+        # every consumer; device copies happen on first read (lazy)
         return HotView(
-            vectors=tuple(jnp.asarray(b) for b in self.vectors),
-            scalars=jnp.asarray(self.scalars),
+            np_vectors=tuple(self.vectors),
+            np_scalars=self.scalars,
             count=self.count,
             id_offset=self.id_offset,
         )
@@ -276,16 +326,21 @@ class TieredTable:
                 self._seal_locked()
             frozen = self._sealing
             cold = self._cold
+            # the rebuild_every decision is a function of WHICH compaction
+            # this is — capture the sequence number under the lock at seal
+            # time (reading self._compactions in the unlocked section below
+            # raced concurrent compactions and could skip or double-fire
+            # the re-cluster)
+            seq = self._compactions + 1
             self._compacting = True
+        rebuild = self.rebuild_every > 0 and seq % self.rebuild_every == 0
         try:
             n = frozen.count
             first_new = cold.table.n_rows
             assert first_new == frozen.id_offset  # global ids stay stable
-            new_vecs = [np.asarray(b)[:n] for b in frozen.vectors]
-            new_scal = np.asarray(frozen.scalars)[:n]
+            new_vecs = [b[:n] for b in frozen.np_vectors]
+            new_scal = frozen.np_scalars[:n]
             table = cold.table.append(new_vecs, new_scal)
-            rebuild = self.rebuild_every > 0 and \
-                (self._compactions + 1) % self.rebuild_every == 0
             if rebuild:  # sealing step: full re-cluster of every column
                 indexes = tuple(
                     ivf.build(v, idx.n_clusters, seed=i, metric=idx.metric)
@@ -352,10 +407,9 @@ class TieredTable:
         vecs = [np.asarray(v) for v in t.vectors]
         scal = np.asarray(t.scalars)
         for view in snap.hot_views:
-            vecs = [np.concatenate([a, np.asarray(b)[: view.count]])
-                    for a, b in zip(vecs, view.vectors)]
-            scal = np.concatenate(
-                [scal, np.asarray(view.scalars)[: view.count]])
+            vecs = [np.concatenate([a, b[: view.count]])
+                    for a, b in zip(vecs, view.np_vectors)]
+            scal = np.concatenate([scal, view.np_scalars[: view.count]])
         return Table.from_numpy(t.schema, vecs, scal)
 
 

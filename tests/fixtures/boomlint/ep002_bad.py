@@ -1,0 +1,27 @@
+"""Seeded EP002 violations: serving hot paths reading semantic-cache entry
+payloads without a freshness (token/epoch) check."""
+
+
+def hot_submit(engine, query):
+    entry = engine.semcache._tenants[query.tenant_id][0]
+    return entry.ids, query  # EP002: raw payload read, no token check
+
+
+def hot_serve_repeat(cache, key, k):
+    entry = cache._index[key]
+    ids = entry.ids[:k]  # EP002: stale entry can resurrect old epochs
+    scores = entry.scores[:k]  # EP002: scores payload read
+    return ids, scores
+
+
+def hot_rank(semcache, probe):
+    # EP002: centroid read drives a homegrown match loop that skips the
+    # token discipline lookup() enforces
+    return [entry.centroids  # EP002
+            for entry in semcache._tenants[probe.tenant_id].values()]
+
+
+def cold_report_path(cache, key):
+    # NOT hot (qualname does not match the configured glob): offline
+    # accounting may read entries directly
+    return cache._index[key].ids

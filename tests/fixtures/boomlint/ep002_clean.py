@@ -1,0 +1,26 @@
+"""EP002-clean twin: the same hot paths, reading the cache only through
+the token-checked lookup() or with an explicit freshness comparison."""
+
+
+def hot_submit(engine, query):
+    cached = engine.semcache.lookup(query, engine._cache_token())
+    return cached, query  # lookup() enforces the (epoch, n_rows) token
+
+
+def hot_serve_repeat(cache, key, k, token):
+    entry = cache._index[key]
+    if entry.token != token:  # explicit freshness check before the read
+        return None
+    return entry.ids[:k], entry.scores[:k]
+
+
+def hot_rank(semcache, probe, token):
+    out = []
+    for entry in semcache._tenants[probe.tenant_id].values():
+        if entry.token == token:  # fresh entries only
+            out.append(entry.centroids)
+    return out
+
+
+def cold_report_path(cache, key):
+    return cache._index[key].ids

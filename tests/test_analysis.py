@@ -17,7 +17,8 @@ REPO_SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src",
 FIXTURE_CFG = LintConfig(
     trace=False,
     hot_functions=(("hs001_bad.py", "hot_*"), ("hs001_clean.py", "hot_*"),
-                   ("ep001_bad.py", "hot_*"), ("ep001_clean.py", "hot_*")),
+                   ("ep001_bad.py", "hot_*"), ("ep001_clean.py", "hot_*"),
+                   ("ep002_bad.py", "hot_*"), ("ep002_clean.py", "hot_*")),
 )
 
 
@@ -101,6 +102,23 @@ def test_ep001_bad_fixture():
 
 def test_ep001_clean_fixture():
     active = _scan("ep001_clean.py")["active"]
+    assert active == [], [f.render() for f in active]
+
+
+def test_ep002_bad_fixture():
+    active = _scan("ep002_bad.py")["active"]
+    assert _rules(active) == {"EP002": 4}, [f.render() for f in active]
+    msgs = " | ".join(f.message for f in active)
+    assert "freshness check" in msgs
+    assert "SemanticCache.lookup()" in msgs
+    # the non-hot function's identical read stays exempt
+    assert "cold_report_path" not in msgs
+    fields = {f.message.split("`")[3].rsplit(".", 1)[-1] for f in active}
+    assert fields == {"ids", "scores", "centroids"}
+
+
+def test_ep002_clean_fixture():
+    active = _scan("ep002_clean.py")["active"]
     assert active == [], [f.render() for f in active]
 
 

@@ -222,6 +222,74 @@ def test_async_engine_stop_noflush_fails_inflight():
     assert sorted(r.status for r in eng._served) == [FAILED, FAILED]
 
 
+def test_deadline_between_cut_and_dispatch_times_out():
+    """Regression: deadline enforcement must NOT stop at cut time. A request
+    whose deadline lands between poll() (batch formed) and _execute
+    (dispatch) resolves timed_out and is dropped from the executed batch —
+    it used to execute anyway and report OK."""
+    clock = FakeClock()
+    executed = []
+
+    class Recorder:
+        def execute_batch(self, qs):
+            executed.extend(qs)
+            return [(np.asarray([0]), np.asarray([0.0]))] * len(qs)
+
+    async def main():
+        eng = AsyncServingEngine(Recorder(), batch_size=2, max_wait=0.0,
+                                 clock=clock)
+        await eng.start()
+        eng.former.submit("doomed", timeout=0.5)
+        eng.former.submit("survivor", timeout=5.0)
+        batch, expired = eng.former.poll()  # cut at t=0: nothing expired
+        assert expired == [] and len(batch) == 2
+        # the deadline passes AFTER the cut, BEFORE dispatch (e.g. the
+        # batch sat behind an in-flight one)
+        clock.advance(1.0)
+        await eng._execute(batch)
+        await eng.stop(flush=False)
+        return eng, batch
+
+    eng, (doomed, survivor) = asyncio.run(main())
+    assert doomed.status == TIMED_OUT and doomed.result is None
+    assert doomed.done == 1.0
+    assert survivor.status == OK and survivor.result is not None
+    assert executed == ["survivor"]  # the expired request never executed
+    rep = eng.report()
+    assert rep.n_timed_out == 1 and rep.n_queries >= 2
+
+
+def test_dispatch_expiry_keeps_exact_deadline_serving():
+    """now == deadline at dispatch still executes (same strict > rule as
+    queue-side expiry), and an all-expired batch executes nothing."""
+    clock = FakeClock()
+    executed = []
+
+    class Recorder:
+        def execute_batch(self, qs):
+            executed.extend(qs)
+            return [(np.asarray([0]), np.asarray([0.0]))] * len(qs)
+
+    async def main():
+        eng = AsyncServingEngine(Recorder(), batch_size=2, max_wait=0.0,
+                                 clock=clock)
+        await eng.start()
+        edge = eng.former.submit("edge", timeout=1.0)
+        batch, _ = eng.former.poll(flush=True)
+        clock.advance(1.0)  # exactly at the deadline
+        await eng._execute(batch)
+        dead = eng.former.submit("dead", timeout=0.1)
+        batch, _ = eng.former.poll(flush=True)
+        clock.advance(1.0)
+        await eng._execute(batch)  # whole batch expired: no executor call
+        await eng.stop(flush=False)
+        return edge, dead
+
+    edge, dead = asyncio.run(main())
+    assert edge.status == OK and executed == ["edge"]
+    assert dead.status == TIMED_OUT
+
+
 def test_async_engine_timeout_disposition():
     _, bq = _tiny_bq()
 

@@ -1,0 +1,350 @@
+"""Semantic result cache: hit predicate, epoch-staleness contract, tenant
+isolation — the oracle pins for docs/semantic_cache.md.
+
+The load-bearing tests are the invalidation oracles: an entry cached at
+epoch e is NEVER served at epoch e+1 (compaction moved rows the cached
+result may depend on), and a hot-tier insert is visible to the very next
+miss (any insert changes the ``(epoch, n_rows)`` token). Tenant isolation
+is pinned both at the cache layer (hypothesis sweep) and end-to-end
+through the predicate fold."""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from oracle import brute_force_topk, eval_mask_np
+from repro.bench import datasets, queries
+from repro.core.boomhq import BoomHQ, BoomHQConfig
+from repro.core.query import MHQ
+from repro.core.rewriter import RewriterConfig
+from repro.serve.queue import AsyncServingEngine
+from repro.serve.semcache import (
+    SemanticCache, k_bucket, predicate_signature, query_signature,
+)
+from repro.vectordb.algebra import col
+from repro.vectordb.predicates import (
+    Predicates, PredicateSet, fold_conjunct, pad_clauses,
+)
+from repro.vectordb.table import ScalarCol, Table
+
+TENANTS = 3
+
+
+def _mhq(vec, lo=0.0, hi=1.0, *, k=5, m=3, tenant=None) -> MHQ:
+    return MHQ(
+        query_vectors=(np.asarray(vec, np.float32),),
+        weights=(1.0,),
+        predicates=Predicates.from_conditions(m, {0: (lo, hi)}),
+        k=k, tenant_id=tenant)
+
+
+# -- signature canonicalization ----------------------------------------------
+
+def test_signature_invariant_to_clause_order_and_padding():
+    a = (col(0).between(0, 1) | col(1).between(2, 3)).compile(m=3)
+    b = (col(1).between(2, 3) | col(0).between(0, 1)).compile(m=3)
+    assert predicate_signature(a) == predicate_signature(b)
+    padded = pad_clauses(a, 4)  # bigger legalized bucket, same DNF
+    assert predicate_signature(padded) == predicate_signature(a)
+    c = (col(0).between(0, 1) | col(1).between(2, 4)).compile(m=3)
+    assert predicate_signature(c) != predicate_signature(a)
+
+
+def test_signature_conjunctive_shim_matches_dnf_form():
+    p = Predicates.from_conditions(3, {1: (2.0, 3.0)})
+    ps = col(1).between(2, 3).compile(m=3)
+    assert predicate_signature(p) == predicate_signature(ps)
+    # inactive-column bound garbage is canonicalized away
+    q = Predicates.from_conditions(3, {1: (2.0, 3.0)})
+    q.lo = q.lo.at[0].set(-5.0)  # inactive column: semantically dead
+    assert predicate_signature(q) == predicate_signature(p)
+
+
+def test_signature_empty_clause_dropped():
+    # folding an impossible range empties a clause; the signature must
+    # treat it as absent from the union
+    ps = (col(0).between(0, 1) | col(1).between(2, 3)).compile(m=3)
+    emptied = fold_conjunct(ps, 1, 10.0, 20.0)  # kills the second clause
+    only = fold_conjunct(col(0).between(0, 1).compile(m=3), 1, 10.0, 20.0)
+    # the emptied clause contributes nothing to the union: both forms
+    # denote the same DNF and must share one signature
+    assert predicate_signature(only) == predicate_signature(emptied)
+    false_ps = PredicateSet.from_clauses(3, [])
+    assert predicate_signature(false_ps) == b"false"
+
+
+def test_query_signature_splits_on_weights_and_recall_target():
+    q = _mhq([0.0, 1.0])
+    assert query_signature(q) == query_signature(_mhq([9.9, 9.9]))  # vec ≠ key
+    assert query_signature(q) != query_signature(
+        dataclasses.replace(q, weights=(0.5,)))
+    assert query_signature(q) != query_signature(
+        dataclasses.replace(q, recall_target=0.99))
+
+
+# -- cache hit rules ----------------------------------------------------------
+
+def test_k_bucket_compatibility():
+    cache = SemanticCache()
+    token = (0, 100)
+    cache.insert(_mhq([0.0, 1.0], k=10), token, np.arange(10),
+                 np.linspace(1, 0, 10))
+    hit = cache.lookup(_mhq([0.0, 1.0], k=5), token)  # same bucket, k<=10
+    assert hit is not None and len(hit[0]) == 5
+    np.testing.assert_array_equal(hit[0], np.arange(5))
+    assert cache.lookup(_mhq([0.0, 1.0], k=12), token) is None  # entry too small
+    assert cache.lookup(_mhq([0.0, 1.0], k=20), token) is None  # other bucket
+    assert k_bucket(5) == k_bucket(10) != k_bucket(20)
+
+
+def test_eps_gates_near_duplicates():
+    token = (0, 100)
+    exact = SemanticCache(eps=0.0)
+    exact.insert(_mhq([0.0, 1.0]), token, np.arange(5), np.zeros(5))
+    assert exact.lookup(_mhq([0.0, 1.0 + 1e-4]), token) is None
+    assert exact.lookup(_mhq([0.0, 1.0]), token) is not None
+    fuzzy = SemanticCache(eps=1e-3)
+    fuzzy.insert(_mhq([0.0, 1.0]), token, np.arange(5), np.zeros(5))
+    assert fuzzy.lookup(_mhq([0.0, 1.0 + 1e-4]), token) is not None
+    assert fuzzy.lookup(_mhq([0.0, 1.1]), token) is None
+    # per-metric mapping form
+    per = SemanticCache(eps={"dot": 1e-3, "l2": 0.0}, metric="l2")
+    per.insert(_mhq([0.0, 1.0]), token, np.arange(5), np.zeros(5))
+    assert per.lookup(_mhq([0.0, 1.0 + 1e-4]), token) is None  # l2 eps is 0
+
+
+def test_token_staleness_epoch_and_rowcount():
+    cache = SemanticCache()
+    q = _mhq([0.0, 1.0])
+    cache.insert(q, (3, 100), np.arange(5), np.zeros(5))
+    assert cache.lookup(q, (3, 100)) is not None
+    # epoch bump alone (same row count: compaction only MOVED rows) flushes
+    assert cache.lookup(q, (4, 100)) is None
+    assert cache.stats()["stale_drops"] == 1
+    assert len(cache) == 0  # dropped on touch, not just skipped
+    # row-count bump alone (hot insert, same epoch) flushes too
+    cache.insert(q, (4, 100), np.arange(5), np.zeros(5))
+    assert cache.lookup(q, (4, 101)) is None
+    assert cache.stats()["stale_drops"] == 2
+
+
+def test_per_tenant_lru_bound():
+    cache = SemanticCache(capacity_per_tenant=2)
+    token = (0, 100)
+    for i in range(3):
+        cache.insert(_mhq([float(i), 0.0], tenant=0), token,
+                     np.arange(5), np.zeros(5))
+    cache.insert(_mhq([9.0, 9.0], tenant=1), token, np.arange(5), np.zeros(5))
+    assert cache.stats()["evictions"] == 1
+    assert len(cache) == 3  # 2 for tenant 0, 1 for tenant 1
+    assert cache.lookup(_mhq([0.0, 0.0], tenant=0), token) is None  # evicted
+    assert cache.lookup(_mhq([2.0, 0.0], tenant=0), token) is not None
+    assert cache.lookup(_mhq([9.0, 9.0], tenant=1), token) is not None
+    assert cache.invalidate_tenant(0) == 2
+    assert len(cache) == 1
+
+
+def test_tenant_isolation_unit():
+    cache = SemanticCache()
+    token = (0, 100)
+    cache.insert(_mhq([0.0, 1.0], tenant=0), token, np.arange(5), np.zeros(5))
+    assert cache.lookup(_mhq([0.0, 1.0], tenant=1), token) is None
+    assert cache.lookup(_mhq([0.0, 1.0], tenant=None), token) is None
+    assert cache.lookup(_mhq([0.0, 1.0], tenant=0), token) is not None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_tenant_isolation_property(data):
+    """Hypothesis sweep over tenant/predicate/vector mixes: a hit can only
+    ever return an entry inserted under the SAME tenant. Entries encode
+    their tenant in the cached ids, so any cross-tenant leak is visible in
+    the returned payload."""
+    cache = SemanticCache(eps=data.draw(st.sampled_from([0.0, 0.5])))
+    token = (0, 100)
+    n = data.draw(st.integers(min_value=2, max_value=8))
+    probes = []
+    for _ in range(n):
+        tenant = data.draw(st.integers(min_value=0, max_value=3))
+        vec = [data.draw(st.floats(-1, 1, width=32)) for _ in range(3)]
+        lo = data.draw(st.floats(0, 4, width=32))
+        hi = lo + data.draw(st.floats(0, 4, width=32))
+        k = data.draw(st.sampled_from([3, 5, 10]))
+        q = _mhq(vec, lo, hi, k=k, tenant=tenant)
+        cache.insert(q, token, np.full(k, tenant), np.zeros(k))
+        probes.append(q)
+    for q in probes:
+        for other in range(4):
+            got = cache.lookup(
+                dataclasses.replace(q, tenant_id=other), token)
+            if got is not None:
+                assert np.all(got[0] == other), \
+                    f"tenant {other} got tenant {got[0][0]}'s entry"
+
+
+# -- end-to-end: engine + tiered epochs + tenant fold -------------------------
+
+@pytest.fixture(scope="module")
+def tenant_bq():
+    """Fitted BoomHQ over 'part' with an extra categorical tenant column,
+    namespaces bound. Tests that bind_tiered must unbind before returning."""
+    base = datasets.make("part", rows=900, seed=7)
+    rng_ = np.random.default_rng(7)
+    tcol = rng_.integers(0, TENANTS, base.n_rows).astype(np.float32)
+    schema = dataclasses.replace(
+        base.schema,
+        scalar_cols=tuple(base.schema.scalar_cols)
+        + (ScalarCol("tenant", "cat", TENANTS),))
+    table = Table.from_numpy(
+        schema, [np.asarray(v) for v in base.vectors],
+        np.concatenate([np.asarray(base.scalars), tcol[:, None]], axis=1))
+    bq = BoomHQ(table, BoomHQConfig(
+        n_clusters=8, use_de=False,
+        rewriter=RewriterConfig(steps=10, refine_columns=False)))
+    wl = queries.gen_workload(table, 12, n_vec_used=2, k=5, seed=0)
+    bq.fit(wl)
+    bq.bind_tenants("tenant")
+    held = queries.gen_workload(table, 6, n_vec_used=2, k=5, seed=1)
+    return bq, held
+
+
+def _fresh_rows(table, n: int, seed: int, tenant: float = 0.0):
+    extra = datasets.make("part", rows=n, seed=seed)
+    scal = np.concatenate(
+        [np.asarray(extra.scalars),
+         np.full((n, 1), tenant, np.float32)], axis=1)
+    return [np.asarray(v) for v in extra.vectors], scal
+
+
+def test_tenant_fold_scopes_results(tenant_bq):
+    bq, held = tenant_bq
+    tcol = np.asarray(bq.table.scalars)[:, -1]
+    base_mask = eval_mask_np(held[0].predicates,
+                             np.asarray(bq.table.scalars))
+    scoped_any = 0
+    for tenant in range(TENANTS):
+        q = dataclasses.replace(held[0], tenant_id=tenant)
+        ids = np.asarray(bq.execute(q)[0])
+        got = ids[ids >= 0]
+        if not (base_mask & (tcol == tenant)).any():
+            assert got.size == 0  # no qualifying rows for this tenant
+            continue
+        scoped_any += 1
+        assert got.size > 0
+        assert np.all(tcol[got] == tenant), tenant
+    assert scoped_any > 0  # at least one tenant actually had rows
+    # the fold is an intersection with the query's own predicate
+    folded = bq.resolve_tenant(
+        dataclasses.replace(held[0], tenant_id=1)).predicates
+    mask = eval_mask_np(folded, np.asarray(bq.table.scalars))
+    base_mask = eval_mask_np(held[0].predicates, np.asarray(bq.table.scalars))
+    assert np.array_equal(mask, base_mask & (tcol == 1))
+
+
+def test_engine_isolates_tenants_through_cache(tenant_bq):
+    bq, held = tenant_bq
+    cache = SemanticCache(eps=0.0)
+    eng = AsyncServingEngine(bq, batch_size=2, max_wait=0.005,
+                             semcache=cache)
+    q0 = dataclasses.replace(held[1], tenant_id=0)
+    q1 = dataclasses.replace(held[1], tenant_id=1)
+
+    async def main():
+        async with eng:
+            a = await eng.submit(q0)   # miss
+            b = await eng.submit(q0)   # hit (same tenant, exact repeat)
+            c = await eng.submit(q1)   # other tenant: MUST miss
+            d = await eng.submit(q1)   # now cached for tenant 1
+            return a, b, c, d
+
+    a, b, c, d = asyncio.run(main())
+    assert not a.cache_hit and b.cache_hit
+    assert not c.cache_hit and d.cache_hit
+    np.testing.assert_array_equal(np.asarray(a.result[0])[: q0.k],
+                                  np.asarray(b.result[0]))
+    tcol = np.asarray(bq.table.scalars)[:, -1]
+    cids = np.asarray(c.result[0])
+    assert np.all(tcol[cids[cids >= 0]] == 1)
+    rep = eng.report()
+    assert rep.n_cache_hits == 2
+    assert rep.tenants[0]["n_cache_hits"] == 1
+    assert rep.tenants[1]["n_cache_hits"] == 1
+    assert rep.tenants[0]["n_queries"] == 2
+
+
+def test_cache_entry_never_served_across_epoch(tenant_bq):
+    """THE staleness oracle: an entry cached at epoch e is never served at
+    epoch e+1, and the post-swap miss recomputes against the new state
+    (matches the brute-force oracle over the compacted table)."""
+    bq, held = tenant_bq
+    bq.bind_tiered(hot_capacity=8)
+    try:
+        cache = SemanticCache(eps=0.0)
+        eng = AsyncServingEngine(bq, batch_size=2, max_wait=0.005,
+                                 semcache=cache)
+        q = held[2]
+
+        async def main():
+            async with eng:
+                r1 = await eng.submit(q)
+                r2 = await eng.submit(q)
+                epoch0 = bq.tiered.epoch
+                vecs, scal = _fresh_rows(bq.table, 8, seed=31)
+                bq.tiered.insert(vecs, scal)
+                bq.tiered.compact()  # epoch e -> e+1
+                assert bq.tiered.epoch == epoch0 + 1
+                r3 = await eng.submit(q)
+                r4 = await eng.submit(q)
+                return r1, r2, r3, r4
+
+        r1, r2, r3, r4 = asyncio.run(main())
+        assert not r1.cache_hit and r2.cache_hit
+        assert not r3.cache_hit  # pinned: epoch bump = implicit flush
+        assert cache.stats()["stale_drops"] >= 1
+        assert r4.cache_hit  # repopulated under the NEW token
+        # the post-swap result is computed against the compacted table
+        gt_ids, gt_s, _ = brute_force_topk(
+            bq.tiered.logical_table(), list(q.query_vectors),
+            list(q.weights), q.predicates, q.k)
+        np.testing.assert_allclose(np.sort(np.asarray(r3.result[1])),
+                                   np.sort(gt_s), atol=1e-3, rtol=1e-4)
+    finally:
+        bq.unbind_tiered()
+
+
+def test_hot_insert_visible_to_next_miss(tenant_bq):
+    """Any hot-tier insert changes the freshness token: the very next
+    repeat MISSES and its re-execution sees the inserted row."""
+    bq, held = tenant_bq
+    bq.bind_tiered(hot_capacity=32)
+    try:
+        cache = SemanticCache(eps=0.0)
+        eng = AsyncServingEngine(bq, batch_size=2, max_wait=0.005,
+                                 semcache=cache)
+        # a query whose predicate some cold row passes; give the inserted
+        # row that row's scalars and an unbeatable vector
+        q = held[3]
+        mask = eval_mask_np(q.predicates, np.asarray(bq.table.scalars))
+        assert mask.any()
+        passing = int(np.argmax(mask))
+        big = [100.0 * np.asarray(v, np.float32)[None]
+               for v in q.query_vectors]
+        new_scal = np.asarray(bq.table.scalars)[passing: passing + 1]
+
+        async def main():
+            async with eng:
+                r1 = await eng.submit(q)
+                r2 = await eng.submit(q)
+                new_id = bq.tiered.snapshot().n_rows  # next global row id
+                bq.tiered.insert(big, new_scal)
+                r3 = await eng.submit(q)
+                return r1, r2, r3, new_id
+
+        r1, r2, r3, new_id = asyncio.run(main())
+        assert r2.cache_hit
+        assert not r3.cache_hit  # pinned: insert = token change = miss
+        assert new_id in np.asarray(r3.result[0])  # and the miss SEES it
+    finally:
+        bq.unbind_tiered()

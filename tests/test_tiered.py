@@ -237,6 +237,70 @@ def test_ep001_registry_matches_tiered_fields(tiered_bq):
         assert hasattr(t, field), field
 
 
+def test_compact_rebuild_decision_locked_at_seal(tiered_bq, monkeypatch):
+    """Regression: the ``rebuild_every`` decision used to read
+    ``self._compactions`` OUTSIDE the lock during the heavy phase — a
+    racing compaction bumping the counter mid-flight could skip (or
+    double-fire) the every-Nth re-cluster. The sequence number is now
+    captured under the lock at seal time; force the interleaving and pin
+    the decision."""
+    from repro.vectordb.table import Table
+    from repro.vectordb.tiered import TieredTable
+
+    bq, _ = tiered_bq
+    t = TieredTable(bq.table, bq.indexes, bq.hists, hot_capacity=4,
+                    rebuild_every=2)
+    t.insert(*_fresh_rows(4, seed=21))
+    r1 = t.compact()
+    assert r1["compacted"] == 4 and r1["rebuild"] is False  # seq 1
+    t.insert(*_fresh_rows(4, seed=22))
+
+    orig = Table.append
+
+    def racing_append(self, *a, **kw):
+        # another compaction's counter bump landing while THIS compaction
+        # is inside its unlocked heavy phase
+        t._compactions += 9
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(Table, "append", racing_append)
+    r2 = t.compact()
+    assert r2["compacted"] == 4
+    assert r2["rebuild"] is True  # seq 2: the every-2nd re-cluster fires
+
+
+def test_insert_publishes_without_device_transfers(tiered_bq):
+    """Regression: ``_publish_locked`` used to re-materialize full-capacity
+    DEVICE copies of the hot view on every insert. Views are now host-side
+    tokens materialized lazily on first read: an insert-only window costs
+    zero transfers, one snapshot read costs exactly one materialization
+    (cached per view), and a late materialization still reads exactly the
+    rows the view froze."""
+    from repro.vectordb import tiered as T
+
+    bq, _ = tiered_bq
+    t = T.TieredTable(bq.table, bq.indexes, bq.hists, hot_capacity=64)
+    vecs, scal = _fresh_rows(8, seed=23)
+    base = T.hot_view_transfers()
+    for i in range(8):
+        t.insert([v[i: i + 1] for v in vecs], scal[i: i + 1])
+    assert T.hot_view_transfers() - base == 0  # 8 publishes, 0 transfers
+    view = t.snapshot().hot_views[0]
+    _ = view.vectors
+    _ = view.scalars
+    per_view = len(vecs) + 1  # one copy per vector column + the scalars
+    assert T.hot_view_transfers() - base == per_view
+    _ = view.vectors  # cached: no second materialization
+    assert T.hot_view_transfers() - base == per_view
+    # late materialization: appends after the publish only touch rows
+    # >= count, so the frozen prefix is unchanged
+    view2 = t.snapshot().hot_views[0]
+    assert view2.count == 8
+    t.insert([v[:2] for v in vecs], scal[:2])
+    np.testing.assert_array_equal(np.asarray(view2.scalars)[:8],
+                                  scal[:8])
+
+
 def test_hot_rows_filtered_exactly(tiered_bq):
     # a hot row failing the predicate must NEVER surface, even as the
     # nearest vector: hot scoring is exact-filtered, not probed
