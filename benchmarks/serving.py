@@ -679,6 +679,276 @@ def run_semcache(*, rows: int = 4000, n_unique: int = 16, n_trace: int = 80,
     return out
 
 
+def run_graph(*, rows: int = 100_000, n_hard: int = 48, batch_size: int = 16,
+              degree: int = 16, metric: str = "l2", k: int = 10,
+              seed: int = 0) -> dict:
+    """Graph-strategy acceptance on the correlated hard stratum
+    (docs/graph_index.md).
+
+    The stratum is built on the sift v→s table, whose ``cluster_id``
+    scalar IS the k-means cluster of the vector: an equality predicate
+    selects one geometric region, and placing the query near a row of a
+    DIFFERENT cluster makes every IVF probe land on disqualified rows —
+    the regime PR 5 showed escalating to the exact-scan fallback. Four
+    measured rows:
+
+      * ``graph`` — the new third strategy (beam 16 × 8 hops), recall +
+        QPS + mean visited rows (its scan budget);
+      * ``ivf_probe`` — IVF at a scan budget ≥ the graph's (nprobe
+        rounded up, ``max_scan`` at the grid floor, 4×+ the graph's
+        visited count): recall collapses, which is WHY this stratum
+        escalates;
+      * ``exact_full`` — the exact-scan fallback as the serving pipeline
+        dispatches it (dense GEMM over all rows, recall 1.0 by
+        construction);
+      * ``exact_matched`` — the same fallback budgeted down to the
+        graph's oracle recall (smallest ``max_candidates`` whose measured
+        recall ≥ the graph's, timed on BOTH scoring paths and reported at
+        the better of the two) — the matched-recall baseline the
+        acceptance compares against.
+
+    The acceptance claims: ``graph`` QPS > both exact rows' QPS at oracle
+    recall ≥ the matched row's, and ``ivf_probe`` recall far below both.
+
+    Two further sections feed the planner: (1) ``cost_model`` fits the
+    ``CostModel.graph_row_cost`` / ``overhead_graph`` constants from the
+    measured timings — the row unit is anchored on the dense exact scan
+    (``crossover · n_rows`` units ↔ its measured per-batch wall time), so
+    the graph-vs-exact crossover the constants encode reproduces the
+    wall-clock ordering; (2) ``mixed_batch`` scans the fitted three-way
+    cost surface (``choose_strategy``) over legal knob/batch shapes for a
+    regime where each strategy wins, then executes ONE
+    ``execute_batch`` over a stream carrying all three plan strategies
+    and reports the per-group scoring-path decisions."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.bench import datasets
+    from repro.core.executor import HybridExecutor, recall_at_k
+    from repro.core.query import (
+        BEAM_GRID, HOP_GRID, MAX_SCAN_GRID, MHQ, ExecutionPlan,
+        SubqueryParams,
+    )
+    from repro.serve.batch import (
+        CANDIDATE_LOCAL, BatchedHybridExecutor, CostModel,
+    )
+    from repro.vectordb import flat, graph, ivf
+    from repro.vectordb.predicates import Predicates
+
+    table = datasets.make("sift", rows=rows, seed=seed, metric=metric)
+    n = table.n_rows
+    nc = max(32, min(256, n // 2000))
+    # the offline build is O(n^2) (~20 min at 100k on CPU): cache the
+    # adjacency keyed by everything that determines it
+    cache = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         ".graph_cache",
+                         f"sift_{rows}_{degree}_{metric}_{seed}.npz")
+    t0 = time.time()
+    if os.path.exists(cache):
+        z = np.load(cache)
+        g = graph.GraphIndex(
+            neighbors=jnp.asarray(z["neighbors"]),
+            entry_points=jnp.asarray(z["entry_points"]), metric=metric)
+        build_s = float(z["build_s"])
+    else:
+        g = graph.build(table.vectors[0], degree, metric=metric)
+        build_s = time.time() - t0
+        os.makedirs(os.path.dirname(cache), exist_ok=True)
+        np.savez(cache, neighbors=np.asarray(g.neighbors),
+                 entry_points=np.asarray(g.entry_points), build_s=build_s)
+    iv = ivf.build(table.vectors[0], n_clusters=nc, metric=metric)
+    print(f"  graph suite built in {time.time() - t0:.0f}s "
+          f"({n} rows, degree {degree}, {nc} IVF clusters)")
+
+    # -- the correlated hard stratum ------------------------------------
+    clu = np.asarray(table.scalars)[:, 0].astype(int)
+    counts = np.bincount(clu)
+    good = [c for c in range(counts.shape[0]) if counts[c] >= 2 * k]
+    rng = np.random.default_rng(seed + 5)
+    vecs = np.asarray(table.vectors[0])
+    hard = []
+    for _ in range(n_hard):
+        c = int(rng.choice(good))
+        r = int(rng.choice(np.where(clu != c)[0]))
+        qv = (vecs[r] + rng.normal(0, 0.02, vecs.shape[1])).astype(np.float32)
+        pred = Predicates.from_conditions(
+            table.scalars.shape[1], {0: (float(c), float(c))})
+        hard.append(MHQ(query_vectors=(jnp.asarray(qv),), weights=(1.0,),
+                        predicates=pred, k=k))
+    gts = [np.asarray(flat.ground_truth(
+        table, list(q.query_vectors), list(q.weights), q.predicates,
+        q.k)[0]) for q in hard]
+
+    hx = HybridExecutor(table, [iv], graphs=[g])
+    subs = (SubqueryParams(k_mult=8, nprobe=8, max_scan=MAX_SCAN_GRID[0],
+                           iterative=False),)
+
+    def timed(bx, plan, qs=hard, q_gts=gts, bs=batch_size):
+        plans = [plan] * len(qs)
+        bx.execute_batch(qs[:bs], plans[:bs])  # warm jit
+        t0 = time.perf_counter()
+        res = []
+        for s in range(0, len(qs), bs):
+            res.extend(bx.execute_batch(qs[s: s + bs], plans[s: s + bs]))
+        dt = time.perf_counter() - t0
+        rec = float(np.mean([recall_at_k(ids, gt)
+                             for (ids, _), gt in zip(res, q_gts)]))
+        return round(rec, 3), round(len(qs) / dt, 1), dt / (len(qs) / bs)
+
+    def visited(bw, nh, m=16):
+        nv = []
+        for q in hard[:m]:
+            _, _, nvis, _ = graph.search(
+                g, table.vectors[0], table.scalars, q.predicates,
+                q.query_vectors[0], beam_width=bw, n_hops=nh, k=k)
+            nv.append(int(nvis))
+        return int(np.mean(nv))
+
+    bx = BatchedHybridExecutor(table, [iv], graphs=[g])
+    bxl = BatchedHybridExecutor(table, [iv], graphs=[g],
+                                cost_model=CostModel(force=CANDIDATE_LOCAL))
+    rows_out = []
+
+    plan_g = hx.legalize(ExecutionPlan("graph", subs, beam_width=16,
+                                       n_hops=8))
+    v_big = visited(16, 8)
+    g_rec, g_qps, t_g_big = timed(bx, plan_g)
+    rows_out.append({"config": "graph", "recall": g_rec, "qps": g_qps,
+                     "scan_rows": v_big,
+                     "beam_width": 16, "n_hops": 8})
+    print(f"  graph bw16 h8: recall {g_rec} at {g_qps} QPS "
+          f"(visits ~{v_big} rows)")
+
+    npb = max(2, -(-v_big // (n // nc)))
+    plan_i = hx.legalize(ExecutionPlan("index_scan", (
+        SubqueryParams(k_mult=8, nprobe=npb, max_scan=MAX_SCAN_GRID[0],
+                       iterative=False),)))
+    i_rec, i_qps, t_ix = timed(bxl, plan_i)
+    rows_out.append({"config": "ivf_probe", "recall": i_rec, "qps": i_qps,
+                     "scan_rows": MAX_SCAN_GRID[0], "nprobe": npb})
+    print(f"  ivf nprobe={npb} max_scan={MAX_SCAN_GRID[0]}: recall {i_rec} "
+          f"at {i_qps} QPS (budget {MAX_SCAN_GRID[0] / max(v_big, 1):.1f}x "
+          f"the graph's)")
+
+    plan_e = hx.legalize(ExecutionPlan("filter_first", subs))
+    e_rec, e_qps, t_dense = timed(bx, plan_e)
+    rows_out.append({"config": "exact_full", "recall": e_rec, "qps": e_qps,
+                     "scan_rows": n})
+    print(f"  exact full scan: recall {e_rec} at {e_qps} QPS")
+
+    # smallest exact-scan budget whose recall matches the graph's; timed
+    # on both scoring paths, reported at the better (generous baseline)
+    matched = None
+    for mc in (256, 512, 1024, 2048, 4096, 8192):
+        pm = hx.legalize(ExecutionPlan("filter_first", subs,
+                                       max_candidates=mc))
+        m_rec, m_qps_l, _ = timed(bxl, pm)
+        if m_rec >= g_rec:
+            _, m_qps_d, _ = timed(bx, pm)
+            matched = {"config": "exact_matched", "recall": m_rec,
+                       "qps": max(m_qps_l, m_qps_d),
+                       "scan_rows": mc,
+                       "qps_local": m_qps_l, "qps_dense": m_qps_d}
+            break
+    if matched is None:  # graph recall above every truncated budget
+        matched = {"config": "exact_matched", "recall": e_rec, "qps": e_qps,
+                   "scan_rows": n}
+    rows_out.append(matched)
+    print(f"  exact matched-recall (mc={matched['scan_rows']}): recall "
+          f"{matched['recall']} at {matched['qps']} QPS")
+
+    # -- fit the CostModel graph constants ------------------------------
+    # unit anchor: the dense exact scan's measured per-batch time is
+    # crossover·n_rows units by definition of the strategy crossover, so
+    # the fitted (graph_row_cost, overhead_graph) reproduce the measured
+    # graph-vs-exact wall-clock ordering at serving shapes.
+    cm0 = CostModel()
+    unit_s = t_dense / (cm0.crossover * n)
+    plan_g2 = hx.legalize(ExecutionPlan("graph", subs, beam_width=4,
+                                        n_hops=2))
+    v_small = visited(4, 2)
+    _, _, t_g_small = timed(bx, plan_g2)
+    u_big, u_small = t_g_big / unit_s, t_g_small / unit_s
+    c_fit = max(0.05, (u_big - u_small)
+                / max(1, batch_size * (v_big - v_small)))
+    oh_fit = max(0.0, u_big - batch_size * v_big * c_fit)
+    c_fit, oh_fit = round(c_fit, 3), round(oh_fit, 1)
+    cost = {"graph_row_cost": c_fit, "overhead_graph": oh_fit,
+            "unit_us": round(unit_s * 1e6, 3),
+            "visited": {"bw16_h8": v_big, "bw4_h2": v_small},
+            "batch_s": {"graph_bw16_h8": round(t_g_big, 4),
+                        "graph_bw4_h2": round(t_g_small, 4),
+                        "exact_dense": round(t_dense, 4),
+                        "ivf_local": round(t_ix, 4)}}
+    print(f"  cost fit: graph_row_cost {c_fit}, overhead_graph {oh_fit} "
+          f"(dense-anchored unit {cost['unit_us']}us)")
+
+    # -- three-way dispatch in one mixed batch --------------------------
+    cm = CostModel(graph_row_cost=c_fit, overhead_graph=oh_fit)
+    regimes = {}
+    for b in (1, 2, 4, 8, 16, 32, 64, 128):
+        for bw in BEAM_GRID:
+            for nh in HOP_GRID:
+                gs = max(1, int(v_big * (bw * nh) / (16 * 8)))
+                for ms in MAX_SCAN_GRID:
+                    s = cm.choose_strategy(batch=b, graph_scan=gs,
+                                           probe_scan=min(ms, n), n_rows=n)
+                    regimes.setdefault(s, {
+                        "batch": b, "beam_width": bw, "n_hops": nh,
+                        "graph_scan": gs, "probe_scan": min(ms, n)})
+    print(f"  three-way regimes found: {sorted(regimes)}")
+
+    mixed_plans = {
+        "graph": plan_g,
+        "index_scan": plan_i,
+        "exact": plan_e,
+    }
+    stream, plans = [], []
+    rng2 = np.random.default_rng(seed + 9)
+    for i, q in enumerate(hard[:3 * (len(hard) // 3)]):
+        strat = ("graph", "index_scan", "exact")[i % 3]
+        stream.append(q)
+        plans.append(mixed_plans[strat])
+    order = rng2.permutation(len(stream))
+    stream = [stream[i] for i in order]
+    plans = [plans[i] for i in order]
+    bx.dispatcher.take()  # drop warm-up decisions
+    res = bx.execute_batch(stream, plans)
+    counts, decisions = bx.dispatcher.take()
+    keys = sorted({bx._group_key(q, hx.legalize(p))[0]
+                   for q, p in zip(stream, plans)})
+    mixed = {"batch": len(stream),
+             "strategies": sorted({p.strategy for p in plans}),
+             "group_kinds": keys,
+             "scoring_paths": counts,
+             "regimes": regimes,
+             "all_three_in_one_batch": keys == ["ff", "gr", "ix"],
+             "results": len(res)}
+    print(f"  mixed batch of {len(stream)}: groups {keys}, scoring paths "
+          f"{counts}")
+
+    out = {
+        "figure": "graph_index_hard_stratum",
+        "dataset": "sift", "rows": n, "metric": metric, "degree": degree,
+        "n_hard": n_hard, "batch_size": batch_size, "k": k,
+        "build_s": round(build_s, 1),
+        "table": rows_out,
+        "cost_model": cost,
+        "mixed_batch": mixed,
+        "graph_vs_exact_full_speedup": round(g_qps / e_qps, 2),
+        "graph_vs_exact_matched_speedup": round(
+            g_qps / matched["qps"], 2),
+        "graph_recall_minus_matched": round(g_rec - matched["recall"], 4),
+    }
+    print(f"  acceptance: graph {out['graph_vs_exact_full_speedup']}x vs "
+          f"full exact, {out['graph_vs_exact_matched_speedup']}x vs "
+          f"matched-recall exact (recall delta "
+          f"{out['graph_recall_minus_matched']:+.3f}); ivf recall {i_rec} "
+          f"vs graph {g_rec}")
+    return out
+
+
 def run(sizes=None, dataset: str = "part", *, n_stream: int = 64,
         batch_size: int = 32, seed: int = 0, shards=DEFAULT_SHARDS,
         rate: float = DEFAULT_RATE, deadline: float = DEFAULT_DEADLINE
@@ -730,8 +1000,14 @@ def main():
                          "shards: learned per-shard probing vs exact "
                          "sharded scan vs single-device) instead of the "
                          "suite")
+    ap.add_argument("--graph", action="store_true",
+                    help="graph-strategy acceptance on the correlated "
+                         "hard stratum (graph vs IVF-probe vs exact-scan "
+                         "fallback, CostModel constant fit, three-way "
+                         "mixed-batch dispatch) instead of the suite")
     ap.add_argument("--rows", type=int, default=500_000,
-                    help="table rows for --sharded")
+                    help="table rows for --sharded / --graph (--graph "
+                         "caps at 100k: the offline build is O(n^2))")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for --sharded")
     ap.add_argument("--mesh", action="store_true",
@@ -745,6 +1021,13 @@ def main():
     if args.crossover:
         res = {"figure": "serving_scoring_crossover",
                "table": run_crossover(n_stream=args.n_stream)}
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=2)
+        return
+
+    if args.graph:
+        res = run_graph(rows=min(args.rows, 100_000))
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(res, f, indent=2)

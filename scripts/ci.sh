@@ -35,7 +35,7 @@ fi
 # via requirements-dev.txt); offline images without it run plain so the
 # baked-in toolchain stays sufficient
 if python -c "import pytest_cov" >/dev/null 2>&1 && [[ "${CI_FAST:-0}" != "1" ]]; then
-  PYTEST_ARGS+=(--cov=repro --cov-report=term --cov-fail-under=77)
+  PYTEST_ARGS+=(--cov=repro --cov-report=term --cov-fail-under=78)
 else
   echo "pytest-cov unavailable or CI_FAST set; running without coverage floor"
 fi

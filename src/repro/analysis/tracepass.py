@@ -102,6 +102,8 @@ def check_vmem_envelope(cfg: LintConfig) -> list:
          shapes.int8_gather_tile_bytes(
              (shapes.MAX_COL_DIM,) * shapes.MAX_VEC_COLS,
              shapes.MAX_SCALARS, 4)),
+        ("beam_search", "src/repro/kernels/beam_search.py",
+         shapes.beam_tile_bytes(shapes.MAX_COL_DIM, shapes.MAX_SCALARS, 4)),
     ]
     for label, path, est in envelope:
         if est > budget:

@@ -29,7 +29,7 @@ from repro.core.executor import EngineCaps, HybridExecutor, PGVECTOR
 from repro.core.query import ExecutionPlan, MHQ, SubqueryParams, default_plan
 from repro.core.query_encoder import QueryEncoder
 from repro.core.rewriter import MHQRewriter, RewriterConfig, generate_label
-from repro.vectordb import flat, histogram, ivf
+from repro.vectordb import flat, graph, histogram, ivf
 from repro.vectordb.table import Table
 
 
@@ -41,6 +41,10 @@ def _n_valid(ids) -> int:
 class BoomHQConfig:
     n_clusters: int = 64
     hist_bins: int = 64
+    # per-column proximity graphs (the third "graph" strategy —
+    # vectordb.graph): fixed out-degree of the sealed Vamana-style graph;
+    # 0 disables the tier (plans legalize graph -> index_scan)
+    graph_degree: int = 16
     encoder: DataEncoderConfig = dataclasses.field(default_factory=DataEncoderConfig)
     rewriter: RewriterConfig = dataclasses.field(default_factory=RewriterConfig)
     # ablations (§5.5)
@@ -62,7 +66,13 @@ class BoomHQ:
             for i, v in enumerate(table.vectors)
         ]
         self.hists = histogram.build(table.scalars, cfg.hist_bins)
-        self.executor = HybridExecutor(table, self.indexes, engine)
+        self.graphs = None
+        if cfg.graph_degree:
+            self.graphs = tuple(
+                graph.build(v, cfg.graph_degree, metric=table.schema.metric)
+                for v in table.vectors)
+        self.executor = HybridExecutor(table, self.indexes, engine,
+                                       graphs=self.graphs)
         self.data_encoder: Optional[DataEncoder] = None
         if cfg.use_de:
             self.data_encoder = DataEncoder(
@@ -428,7 +438,7 @@ class BoomHQ:
         self.tiered = TieredTable(
             self.table, self.indexes, self.hists,
             hot_capacity=hot_capacity, rebuild_every=rebuild_every,
-            finetune_cb=self._on_compaction)
+            finetune_cb=self._on_compaction, graphs=self.graphs)
         return self
 
     def unbind_tiered(self) -> "BoomHQ":
@@ -465,8 +475,9 @@ class BoomHQ:
         self.table = cold.table
         self.indexes = list(cold.indexes)
         self.hists = cold.hists
+        self.graphs = cold.graphs
         self.executor = HybridExecutor(cold.table, list(cold.indexes),
-                                       self.engine)
+                                       self.engine, graphs=cold.graphs)
         self._prewarm_cold(cold)
 
     def _prewarm_cold(self, cold) -> None:
@@ -706,13 +717,14 @@ class BoomHQ:
         t = self.table if cold is None else cold.table
         idxs = self.indexes if cold is None else list(cold.indexes)
         hs = self.hists if cold is None else cold.hists
+        grs = self.graphs if cold is None else cold.graphs
         if getattr(self, "_batched", None) is None \
                 or self._batched.table is not t:
             self._batched = BatchedHybridExecutor(
                 t, idxs, self.engine,
                 n_shards=self.n_shards, mesh=self.shard_mesh,
                 shard_axes=getattr(self, "shard_axes", ("data",)),
-                cost_model=self.cost_model, hists=hs)
+                cost_model=self.cost_model, hists=hs, graphs=grs)
         return self._batched
 
     def execute_timed(self, q: MHQ, *, repeats: int = 1):
@@ -750,7 +762,14 @@ class BoomHQ:
             for idx, v in zip(self.indexes, vectors)
         ]
         self.hists = histogram.update(self.hists, jnp.asarray(scalars, jnp.float32))
-        self.executor = HybridExecutor(self.table, self.indexes, self.engine)
+        if self.graphs is not None:
+            # graph.extend reads the FULL post-append column (the graph
+            # stores no vectors), so this must follow the table append
+            self.graphs = tuple(
+                graph.extend(g, v, first_new)
+                for g, v in zip(self.graphs, self.table.vectors))
+        self.executor = HybridExecutor(self.table, self.indexes, self.engine,
+                                       graphs=self.graphs)
         self._batched = None  # rebind the batched executor to the new table
         out = {}
         if self.data_encoder is not None and finetune:

@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.query import ExecutionPlan, MHQ, PRECISION_GRID, SubqueryParams
-from repro.vectordb import flat, ivf, predicates
+from repro.core.query import (
+    BEAM_GRID, ExecutionPlan, HOP_GRID, MHQ, PRECISION_GRID, SubqueryParams,
+)
+from repro.vectordb import flat, graph, ivf, predicates
 from repro.vectordb.table import Table, similarity
 
 NEG = -1e30
@@ -208,13 +210,29 @@ def plan_columns(q: MHQ, plan: ExecutionPlan) -> tuple:
     return tuple(i for i in range(q.n_vec) if q.weights[i] > 0.0)
 
 
-class HybridExecutor:
-    """Binds a table + per-column IVF indexes + an engine personality."""
+def legal_knob(grid: tuple, value: int) -> int:
+    """Smallest grid entry ≥ value (grid max when none) — how the graph
+    beam/hop knobs snap onto their static grids at legalization time."""
+    for g in grid:
+        if g >= value:
+            return g
+    return grid[-1]
 
-    def __init__(self, table: Table, indexes: list, engine: EngineCaps = PGVECTOR):
+
+class HybridExecutor:
+    """Binds a table + per-column IVF indexes + an engine personality.
+
+    ``graphs``: optional per-column ``vectordb.graph.GraphIndex`` tuple —
+    when bound, plans may pick the third ("graph") strategy; when absent,
+    legalization rewrites graph plans to index_scan so a plan learned
+    against a graph-bearing deployment stays executable everywhere."""
+
+    def __init__(self, table: Table, indexes: list,
+                 engine: EngineCaps = PGVECTOR, *, graphs=None):
         self.table = table
         self.indexes = indexes
         self.engine = engine
+        self.graphs = tuple(graphs) if graphs is not None else None
 
     # -- plan legalization ---------------------------------------------------
 
@@ -242,8 +260,22 @@ class HybridExecutor:
         prec = plan.precision if plan.precision in PRECISION_GRID else "fp32"
         if plan.strategy == "filter_first":
             prec = "fp32"
+        strategy = plan.strategy
+        beam, hops = plan.beam_width, plan.n_hops
+        if strategy == "graph":
+            if self.graphs is None:
+                # no graph tier bound: the nearest executable strategy is
+                # the per-column probe union the graph plan approximates
+                strategy = "index_scan"
+            else:
+                # graph candidates come from the fp32 routing walk + one
+                # fused extraction — there is no int8 candidate tier
+                prec = "fp32"
+                beam = legal_knob(BEAM_GRID, beam)
+                hops = legal_knob(HOP_GRID, hops)
         return dataclasses.replace(
-            plan, subqueries=tuple(subs), precision=prec,
+            plan, strategy=strategy, subqueries=tuple(subs), precision=prec,
+            beam_width=beam, n_hops=hops,
             max_candidates=min(plan.max_candidates, self.table.n_rows))
 
     # -- execution -------------------------------------------------------------
@@ -268,8 +300,17 @@ class HybridExecutor:
             k_i = min(sp.k_mult * q.k, t.n_rows)
             ks = subquery_width(k_i, min(sp.max_scan, t.n_rows)) \
                 if len(cols) > 1 else k_i
-            ids_i = self._subquery(i, q, k_i, sp, precision=plan.precision,
-                                   width=ks)
+            if plan.strategy == "graph":
+                # predicate-aware beam walk over the column's proximity
+                # graph; the returned list is already filtered + ranked,
+                # so it slots into the same RRF union + rerank as IVF
+                ids_i, _, _, _ = graph.search(
+                    self.graphs[i], t.vectors[i], t.scalars, q.predicates,
+                    q.query_vectors[i], beam_width=plan.beam_width,
+                    n_hops=plan.n_hops, k=ks)
+            else:
+                ids_i = self._subquery(i, q, k_i, sp,
+                                       precision=plan.precision, width=ks)
             wide.append(ids_i)
             cand.append(ids_i[:k_i])
         rows = jnp.concatenate(cand)

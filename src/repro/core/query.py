@@ -15,12 +15,18 @@ import dataclasses
 
 from repro.vectordb.predicates import PredicateLike
 
-STRATEGIES = ("filter_first", "index_scan", "single_index")
+STRATEGIES = ("filter_first", "index_scan", "single_index", "graph")
 
 # parameter grids (ef_search analogue etc.) — §3.4 search space
 NPROBE_GRID = (1, 2, 4, 8, 16, 32)
 MAX_SCAN_GRID = (2048, 8192, 32768, 131072)
 KMULT_GRID = (1, 2, 4, 8)  # k_i = mult · k
+# graph-strategy knobs: beam width and hop count of the predicate-aware
+# proximity-graph walk (kernels.beam_search). The grids bound the static
+# candidate-pool shapes, so the jit cache is keyed by at most
+# |BEAM_GRID|·|HOP_GRID| routing traces per column.
+BEAM_GRID = (4, 8, 16)
+HOP_GRID = (2, 4, 8)
 # scoring precision of the candidate tier: exact fp32, or the symmetric
 # int8 replica with an exact fp32 rerank of the top-α·k survivors
 # (kernels.gather_score.gather_score_topk_int8). Scalar predicates stay
@@ -59,6 +65,10 @@ class ExecutionPlan:
     dominant: int = 0  # column searched when strategy == "single_index"
     max_candidates: int = 16384  # filter-first gather cap
     precision: str = "fp32"  # PRECISION_GRID: candidate-tier scoring dtype
+    # graph-strategy knobs (ignored by the other strategies): beam width and
+    # hop count of the predicate-aware proximity-graph walk
+    beam_width: int = 8  # BEAM_GRID
+    n_hops: int = 4  # HOP_GRID
 
     def describe(self) -> str:
         subs = ", ".join(
@@ -66,7 +76,9 @@ class ExecutionPlan:
             f"{',iter' if s.iterative else ''})"
             for i, s in enumerate(self.subqueries))
         prec = "" if self.precision == "fp32" else f"@{self.precision}"
-        return f"{self.strategy}{prec}[{subs}]"
+        knobs = f"(bw{self.beam_width},h{self.n_hops})" \
+            if self.strategy == "graph" else ""
+        return f"{self.strategy}{prec}{knobs}[{subs}]"
 
 
 def default_plan(n_vec: int, engine_caps=None) -> ExecutionPlan:

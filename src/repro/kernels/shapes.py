@@ -37,6 +37,20 @@ MAX_VEC_COLS = 4  # most vector columns per table
 MAX_SCALARS = 16  # most scalar predicate columns
 MAX_TOPK = 128  # largest static k a kernel is launched with
 
+# Graph-index beam search envelope (kernels/beam_search.py): the largest
+# legalized knobs a plan may launch with. The per-hop expansion working
+# set is beam_width·degree gathered rows; the visited-candidate pool the
+# final gather+score extraction runs over is
+# (GRAPH_ENTRY_POINTS + GRAPH_SEED_FACTOR·beam_width) +
+# n_hops·beam_width·degree slots — the walk is seeded with the global
+# entries PLUS GRAPH_SEED_FACTOR·beam_width predicate-qualifying rows per
+# query (hashed-id spread over the qualifying set).
+MAX_BEAM_WIDTH = 16  # widest legalized beam (BEAM_GRID max)
+MAX_BEAM_HOPS = 8  # most legalized hops (HOP_GRID max)
+MAX_GRAPH_DEGREE = 32  # largest graph out-degree (DEGREE_GRID max)
+GRAPH_ENTRY_POINTS = 8  # static entry-point count (medoid + strided)
+GRAPH_SEED_FACTOR = 4  # qualifying seed rows per beam slot
+
 # Conservative per-step budget: 16 MB physical VMEM minus headroom for
 # Mosaic double buffering and spills.
 DEFAULT_VMEM_BUDGET = 12 * 2**20
@@ -76,6 +90,34 @@ def gather_tile_bytes(dims: tuple, n_scalars: int, n_clauses: int, *,
     pinned = (sum(dims) + n_clauses * (2 * n_scalars + 1) + block_s) * _F32
     out = 2 * k * _F32
     return scratch + scal + pinned + out
+
+
+def beam_tile_bytes(dim: int, n_scalars: int, n_clauses: int = 4, *,
+                    k: int = MAX_TOPK,
+                    beam_width: int = MAX_BEAM_WIDTH,
+                    n_hops: int = MAX_BEAM_HOPS,
+                    degree: int = MAX_GRAPH_DEGREE,
+                    block_s: int = GATHER_BLOCK_S) -> int:
+    """Resident bytes per query of the graph beam search
+    (``kernels.beam_search``): the max of the XLA routing loop's per-hop
+    working set and the final Pallas extraction's per-grid-step tile.
+
+    Per hop the routing loop gathers ``beam_width·degree`` neighbor rows
+    ((expand, dim) f32 vectors + (expand, n_scalars) f32 scalars + id /
+    score / qual lanes) and merges them into the
+    (entry + expand)-slot frontier pool (ids, scores, qual, expanded).
+    The visited bitmask is table-sized HBM state (n/32 B), never tiled
+    into VMEM, so it is deliberately outside this estimate. Result
+    extraction is one ``gather_score`` launch over the accumulated
+    visited-candidate pool, so its tile is exactly
+    ``gather_tile_bytes((dim,), ...)``."""
+    expand = beam_width * degree
+    hop = expand * (dim + n_scalars + 3) * _F32
+    pool = (GRAPH_ENTRY_POINTS + GRAPH_SEED_FACTOR * beam_width
+            + expand) * 4 * _F32
+    extract = gather_tile_bytes((dim,), n_scalars, n_clauses,
+                                k=k, block_s=block_s)
+    return max(hop + pool, extract)
 
 
 def int8_gather_tile_bytes(dims: tuple, n_scalars: int, n_clauses: int, *,

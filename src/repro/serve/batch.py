@@ -51,10 +51,12 @@ from repro.core.executor import (
     rerank_scored, rrf_extras, rrf_union_total, subquery_width,
 )
 from repro.core.query import (
-    ExecutionPlan, KMULT_GRID, MAX_SCAN_GRID, MHQ, NPROBE_GRID,
+    BEAM_GRID, ExecutionPlan, HOP_GRID, KMULT_GRID, MAX_SCAN_GRID, MHQ,
+    NPROBE_GRID,
 )
 from repro.kernels.gather_score import gather_score_topk, merge_topk_unique
-from repro.vectordb import flat, histogram, ivf, predicates
+from repro.kernels.shapes import GRAPH_ENTRY_POINTS, GRAPH_SEED_FACTOR
+from repro.vectordb import flat, graph, histogram, ivf, predicates
 from repro.vectordb.distributed import (
     build_sharded_ivf, sharded_batch_topk, sharded_ivf_topk, sharded_topk_ref,
 )
@@ -136,6 +138,19 @@ class CostModel:
     overhead: float = 2048.0  # per-batch fixed cost, in gathered-row units
     crossover_int8: float = 0.545  # measured: results/quantized_crossover.json
     overhead_int8: float = 3350.0  # measured, same calibration run
+    # graph tier: graph_row_cost converts visited-row budgets into
+    # probed-slot units so the three tiers compare on one axis;
+    # overhead_graph is the per-batch fixed cost of the walk dispatch
+    # (n_hops sequential hop steps, not amortizable over the batch).
+    # Measured by benchmarks/serving.py --graph
+    # (benchmarks/results/graph_index.json), unit-anchored on the dense
+    # exact scan's per-batch wall time. A visited graph row comes out
+    # CHEAPER than one gathered-row unit — the per-hop neighbor gathers
+    # vectorize across the whole query batch — which is why, once a graph
+    # tier is bound, the fitted surface leaves probing only the cases the
+    # planner routes to it for recall (or when a column has no graph).
+    graph_row_cost: float = 0.216
+    overhead_graph: float = 328.3
     min_shard_rows: int = 4096
     force: Optional[str] = None
 
@@ -144,6 +159,29 @@ class CostModel:
         if precision == "int8":
             return self.crossover_int8, self.overhead_int8
         return self.crossover, self.overhead
+
+    def choose_strategy(self, *, batch: int, graph_scan: int,
+                        probe_scan: int, n_rows: int) -> str:
+        """Measured graph-vs-probe-vs-exact crossover at the STRATEGY level
+        (the scoring-path crossovers above route a group once its strategy
+        is fixed; this compares the strategies themselves, in the same
+        gathered-row cost units):
+
+          exact  ≈ crossover · n_rows          (one dense GEMM per column)
+          probe  ≈ batch · probe_scan + overhead
+          graph  ≈ batch · graph_scan · graph_row_cost + overhead_graph
+
+        Returns the cheapest of {"exact", "index_scan", "graph"}. The
+        planner uses it as a guard: recall is the rewriter's job, so this
+        only breaks ties the learned heads are indifferent about (e.g. the
+        skew-guard fallback path)."""
+        costs = {
+            "exact": self.crossover * n_rows,
+            "index_scan": batch * probe_scan + self.overhead,
+            "graph": batch * graph_scan * self.graph_row_cost
+            + self.overhead_graph,
+        }
+        return min(costs, key=costs.get)
 
     def choose(self, *, batch: int, scan: int, n_rows: int,
                precision: str = "fp32") -> str:
@@ -251,6 +289,8 @@ SHAPE_GRIDS = {
     "nprobe": NPROBE_GRID,
     "max_scan": MAX_SCAN_GRID,
     "kmult": KMULT_GRID,
+    "beam": BEAM_GRID,
+    "hops": HOP_GRID,
 }
 
 
@@ -421,10 +461,12 @@ class BatchedHybridExecutor:
     def __init__(self, table: Table, indexes: list,
                  engine: EngineCaps = PGVECTOR, *, n_shards: int = 1,
                  mesh=None, shard_axes=("data",),
-                 cost_model: Optional[CostModel] = None, hists=None):
+                 cost_model: Optional[CostModel] = None, hists=None,
+                 graphs=None):
         self.table = table
         self.indexes = indexes
         self.engine = engine
+        self.graphs = tuple(graphs) if graphs is not None else None
         self.hists = hists  # selectivity stats for static gather caps
         self.dispatcher = ScoringDispatcher(table.n_rows, cost_model)
         self.mesh = mesh
@@ -447,7 +489,7 @@ class BatchedHybridExecutor:
         # shard-subset retry — benchmarks segment the probe-served tier
         # from the escalation tax with this; callers may clear it
         self.escalated: set = set()
-        self._seq = HybridExecutor(table, indexes, engine)
+        self._seq = HybridExecutor(table, indexes, engine, graphs=graphs)
 
     def legalize(self, plan: ExecutionPlan) -> ExecutionPlan:
         return self._seq.legalize(plan)
@@ -474,6 +516,16 @@ class BatchedHybridExecutor:
         if plan.strategy == "filter_first":
             return ("ff", cb, q.k, plan.max_candidates)
         n = self.table.n_rows
+        if plan.strategy == "graph":
+            # graph groups key on the legalized (beam_width, n_hops) pair —
+            # grid-valued (BEAM_GRID/HOP_GRID), they fix the static
+            # candidate-pool shape of the routing trace — plus each active
+            # column's k_i. Precision is pinned fp32 by legalization; it
+            # rides in the key slot so _run_chunk_local unpacks uniformly.
+            subs = tuple((i, min(plan.subqueries[i].k_mult * q.k, n),
+                          plan.beam_width, plan.n_hops)
+                         for i in plan_columns(q, plan))
+            return ("gr", cb, q.k, subs, "fp32")
         subs = []
         for i in plan_columns(q, plan):
             sp = plan.subqueries[i]
@@ -498,6 +550,13 @@ class BatchedHybridExecutor:
         if key[0] == "ff":
             return int(key[3])
         subs = key[3]
+        if key[0] == "gr":
+            # a graph subquery's budget is the rows its walk can visit:
+            # entry points + qualifying seeds + hops · beam · degree
+            tot = sum(GRAPH_ENTRY_POINTS + GRAPH_SEED_FACTOR * bw
+                      + nh * bw * self.graphs[col].degree
+                      for (col, _, bw, nh) in subs)
+            return max(1, tot // max(1, len(subs)))
         return max(1, sum(s[3] for s in subs) // max(1, len(subs)))
 
     # -- execution ---------------------------------------------------------
@@ -582,6 +641,14 @@ class BatchedHybridExecutor:
                     self._run_chunk_sharded(qs, part, out, k=key[2],
                                             bucket_cap=chunk,
                                             scores_b=scores_b)
+                    continue
+                if key[0] == "gr":
+                    # the sealed graph is one whole-table adjacency, not a
+                    # per-shard structure — graph groups always run the
+                    # single-device candidate-local walk, whose visited-row
+                    # budget is tiny next to any sharded scan
+                    self._run_chunk(key, qs, part, out, bucket_cap=chunk,
+                                    scores_b=scores_b)
                     continue
                 bb = min(next_bucket(len(part)), chunk)
                 path = self.dispatcher.choose_sharded(
@@ -900,9 +967,13 @@ class BatchedHybridExecutor:
                    *, bucket_cap: int, scores_b: Optional[tuple] = None):
         t = self.table
         bb = min(next_bucket(len(qs)), bucket_cap)
-        precision = key[4] if key[0] == "ix" else "fp32"
+        precision = key[4] if key[0] in ("ix", "gr") else "fp32"
+        # graph groups have no dense variant: the walk's whole point is to
+        # touch O(hops·beam·degree) rows, so a (B, n) score matrix buys
+        # nothing — they pin candidate-local (the decision is still logged)
+        force = CANDIDATE_LOCAL if key[0] == "gr" else None
         path = self.dispatcher.choose(batch=bb, scan=self._group_scan(key),
-                                      group=key[:3],
+                                      group=key[:3], force=force,
                                       prefer_dense=scores_b is not None,
                                       precision=precision)
         pred_b, qv_b, w_b = self._stack_inputs(qs, bb)
@@ -947,10 +1018,14 @@ class BatchedHybridExecutor:
                 metric=t.schema.metric)
             return out_ids, out_scores
         k, subs, precision = key[2], key[3], key[4]
-        cand = [self._batched_subquery(col, None, pred_b, qv_b[col], k_i,
-                                       np0, ms, it, local=True,
-                                       precision=precision)
-                for (col, k_i, np0, ms, it) in subs]
+        if key[0] == "gr":
+            cand = [self._graph_subquery(col, pred_b, qv_b[col], k_i, bw, nh)
+                    for (col, k_i, bw, nh) in subs]
+        else:
+            cand = [self._batched_subquery(col, None, pred_b, qv_b[col], k_i,
+                                           np0, ms, it, local=True,
+                                           precision=precision)
+                    for (col, k_i, np0, ms, it) in subs]
         rows_b = self._union_candidates(cand, subs)
         vecs, qsb, wsub, _ = self._active_columns(qs, qv_b, w_b)
         out_ids, out_scores, _ = _gather_rerank_batch(
@@ -1003,6 +1078,21 @@ class BatchedHybridExecutor:
         extras = rrf_extras(tuple(cand_wide), kis=kis,
                             n_extra=rrf_union_total(sum_ki) - sum_ki)
         return jnp.concatenate([base, extras], axis=1)
+
+    def _graph_subquery(self, col: int, pred_b, q_b, k_i: int,
+                        beam_width: int, n_hops: int):
+        """One column's predicate-aware graph walk for the whole chunk.
+        Returns ranked candidate ids at the padded probe width (bb, ks),
+        ks ≥ k_i — the same contract as ``_batched_subquery``, so the RRF
+        union and rerank downstream are strategy-agnostic. No re-expansion
+        ladder: the walk's budget is fixed by (beam_width, n_hops) and
+        underfill escalation happens at the plan level (default_plan)."""
+        t = self.table
+        ks = subquery_width(k_i, t.n_rows)
+        ids, _, _, _ = graph.search_local_batch(
+            self.graphs[col], t.vectors[col], t.scalars, pred_b, q_b,
+            beam_width=beam_width, n_hops=n_hops, k=ks)
+        return ids
 
     def _batched_subquery(self, col: int, rs_b, pred_b, q_b, k_i: int,
                           nprobe: int, max_scan: int, iterative: bool,

@@ -197,6 +197,16 @@ class SemanticCache:
         key = (tenant, query_signature(q), k_bucket(q.k))
         with self._lock:
             lru = self._tenants.setdefault(tenant, OrderedDict())
+            # N concurrent misses for one (near-)identical query must not
+            # append N duplicates under one key — that churns the LRU and
+            # evicts DISTINCT working-set entries. Replace an existing
+            # same-key entry whose centroid is within ε in place instead.
+            for eid in self._index.get(key, ()):
+                old = lru.get(eid)
+                if old is not None and self._within_eps_locked(old, q):
+                    lru[eid] = entry
+                    lru.move_to_end(eid)
+                    return
             eid = self._next_id
             self._next_id += 1
             lru[eid] = entry
@@ -209,6 +219,7 @@ class SemanticCache:
     def invalidate_tenant(self, tenant) -> int:
         """Drop every entry of one tenant; returns the count dropped."""
         with self._lock:
+            self.tenant_hits.pop(tenant, None)
             lru = self._tenants.pop(tenant, None)
             if not lru:
                 return 0

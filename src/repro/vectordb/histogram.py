@@ -121,16 +121,21 @@ def estimate_selectivity(h: Histograms, pred: PredicateLike) -> jax.Array:
     if c == 1:
         return sels[0]
     total = jnp.sum(sels)
+    # Intersections must ignore inactive columns' lo/hi: eval_mask never
+    # reads them, so producers may leave garbage there. Mask them to ±inf
+    # (the neutral elements of max/min) before folding clause bounds.
+    ilo = jnp.where(ps.active, ps.lo, -jnp.inf)
+    ihi = jnp.where(ps.active, ps.hi, jnp.inf)
     for r in range(2, c + 1):
         sign = -1.0 if r % 2 == 0 else 1.0
         for combo in itertools.combinations(range(c), r):
-            lo = ps.lo[combo[0]]
-            hi = ps.hi[combo[0]]
+            lo = ilo[combo[0]]
+            hi = ihi[combo[0]]
             act = ps.active[combo[0]]
             valid = ps.clause_valid[combo[0]]
             for ci in combo[1:]:
-                lo = jnp.maximum(lo, ps.lo[ci])
-                hi = jnp.minimum(hi, ps.hi[ci])
+                lo = jnp.maximum(lo, ilo[ci])
+                hi = jnp.minimum(hi, ihi[ci])
                 act = act | ps.active[ci]
                 valid = valid & ps.clause_valid[ci]
             total = total + sign * _clause_selectivity(h, lo, hi, act) * valid

@@ -330,9 +330,15 @@ def soft_encode(pred: PredicateLike, edges: jax.Array) -> jax.Array:
 
 
 def value_encode(values: jax.Array, edges: jax.Array) -> jax.Array:
-    """One-hot bin encoding of concrete scalar values. values: (M,) -> (M, B)."""
+    """One-hot bin encoding of concrete scalar values. values: (M,) -> (M, B).
+
+    ``side="right"`` matches the binning rule in ``histogram.build`` /
+    ``update`` / ``_prefix_at`` exactly, so a value sitting on an interior
+    bin edge one-hots into the SAME bin the selectivity stats count it in.
+    """
     b = edges.shape[1] - 1
     idx = jnp.clip(
-        jax.vmap(jnp.searchsorted)(edges, values) - 1, 0, b - 1
+        jax.vmap(lambda e, v: jnp.searchsorted(e, v, side="right"))(
+            edges, values) - 1, 0, b - 1
     )
     return jax.nn.one_hot(idx, b)

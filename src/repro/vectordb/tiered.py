@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.vectordb import graph as graphmod
 from repro.vectordb import histogram, ivf
 from repro.vectordb.table import Table
 
@@ -139,11 +140,15 @@ class HotView:
 
 @dataclasses.dataclass(frozen=True)
 class ColdState:
-    """One sealed cold epoch: table + per-column IVF + histograms."""
+    """One sealed cold epoch: table + per-column IVF + histograms, plus the
+    optional per-column proximity graphs (the third-strategy tier — sealed
+    exactly like the IVF state, extended on compaction, ``None`` when the
+    deployment has no graph tier)."""
 
     table: Table
     indexes: tuple
     hists: histogram.Histograms
+    graphs: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,7 +212,8 @@ class TieredTable:
     def __init__(self, table: Table, indexes, hists, *,
                  hot_capacity: int = DEFAULT_HOT_CAPACITY,
                  rebuild_every: int = 0,
-                 finetune_cb: Optional[Callable] = None):
+                 finetune_cb: Optional[Callable] = None,
+                 graphs=None):
         assert hot_capacity >= 1
         self.schema = table.schema
         self.hot_capacity = hot_capacity
@@ -217,7 +223,9 @@ class TieredTable:
         self.rebuild_every = rebuild_every
         self.finetune_cb = finetune_cb
         self._cond = threading.Condition()
-        self._cold = ColdState(table, tuple(indexes), hists)
+        self._cold = ColdState(
+            table, tuple(indexes), hists,
+            tuple(graphs) if graphs is not None else None)
         self._hot = _HotBuffer(table.schema, hot_capacity,
                                id_offset=table.n_rows)
         self._sealing: Optional[HotView] = None
@@ -351,7 +359,16 @@ class TieredTable:
                     ivf.extend(idx, jnp.asarray(v), first_new)
                     for idx, v in zip(cold.indexes, new_vecs))
             hists = histogram.update(cold.hists, jnp.asarray(new_scal))
-            new_cold = ColdState(table, indexes, hists)
+            # the graph tier seals alongside the IVF state: new rows get
+            # forward edges against the full post-append column plus
+            # reverse-edge splices into their neighbors' free slots
+            # (graph.extend keeps the incremental path even on rebuild
+            # compactions — re-running the full kNN+prune build per sealing
+            # step would dominate the compaction)
+            graphs = None if cold.graphs is None else tuple(
+                graphmod.extend(g, jnp.asarray(v), first_new)
+                for g, v in zip(cold.graphs, table.vectors))
+            new_cold = ColdState(table, indexes, hists, graphs)
             if self.finetune_cb is not None:
                 self.finetune_cb(new_cold, first_new, n)
                 with self._cond:

@@ -1,0 +1,249 @@
+"""Predicate-aware proximity graph index: recall floors, kernel parity,
+and the budget-matched hard-stratum acceptance (ISSUE 10 tentpole).
+
+The hard stratum is built from a v->s dataset whose ``cluster_id`` scalar
+IS the k-means cluster of the vector, so an equality predicate selects one
+geometric region; placing the query near a DIFFERENT cluster makes every
+IVF probe land on disqualified rows while the graph's split beam (raw-score
+navigators + qualifying slots) routes through the disqualified region and
+its predicate-qualifying entry seeds give the qualifying half of the beam
+a foothold inside the selected region to climb from.
+The acceptance pins graph recall >= IVF recall at EQUAL scan budget
+(IVF ``max_scan`` = the graph's mean visited count).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from oracle import NEG, brute_force_topk, similarity_np, tie_aware_recall
+from repro.bench import datasets
+from repro.bench.queries import gen_dnf_workload
+from repro.core.query import ExecutionPlan, SubqueryParams
+from repro.vectordb import graph, ivf
+from repro.vectordb.predicates import Predicates, stack
+
+K = 10
+
+
+# ---------------------------------------------------------------------------
+# shared small fixtures (sift = v->s: scalars derived from vector geometry)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["dot", "l2"])
+def sift_fixture(request):
+    metric = request.param
+    table = datasets.make("sift", rows=2000, seed=0, metric=metric)
+    g = graph.build(table.vectors[0], 16, metric=metric)
+    iv = ivf.build(table.vectors[0], n_clusters=16, metric=metric)
+    return metric, table, g, iv
+
+
+def _hard_stratum_cases(table, n_cases: int, seed: int):
+    """(cluster_id, query) pairs with the query near a row of a DIFFERENT
+    cluster than the one the predicate selects — the anti-correlated
+    stratum where index-first probing finds only disqualified rows."""
+    clu = np.asarray(table.scalars)[:, 0].astype(int)
+    counts = np.bincount(clu)
+    good = [c for c in range(counts.shape[0]) if counts[c] >= 2 * K]
+    rng = np.random.default_rng(seed)
+    vecs = np.asarray(table.vectors[0])
+    cases = []
+    for _ in range(n_cases):
+        c = int(rng.choice(good))
+        r = int(rng.choice(np.where(clu != c)[0]))
+        q = (vecs[r] + rng.normal(0, 0.02, vecs.shape[1])).astype(np.float32)
+        cases.append((c, q))
+    return cases
+
+
+def _masked_cluster_scores(table, q, c, metric):
+    clu = np.asarray(table.scalars)[:, 0].astype(int)
+    tot = similarity_np(q, np.asarray(table.vectors[0]), metric)
+    return np.where(clu == c, tot, NEG)
+
+
+# ---------------------------------------------------------------------------
+# structure invariants
+# ---------------------------------------------------------------------------
+
+def test_build_structure(sift_fixture):
+    metric, table, g, _ = sift_fixture
+    n = int(np.asarray(table.vectors[0]).shape[0])
+    assert g.neighbors.shape == (n, 16)
+    assert g.metric == metric
+    nb = np.asarray(g.neighbors)
+    valid = nb >= 0
+    assert valid.sum() > 0
+    assert nb[valid].max() < n
+    # no self-loops
+    rows = np.broadcast_to(np.arange(n)[:, None], nb.shape)
+    assert not np.any((nb == rows) & valid)
+    ep = np.asarray(g.entry_points)
+    assert ep.shape[0] == graph.GRAPH_ENTRY_POINTS
+    assert ((ep >= 0) & (ep < n)).all()
+
+
+def _reachable_from_entries(g) -> np.ndarray:
+    nb = np.asarray(g.neighbors)
+    reach = np.zeros(nb.shape[0], bool)
+    reach[np.asarray(g.entry_points)] = True
+    frontier = np.where(reach)[0]
+    while frontier.size:
+        nxt = nb[frontier].reshape(-1)
+        nxt = np.unique(nxt[nxt >= 0])
+        nxt = nxt[~reach[nxt]]
+        reach[nxt] = True
+        frontier = nxt
+    return reach
+
+
+def test_build_fully_reachable(sift_fixture):
+    """The repair pass makes (almost) every row walkable from the entry
+    points — without it the pure-kNN prune fragments clustered data into
+    islands the beam can never leave."""
+    _, table, g, _ = sift_fixture
+    reach = _reachable_from_entries(g)
+    assert reach.mean() >= 0.99, reach.sum()
+
+
+def test_extend_appends_and_reaches_new_rows(sift_fixture):
+    metric, table, g0, _ = sift_fixture
+    vecs = np.asarray(table.vectors[0])
+    n0 = 1700
+    base = graph.build(jnp.asarray(vecs[:n0]), 16, metric=metric)
+    ext = graph.extend(base, jnp.asarray(vecs), n0)
+    assert ext.neighbors.shape == (vecs.shape[0], 16)
+    # structural: appended rows got spliced into the sealed graph
+    reach = _reachable_from_entries(ext)
+    assert reach[n0:].mean() >= 0.95, reach[n0:].sum()
+    # functional: querying WITH a new row's vector keeps oracle recall
+    # (note: under dot the row itself need not be in its own top-k — a
+    # higher-norm aligned vector can out-score |q|^2 — so recall against
+    # the exact landscape is the right criterion, not a self-hit)
+    pred = Predicates.none(table.scalars.shape[1])
+    recs = []
+    for r in range(n0, n0 + 12):
+        ids, _, _, _ = graph.search(
+            ext, jnp.asarray(vecs), table.scalars, pred,
+            jnp.asarray(vecs[r]), beam_width=16, n_hops=8, k=K)
+        m = similarity_np(vecs[r], vecs, metric)
+        recs.append(tie_aware_recall(np.asarray(ids), m, K))
+    assert np.mean(recs) >= 0.4, recs
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: Pallas extraction (interpret mode) vs pure-jnp reference
+# ---------------------------------------------------------------------------
+
+def test_beam_search_kernel_parity(sift_fixture):
+    metric, table, g, _ = sift_fixture
+    rng = np.random.default_rng(3)
+    vecs = np.asarray(table.vectors[0])
+    q_b = jnp.asarray(vecs[rng.choice(vecs.shape[0], 4, replace=False)]
+                      + rng.normal(0, 0.02, (4, vecs.shape[1])).astype(np.float32))
+    preds = [
+        Predicates.none(3),
+        Predicates.from_conditions(3, {0: (0.0, 7.0)}),
+        Predicates.from_conditions(3, {2: (0.0, float(np.median(np.asarray(table.scalars)[:, 2])))}),
+        Predicates.from_conditions(3, {1: (0.0, 8.0)}),
+    ]
+    pred_b = stack(preds)
+    ids_j, sc_j, nv_j, nq_j = graph.search_local_batch(
+        g, table.vectors[0], table.scalars, pred_b, q_b,
+        beam_width=8, n_hops=4, k=K, use_kernel=False)
+    ids_k, sc_k, nv_k, nq_k = graph.search_local_batch(
+        g, table.vectors[0], table.scalars, pred_b, q_b,
+        beam_width=8, n_hops=4, k=K, use_kernel=True, interpret=True)
+    assert np.array_equal(np.asarray(ids_j), np.asarray(ids_k))
+    np.testing.assert_allclose(np.asarray(sc_j), np.asarray(sc_k),
+                               rtol=1e-5, atol=1e-4)
+    assert np.array_equal(np.asarray(nv_j), np.asarray(nv_k))
+    assert np.array_equal(np.asarray(nq_j), np.asarray(nq_k))
+
+
+# ---------------------------------------------------------------------------
+# oracle recall floors
+# ---------------------------------------------------------------------------
+
+def test_single_column_filtered_recall(sift_fixture):
+    """Moderate-selectivity range filter on the geometry-derived num column:
+    graph search keeps tie-aware oracle recall on both metrics."""
+    metric, table, g, _ = sift_fixture
+    scal = np.asarray(table.scalars)
+    lo, hi = np.quantile(scal[:, 2], [0.25, 0.75])
+    pred = Predicates.from_conditions(3, {2: (float(lo), float(hi))})
+    mask = (scal[:, 2] >= lo) & (scal[:, 2] <= hi)
+    rng = np.random.default_rng(11)
+    vecs = np.asarray(table.vectors[0])
+    recs = []
+    for r in rng.choice(vecs.shape[0], 10, replace=False):
+        q = (vecs[r] + rng.normal(0, 0.02, vecs.shape[1])).astype(np.float32)
+        ids, _, _, _ = graph.search(g, table.vectors[0], table.scalars, pred,
+                                    jnp.asarray(q), beam_width=16, n_hops=8,
+                                    k=K)
+        masked = np.where(mask, similarity_np(q, vecs, metric), NEG)
+        recs.append(tie_aware_recall(np.asarray(ids), masked, K))
+    # dot floors lower: greedy max-inner-product routing is hub-prone
+    # (the walk parks on high-norm rows), a known MIPS-graph gap — see
+    # docs/graph_index.md
+    floor = 0.45 if metric == "dot" else 0.7
+    assert np.mean(recs) >= floor, recs
+
+
+@pytest.mark.parametrize("n_clauses", [1, 2, 4])
+def test_graph_plan_recall_floor_clause_buckets(fitted, n_clauses):
+    """End-to-end forced-graph plans on the fitted fixture: weighted
+    multi-column DNF recall per clause bucket stays above the floor."""
+    bq, _ = fitted
+    table = bq.table
+    wl = gen_dnf_workload(table, 8, n_vec_used=2, seed=100 + n_clauses,
+                          clause_counts=(n_clauses,))
+    recs = []
+    for q in wl:
+        subs = tuple(SubqueryParams(k_mult=8, iterative=False)
+                     for _ in range(q.n_vec))
+        plan = bq.executor.legalize(
+            ExecutionPlan("graph", subs, beam_width=16, n_hops=8))
+        assert plan.strategy == "graph"
+        ids, _ = bq.executor.execute(q, plan)
+        _, _, masked = brute_force_topk(
+            table, q.query_vectors, q.weights, q.predicates, q.k)
+        recs.append(tie_aware_recall(np.asarray(ids), masked, q.k))
+    assert np.mean(recs) >= 0.65, recs
+
+
+# ---------------------------------------------------------------------------
+# budget-matched hard-stratum acceptance
+# ---------------------------------------------------------------------------
+
+def test_hard_stratum_graph_beats_ivf_at_equal_budget(sift_fixture):
+    metric, table, g, iv = sift_fixture
+    cases = _hard_stratum_cases(table, 16, seed=5)
+    n = np.asarray(table.vectors[0]).shape[0]
+    g_rec, g_vis = [], []
+    for c, q in cases:
+        pred = Predicates.from_conditions(3, {0: (float(c), float(c))})
+        ids, _, nvis, _ = graph.search(
+            g, table.vectors[0], table.scalars, pred, jnp.asarray(q),
+            beam_width=16, n_hops=8, k=K)
+        g_rec.append(tie_aware_recall(
+            np.asarray(ids), _masked_cluster_scores(table, q, c, metric), K))
+        g_vis.append(int(nvis))
+    budget = int(np.mean(g_vis))
+    # IVF at the same scan budget, nprobe rounded UP so IVF is never
+    # budget-starved relative to the graph
+    npb = max(2, -(-budget // (n // 16)))
+    i_rec = []
+    for c, q in cases:
+        pred = Predicates.from_conditions(3, {0: (float(c), float(c))})
+        ids, _, _, _ = ivf.search(iv, table.vectors[0], table.scalars, pred,
+                                  jnp.asarray(q), nprobe=npb,
+                                  max_scan=budget, k=K)
+        i_rec.append(tie_aware_recall(
+            np.asarray(ids), _masked_cluster_scores(table, q, c, metric), K))
+    g_mean, i_mean = float(np.mean(g_rec)), float(np.mean(i_rec))
+    assert g_mean >= i_mean + 0.1, (g_mean, i_mean, budget)
+    assert g_mean >= 0.15, (g_mean, budget)

@@ -146,6 +146,47 @@ def test_per_tenant_lru_bound():
     assert len(cache) == 1
 
 
+def test_miss_storm_replaces_instead_of_appending():
+    # regression: N concurrent misses for one identical query used to append
+    # N duplicate entries under one key, churning the LRU and evicting an
+    # UNRELATED warm entry. A storm must leave ONE entry for that key and
+    # the warm entry untouched.
+    cache = SemanticCache(capacity_per_tenant=3)
+    token = (0, 100)
+    warm = _mhq([7.0, 7.0])
+    cache.insert(warm, token, np.arange(5), np.zeros(5))
+    storm = _mhq([0.0, 1.0])
+    for i in range(10):  # 10 duplicate miss results racing in
+        cache.insert(storm, token, np.arange(5) + i, np.zeros(5))
+    assert len(cache) == 2  # warm + ONE storm entry
+    assert cache.stats()["evictions"] == 0
+    assert cache.lookup(warm, token) is not None  # warm entry survived
+    hit = cache.lookup(storm, token)
+    assert hit is not None
+    np.testing.assert_array_equal(hit[0], np.arange(5) + 9)  # freshest result
+    # near-duplicates within eps coalesce too; outside eps they coexist
+    fuzzy = SemanticCache(eps=1e-2, capacity_per_tenant=8)
+    fuzzy.insert(_mhq([0.0, 1.0]), token, np.arange(5), np.zeros(5))
+    fuzzy.insert(_mhq([0.0, 1.0 + 1e-4]), token, np.arange(5), np.zeros(5))
+    assert len(fuzzy) == 1
+    fuzzy.insert(_mhq([0.0, 2.0]), token, np.arange(5), np.zeros(5))
+    assert len(fuzzy) == 2
+
+
+def test_invalidate_tenant_drops_hit_counter():
+    # regression: invalidate_tenant left the tenant's hit counter behind,
+    # so per-tenant accounting reported hits for a tenant with no entries.
+    cache = SemanticCache()
+    token = (0, 100)
+    cache.insert(_mhq([0.0, 1.0], tenant=0), token, np.arange(5), np.zeros(5))
+    cache.insert(_mhq([0.0, 1.0], tenant=1), token, np.arange(5), np.zeros(5))
+    assert cache.lookup(_mhq([0.0, 1.0], tenant=0), token) is not None
+    assert cache.lookup(_mhq([0.0, 1.0], tenant=1), token) is not None
+    assert cache.stats()["tenant_hits"] == {0: 1, 1: 1}
+    cache.invalidate_tenant(0)
+    assert cache.stats()["tenant_hits"] == {1: 1}
+
+
 def test_tenant_isolation_unit():
     cache = SemanticCache()
     token = (0, 100)

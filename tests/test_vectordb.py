@@ -89,6 +89,52 @@ def test_dnf_selectivity_union_identities():
     assert abs(est_n - 0.8) < 0.02
 
 
+def test_dnf_selectivity_ignores_inactive_bound_garbage():
+    """Regression: the inclusion–exclusion intersection took max(lo)/min(hi)
+    over ALL columns, so garbage bounds on INACTIVE columns (which eval_mask
+    never reads — no producer is required to zero them) emptied real clause
+    intersections and inflated the union estimate to ~1.0."""
+    from repro.vectordb.predicates import PredicateSet
+
+    rng = np.random.default_rng(11)
+    n, m = 20000, 2
+    scal = rng.uniform(0, 1, (n, m)).astype(np.float32)
+    h = histogram.build(jnp.asarray(scal), 64)
+    # clause 0 active on col0 only, clause 1 on col1 only; the inactive
+    # column of each clause carries a garbage range disjoint from the
+    # active one, which the broken intersection folded in
+    active = jnp.asarray([[True, False], [False, True]])
+    lo = jnp.asarray([[0.0, 0.9], [0.9, 0.0]], jnp.float32)
+    hi = jnp.asarray([[0.5, 1.0], [1.0, 0.5]], jnp.float32)
+    ps = PredicateSet(active=active, lo=lo, hi=hi,
+                      clause_valid=jnp.asarray([True, True]))
+    est = float(histogram.estimate_selectivity(h, ps))
+    emp = float(np.mean(np.asarray(eval_mask(ps, jnp.asarray(scal)))))
+    assert abs(emp - 0.75) < 0.02  # sanity: 0.5 + 0.5 - 0.25
+    assert abs(est - emp) < 0.05  # broken code estimated ~1.0 here
+
+
+def test_value_encode_bin_agrees_with_histogram_binning():
+    """Regression: ``value_encode`` binned with searchsorted's default
+    side="left" while histogram build/update/_prefix_at use side="right" —
+    a scalar exactly ON an interior bin edge one-hotted into a different
+    bin than the stats count it in. Pin bin agreement on boundary values."""
+    from repro.vectordb.predicates import value_encode
+
+    b = 16
+    edges = jnp.linspace(0.0, 1.0, b + 1)[None, :]  # (1, B+1)
+    h0 = histogram.Histograms(
+        edges=edges, prefix=jnp.zeros((1, b + 1)), n_rows=jnp.asarray(0.0))
+    interior = [float(edges[0, j]) for j in range(1, b)]
+    off_edge = [0.03, 0.51, 0.999]
+    for x in interior + off_edge:
+        enc = np.asarray(value_encode(jnp.asarray([x]), edges))
+        assert enc.shape == (1, b) and enc.sum() == 1.0
+        h = histogram.update(h0, jnp.asarray([[x]]))
+        counts = np.diff(np.asarray(h.prefix[0]))
+        assert int(enc[0].argmax()) == int(counts.argmax()), x
+
+
 def test_histogram_update_matches_rebuild():
     rng = np.random.default_rng(1)
     a = rng.uniform(0, 10, (2000, 2)).astype(np.float32)
